@@ -1,0 +1,22 @@
+"""Fig. 5 / Fig. 8 — execution time vs number of threads (connections).
+
+Paper: time drops sharply with threads then plateaus once the server's
+usable concurrency is exhausted.  The simulated DB has concurrency=8, so
+the knee should appear around 8 threads.
+"""
+from __future__ import annotations
+
+from benchmarks.common import CSV, run_variant
+
+
+def main(csv: CSV | None = None, quick: bool = False):
+    csv = csv or CSV()
+    n = 120 if quick else 300
+    for threads in (1, 2, 4, 8, 16, 32):
+        t, _, _ = run_variant("async", n, n_threads=threads)
+        csv.add(f"fig5.async.threads{threads}", f"{t*1e3:.1f}", "ms_total")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

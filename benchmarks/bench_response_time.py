@@ -1,0 +1,41 @@
+"""Fig. 11 — time to k-th response for the seven §6.3 program variants.
+
+The consumer loop records a timestamp each time an author record is
+'output'; the CSV reports t(k) at k ∈ {1, n/4, n/2, n}.  Expected shape
+(paper): original best at k=1 but steep; batch flat ≈ total time;
+async between; overlap variants strictly better early; grow ≈ original
+early and ≈ batch late.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import CSV, VARIANTS, run_variant
+
+
+def main(csv: CSV | None = None, quick: bool = False):
+    csv = csv or CSV()
+    n = 150 if quick else 400
+    ks = [1, n // 4, n // 2, n]
+    for variant in VARIANTS:
+        stamps: list[float] = []
+        t0 = time.perf_counter()
+
+        def record(_author, _s=stamps, _t0=t0):
+            _s.append(time.perf_counter())
+
+        # rebind t0 at call time
+        stamps.clear()
+        start = time.perf_counter()
+
+        def record2(_author):
+            stamps.append(time.perf_counter() - start)
+
+        run_variant(variant, n, n_threads=10, record=record2)
+        for k in ks:
+            csv.add(f"fig11.{variant}.k{k}", f"{stamps[k-1]*1e3:.1f}", "ms_to_kth")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

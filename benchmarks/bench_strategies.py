@@ -1,0 +1,31 @@
+"""Fig. 9 — total execution time vs number of iterations for
+original / batch / async / async_batch.
+
+Paper's observed ordering at large n (40k iters, cold cache): async ≈ 50%
+better than original, batch ≈ 75%, async-batch ≈ 70%.  The simulated-DB
+latency model reproduces the ordering and the approximate magnitudes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import CSV, run_variant
+
+
+def main(csv: CSV | None = None, quick: bool = False):
+    csv = csv or CSV()
+    iters = [50, 200, 600] if not quick else [50, 200]
+    base = {}
+    for n in iters:
+        t, _, _ = run_variant("original", n)
+        base[n] = t
+        csv.add(f"fig9.original.n{n}", f"{t*1e3:.1f}", "ms_total")
+    for variant in ("batch", "async", "async_batch"):
+        for n in iters:
+            t, _, _ = run_variant(variant, n, n_threads=10)
+            impr = 100 * (1 - t / base[n])
+            csv.add(f"fig9.{variant}.n{n}", f"{t*1e3:.1f}",
+                    f"ms_total;improvement={impr:.0f}%")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared benchmark plumbing: the seven program variants of §6.3, the
+simulated database, timing helpers and CSV output.
+
+Variant names follow the paper exactly:
+  original            — blocking loop (§6.3 (i))
+  batch               — [1]-style single set-oriented execution (ii)
+  async               — Rule A + pure asynchronous submission (iii)
+  async_batch         — Rule A + LowerThreshold asynchronous batching (iv)
+  async_overlap       — §5.1 producer thread + PureAsync (v)
+  async_batch_overlap — §5.1 + LowerThreshold (vi)
+  async_batch_grow    — §5.1 + growing-upper-threshold (vii)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core.hir import Assign, Interpreter, Loop, Program, Query, transform_program
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import SimulatedDBService
+from repro.core.strategies import (
+    GrowingUpperThreshold,
+    LowerThreshold,
+    PureAsync,
+    PureBatch,
+)
+
+VARIANTS = [
+    "original",
+    "batch",
+    "async",
+    "async_batch",
+    "async_overlap",
+    "async_batch_overlap",
+    "async_batch_grow",
+]
+
+
+def make_service(**kw) -> SimulatedDBService:
+    """Latency model scaled from the paper's LAN numbers (~1000× faster so
+    the full suite runs in minutes): RTT 2 ms, per-query processing 1 ms,
+    set-oriented per-item 0.05 ms, batch setup 0.5 ms, server concurrency 8.
+    """
+    defaults = dict(rtt=2e-3, single_proc=1e-3, batch_proc=5e-5,
+                    batch_fixed=5e-4, concurrency=8)
+    defaults.update(kw)
+    return SimulatedDBService(**defaults)
+
+
+def comment_author_program(record: Optional[Callable] = None,
+                           arrival_cost: float = 0.0) -> Program:
+    """The RUBiS Experiment-1 loop: for each comment load its author.
+
+    ``arrival_cost`` simulates per-iteration application work before the
+    query (the paper's §5.2.3 'request arrival rate'), which is what makes
+    the adaptive batch-size ramp of Fig. 10 visible."""
+    body = []
+    if arrival_cost > 0:
+        def _work(c, _t=arrival_cost):
+            time.sleep(_t)
+            return c
+
+        body.append(Assign(target="comment", fn=_work, args=("comment",)))
+    body += [
+        Query(target="author", query_name="users.lookup", params=("comment",)),
+        Assign(target="seen", fn=lambda s, a: s + 1, args=("seen", "author")),
+    ]
+    if record is not None:
+        body.append(Assign(target=None, fn=record, args=("author",)))
+    return Program(inputs=("comments", "seen"),
+                   body=[Loop(item_var="comment", iter_var="comments", body=body)])
+
+
+def strategy_for(variant: str, n_threads: int):
+    return {
+        "async": PureAsync(),
+        "async_batch": LowerThreshold(bt=3),
+        "async_overlap": PureAsync(),
+        "async_batch_overlap": LowerThreshold(bt=3),
+        "async_batch_grow": GrowingUpperThreshold(initial_upper=max(4, n_threads), bt=3),
+        "batch": PureBatch(),
+    }[variant]
+
+
+def run_variant(variant: str, n_iters: int, n_threads: int = 10,
+                record: Optional[Callable] = None, service=None,
+                arrival_cost: float = 0.0):
+    """Execute one §6.3 variant; returns (elapsed_s, runtime_stats|None, svc)."""
+    svc = service or make_service()
+    prog = comment_author_program(record, arrival_cost=arrival_cost)
+    inputs = {"comments": list(range(n_iters)), "seen": 0}
+
+    if variant == "original":
+        t0 = time.perf_counter()
+        out = Interpreter(svc).run(prog, inputs)
+        dt = time.perf_counter() - t0
+        assert out["seen"] == n_iters
+        return dt, None, svc
+
+    overlap = variant.endswith("overlap") or variant == "async_batch_grow"
+    tprog = transform_program(prog, overlap=overlap)
+    rt = AsyncQueryRuntime(svc, n_threads=n_threads,
+                           strategy=strategy_for(variant, n_threads))
+    t0 = time.perf_counter()
+    out = Interpreter(rt).run(tprog, inputs)
+    if variant == "batch":
+        pass  # PureBatch needs producer_done, signalled by runtime.drain below
+    rt.drain()
+    dt = time.perf_counter() - t0
+    rt.shutdown()
+    assert out["seen"] == n_iters, (variant, out["seen"])
+    return dt, rt.stats, svc
+
+
+class CSV:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, value, derived: str = ""):
+        self.rows.append((name, value, derived))
+        print(f"{name},{value},{derived}", flush=True)
+
+    def header(self):
+        print("name,value,derived", flush=True)

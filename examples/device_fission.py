@@ -1,0 +1,58 @@
+"""Device-level Rule A: fission of a lax.scan with per-iteration queries.
+
+Shows the jaxpr/HLO structure before and after — the per-iteration gather
+inside the loop becomes ONE batched gather outside it — plus autodiff
+through the transformed loop.  Run:
+
+    PYTHONPATH=src python examples/device_fission.py
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fission import FissionReport, fission_scan
+from repro.core.query import async_query, table_gather_spec
+
+
+def main():
+    table = jax.random.normal(jax.random.PRNGKey(0), (5000, 64))
+    ids = (jnp.arange(256) * 37) % 5000
+
+    # The model code: a loop that 'queries' an embedding table per step.
+    def body(carry, i):
+        row = async_query(table_gather_spec, table, i)   # blocking query
+        return carry + row.sum(), row.mean()
+
+    ref = jax.lax.scan(body, jnp.float32(0), ids)
+    rep = FissionReport()
+    out = fission_scan(body, jnp.float32(0), ids, report=rep)
+    np.testing.assert_allclose(ref[0], out[0], rtol=1e-5)
+    print(f"equivalence: OK   ({rep.n_queries_batched} query batched)")
+
+    def structure(scan):
+        f = jax.jit(lambda t, ii: scan(
+            lambda c, i: (c + async_query(table_gather_spec, t, i).sum(), None),
+            jnp.float32(0), ii)[0])
+        hlo = f.lower(table, ids).compile().as_text()
+        return {
+            "gather": len(re.findall(r"[^-]gather\(", hlo)),
+            "dynamic-slice": len(re.findall(r"dynamic-slice\(", hlo)),
+            "while": len(re.findall(r"while\(", hlo)),
+        }
+
+    print("baseline HLO ops :", structure(jax.lax.scan))
+    print("fissioned HLO ops:", structure(fission_scan),
+          "   <- ONE hoisted batched gather")
+
+    # autodiff flows through the fissioned loop
+    g = jax.grad(lambda t: fission_scan(
+        lambda c, i: (c + (async_query(table_gather_spec, t, i) ** 2).sum(), None),
+        jnp.float32(0), ids)[0])(table)
+    print("grad wrt table   :", g.shape, "nonzero rows:",
+          int((jnp.abs(g).sum(-1) > 0).sum()))
+
+
+if __name__ == "__main__":
+    main()

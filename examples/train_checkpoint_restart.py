@@ -1,0 +1,60 @@
+"""Fault-tolerant training driver: async checkpointing (the paper's
+asynchronous submission applied to IO), a simulated preemption, and an
+exact restart.  Run:
+
+    PYTHONPATH=src python examples/train_checkpoint_restart.py
+"""
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import PrefetchLoader, SyntheticLMStream
+from repro.models.registry import get_arch
+from repro.train.optimizer import AdamWConfig, cosine_schedule
+from repro.train.step import TrainStepConfig, make_train_step
+
+
+def main():
+    arch = get_arch("olmo-1b")
+    arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    opt = AdamWConfig(lr=3e-3, schedule=cosine_schedule(3e-3, warmup=10, total=120))
+    init_state, step = make_train_step(arch, opt, TrainStepConfig(donate=False))
+
+    stream = SyntheticLMStream(arch.cfg.vocab_size, seq_len=32, batch=8)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    params = arch.init(jax.random.PRNGKey(0))
+    state = init_state(params)
+
+    with CheckpointManager(ckpt_dir, keep_last=2) as mgr:
+        print("phase 1: train 60 steps, async-checkpoint every 20")
+        loader = PrefetchLoader(stream, n_prefetch=4, max_steps=60)
+        losses = []
+        for i, batch in enumerate(loader):
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+            if (i + 1) % 20 == 0:
+                mgr.save(i + 1, params, state)   # returns immediately
+                print(f"  step {i+1:3d} loss {losses[-1]:.3f} (ckpt submitted)")
+        print(f"  loss: {losses[0]:.3f} → {losses[-1]:.3f}")
+        print("phase 2: PREEMPTED (simulated) — durable save")
+        mgr.on_preempt(60, params, state)
+
+    print("phase 3: restart from latest checkpoint")
+    with CheckpointManager(ckpt_dir) as mgr2:
+        restored = mgr2.restore_latest(params, state)
+        assert restored is not None
+        step_no, params2, state2 = restored
+        print(f"  resumed at step {step_no}")
+        # deterministic stream: continue from the same cursor
+        loader = PrefetchLoader(stream, n_prefetch=4, start_step=step_no, max_steps=20)
+        for batch in loader:
+            params2, state2, m = step(params2, state2, batch)
+        print(f"  step {step_no+20} loss {float(m['loss']):.3f}")
+    print("done — training survived a preemption with no data reuse/skip")
+
+
+if __name__ == "__main__":
+    main()

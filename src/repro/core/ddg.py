@@ -1,0 +1,187 @@
+"""Data-dependence analysis over jaxprs (§3.1 of the paper, on device code).
+
+A jaxpr is SSA and pure, so *within one loop iteration* only flow
+dependencies exist (anti/output dependencies are artifacts of mutable
+storage, which jaxprs do not have — the paper's Table-t renaming is, in
+compiler terms, exactly the conversion to SSA that JAX already performs).
+The loop-carried structure survives, though: a ``lax.scan`` body maps carry
+*outputs* of iteration *t* to carry *inputs* of iteration *t+1*.  Those are
+the ``LFD`` edges of the paper, and they are what Rule A's precondition (a)
+is about.
+
+:class:`ScanBodyDDG` gives the fission pass (and tests/benchmarks) the
+queries it needs:
+
+* ``downstream(eqn_idx)`` — all equations transitively flow-dependent on an
+  equation (the paper's ``ss2`` side of the split);
+* carry classification — which carry positions are produced on the
+  producer vs consumer side of a split, iterated to a fixed point through
+  pass-through outputs;
+* precondition check — does a loop-carried flow dependence cross the split
+  (consumer-produced carry read by the producer side)?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Sequence
+
+from jax.extend import core as jex_core
+
+__all__ = ["ScanBodyDDG", "FissionPreconditionError"]
+
+
+class FissionPreconditionError(ValueError):
+    """Rule A precondition violated on the device loop (see message)."""
+
+
+def _is_literal(v) -> bool:
+    return isinstance(v, jex_core.Literal) or type(v).__name__ == "Literal"
+
+
+@dataclasses.dataclass
+class ScanBodyDDG:
+    """DDG of a scan body jaxpr.
+
+    ``jaxpr`` has invars ``[*carry_in, *x]`` and outvars ``[*carry_out, *y]``
+    with ``len(carry_in) == n_carry``.
+    """
+
+    jaxpr: Any  # jex_core.Jaxpr
+    n_carry: int
+
+    def __post_init__(self):
+        self.eqns = list(self.jaxpr.eqns)
+        self.carry_in = list(self.jaxpr.invars[: self.n_carry])
+        self.x_in = list(self.jaxpr.invars[self.n_carry :])
+        self.carry_out = list(self.jaxpr.outvars[: self.n_carry])
+        self.y_out = list(self.jaxpr.outvars[self.n_carry :])
+        self.consts = list(self.jaxpr.constvars)
+
+        # var -> producing eqn index (SSA def site); inputs/consts absent.
+        self.def_site: dict[Any, int] = {}
+        for i, eqn in enumerate(self.eqns):
+            for ov in eqn.outvars:
+                self.def_site[ov] = i
+
+        # eqn -> eqn flow edges (def → use).
+        self.succ: dict[int, set[int]] = {i: set() for i in range(len(self.eqns))}
+        for i, eqn in enumerate(self.eqns):
+            for iv in eqn.invars:
+                if _is_literal(iv):
+                    continue
+                d = self.def_site.get(iv)
+                if d is not None and d != i:
+                    self.succ[d].add(i)
+
+    # ------------------------------------------------------------------ sets
+    def upstream_of_vars(self, vars: Iterable[Any]) -> set[int]:
+        """Equations transitively needed to compute ``vars`` (def-site
+        closure) — the statements that must stay on the producer side of a
+        split because the query's inputs flow through them."""
+        seen: set[int] = set()
+        stack = [self.def_site[v] for v in vars if v in self.def_site]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for iv in self.eqns[cur].invars:
+                if _is_literal(iv):
+                    continue
+                d = self.def_site.get(iv)
+                if d is not None:
+                    stack.append(d)
+        return seen
+
+    def downstream(self, idx: int) -> set[int]:
+        """Equations transitively flow-dependent on equation ``idx``
+        (including ``idx`` itself) — the consumer side of a split at idx."""
+        seen = {idx}
+        stack = [idx]
+        while stack:
+            cur = stack.pop()
+            for nxt in self.succ[cur]:
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return seen
+
+    def eqn_reads(self, idx: int) -> set[Any]:
+        return {v for v in self.eqns[idx].invars if not _is_literal(v)}
+
+    def side_reads(self, eqn_idxs: Iterable[int]) -> set[Any]:
+        out: set[Any] = set()
+        for i in eqn_idxs:
+            out |= self.eqn_reads(i)
+        return out
+
+    # ----------------------------------------------------- carry classification
+    def classify_carry(self, consumer_eqns: set[int]) -> tuple[set[int], set[int]]:
+        """Split carry positions into (producer_positions, consumer_positions).
+
+        A position is *consumer* if its carry-out value is produced by a
+        consumer equation, or (fixed point) if its carry-out is a
+        pass-through of the carry-in of a consumer position (the recurrence
+        then lives wholly on the consumer side).
+        """
+        n = self.n_carry
+        consumer_pos: set[int] = set()
+        for j in range(n):
+            ov = self.carry_out[j]
+            if _is_literal(ov):
+                continue
+            d = self.def_site.get(ov)
+            if d is not None and d in consumer_eqns:
+                consumer_pos.add(j)
+        changed = True
+        while changed:
+            changed = False
+            consumer_carry_in = {self.carry_in[j] for j in consumer_pos}
+            for j in range(n):
+                if j in consumer_pos:
+                    continue
+                ov = self.carry_out[j]
+                if not _is_literal(ov) and ov in consumer_carry_in:
+                    consumer_pos.add(j)
+                    changed = True
+        producer_pos = set(range(n)) - consumer_pos
+        return producer_pos, consumer_pos
+
+    # ----------------------------------------------------------- precondition
+    def check_split(
+        self, query_idx: int, consumer_eqns: set[int], consumer_pos: set[int]
+    ) -> None:
+        """Rule A precondition (a) on the device loop: no loop-carried flow
+        dependence may cross the split.  Concretely: a carry position whose
+        *output* is computed by the consumer side must not have its *input*
+        read by the producer side (including the query's own arguments) —
+        that would make iteration t+1's submission depend on iteration t's
+        consumption.
+
+        Precondition (b) (external anti/output deps) is discharged
+        structurally: jaxprs are pure, so the only external state is the
+        ordered effect system; we reject bodies with effectful equations on
+        the producer/consumer boundary elsewhere (see fission._check_effects).
+        """
+        producer_eqns = set(range(len(self.eqns))) - consumer_eqns
+        producer_reads = self.side_reads(producer_eqns | {query_idx})
+        for j in sorted(consumer_pos):
+            civ = self.carry_in[j]
+            if civ in producer_reads:
+                raise FissionPreconditionError(
+                    f"loop-carried flow dependence crosses the split: carry "
+                    f"position {j} is produced by the consumer side but its "
+                    f"previous-iteration value is read by the producer side "
+                    f"(query inputs depend on query results across "
+                    f"iterations). Rule A is inapplicable — the query lies "
+                    f"on a true-dependence cycle (paper §4.1)."
+                )
+        # A query argument produced by the consumer side is the
+        # intra-iteration version of the same cycle.
+        for v in self.eqn_reads(query_idx):
+            d = self.def_site.get(v)
+            if d is not None and d in consumer_eqns and d != query_idx:
+                raise FissionPreconditionError(
+                    "query argument depends on the query's own result within "
+                    "an iteration — true-dependence cycle, Rule A inapplicable."
+                )

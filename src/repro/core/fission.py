@@ -1,0 +1,420 @@
+"""Device-level Rule A: fission of ``lax.scan`` loops at ``async_query`` calls.
+
+``fission_scan(f, init, xs)`` is a drop-in replacement for
+``jax.lax.scan(f, init, xs)``.  If the body contains :func:`async_query`
+equations, the loop is split — exactly the paper's Rule A, transposed to the
+SSA world of jaxprs:
+
+    original:   scan over N iterations, each issuing one small query
+    rewritten:  producer scan  (ss1: everything the query's inputs need;
+                                stacks query arguments + split variables
+                                into the *loop context table* = scan ys)
+                one batched query execution (``spec.execute_batch`` — the
+                                set-oriented form: ONE gather / ONE collective
+                                / ONE device dispatch instead of N)
+                consumer scan  (ss2: everything dependent on query results)
+
+Correspondences with the paper, and what SSA buys us:
+
+* **Split variables / loop context table** (Rule A items 1–3): any value the
+  producer computes that the consumer needs is emitted as a stacked scan
+  output.  The capture/restore pair is just def/use of an SSA value — no
+  conditional-null handling needed.
+* **Anti/output dependencies**: cannot occur inside a jaxpr (pure SSA), so
+  the paper's relaxation of [1]'s preconditions (allowing LC anti/output
+  deps to cross) is automatic here.
+* **Statement reordering** ([4]): jaxpr equations are scheduled by data
+  dependence only, so the partition {not-downstream-of-query} /
+  {downstream} *is* the reordered program; Example 4/5's reordering needs no
+  separate pass.
+* **Precondition (a)**: a carry position produced on the consumer side and
+  read on the producer side is a loop-carried flow dependence across the
+  split → :class:`FissionPreconditionError` (the query result feeds later
+  submissions; asynchrony is impossible, as in the paper).
+* **Precondition (b)** (external deps): jaxprs are pure; equations carrying
+  JAX *effects* (io_callback etc.) are rejected conservatively.
+* **Rule B**: on SPMD hardware, predication is native.  Conditional queries
+  are expressed with masks (``jnp.where`` on arguments, select on results);
+  ``lax.cond`` around a query does not appear inside vectorized loop bodies.
+* **Nested loops** (§3.4): an inner fissioned scan is a plain sequence of
+  equations in the outer body; applying :func:`fission_scan` bottom-up gives
+  the nested-table construction.
+* **Multiple queries** (§3.2 "any number ... by repeatedly applying"): the
+  consumer side is itself fissioned recursively.
+
+Why this is the TPU-native adaptation (not a port): the paper's cost model —
+per-request round trips and random IO amortized by set-oriented execution —
+maps to per-iteration DMA descriptors and scalar-driven gathers amortized by
+one large gather/collective.  XLA will *not* do this rewrite itself: it never
+splits a ``scan`` carrying a gather into a hoisted batched gather plus a
+consumer scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax, tree_util
+from jax.extend import core as jex_core
+
+from repro.core.ddg import FissionPreconditionError, ScanBodyDDG
+from repro.core.query import async_query_p, get_query_spec
+
+__all__ = [
+    "fission_scan",
+    "scan_with_queries",
+    "FissionPreconditionError",
+    "FissionReport",
+    "count_queries",
+]
+
+
+@dataclasses.dataclass
+class FissionReport:
+    """What happened — for the applicability table and tests."""
+
+    n_queries_found: int = 0
+    n_queries_batched: int = 0
+    batched_specs: list = dataclasses.field(default_factory=list)
+    failures: list = dataclasses.field(default_factory=list)
+
+
+def _is_literal(v) -> bool:
+    return isinstance(v, jex_core.Literal)
+
+
+def _first_slice(x):
+    if hasattr(x, "shape"):
+        return jax.ShapeDtypeStruct(x.shape[1:], x.dtype) if isinstance(
+            x, jax.ShapeDtypeStruct
+        ) else x[0]
+    return x
+
+
+def count_queries(f: Callable, init, xs) -> int:
+    x0 = tree_util.tree_map(_first_slice, xs)
+    closed = jax.make_jaxpr(f)(init, x0)
+    return sum(1 for e in closed.jaxpr.eqns if e.primitive is async_query_p)
+
+
+def fission_scan(
+    f: Callable,
+    init,
+    xs,
+    length: Optional[int] = None,
+    *,
+    report: Optional[FissionReport] = None,
+    _depth: int = 0,
+):
+    """``lax.scan`` with Rule A applied at every ``async_query`` call.
+
+    Falls back to plain ``lax.scan`` when the body has no queries.  Raises
+    :class:`FissionPreconditionError` when a query lies on a true-dependence
+    cycle (its submission needs a previous iteration's result).
+    """
+    if _depth > 8:
+        raise RecursionError("fission_scan: too many chained queries")
+
+    # ---- trace the body ------------------------------------------------
+    x0 = tree_util.tree_map(_first_slice, xs)
+    closed = jax.make_jaxpr(f)(init, x0)
+    jaxpr, consts = closed.jaxpr, closed.consts
+    out_shapes = jax.eval_shape(f, init, x0)
+    (carry_shapes, y_shapes) = out_shapes
+    _, out_tree = tree_util.tree_flatten(out_shapes)
+
+    flat_init, carry_tree = tree_util.tree_flatten(init)
+    flat_xs, xs_tree = tree_util.tree_flatten(xs)
+    n_carry = len(flat_init)
+    n_x = len(flat_xs)
+
+    q_idxs = [i for i, e in enumerate(jaxpr.eqns) if e.primitive is async_query_p]
+    if not q_idxs:
+        return lax.scan(f, init, xs, length=length)
+    if report is not None and _depth == 0:
+        report.n_queries_found = _count_queries_jaxpr(jaxpr)
+
+    # Effects are external state — precondition (b), conservative.
+    for e in jaxpr.eqns:
+        if e.effects:
+            raise FissionPreconditionError(
+                f"effectful equation {e.primitive.name} in loop body: external "
+                f"anti/output dependence may cross the split (Rule A "
+                f"precondition (b)); fission refused."
+            )
+
+    ddg = ScanBodyDDG(jaxpr, n_carry)
+    qi = q_idxs[0]
+    # Split at the FIRST query.  Everything downstream of it is ``ss2``; any
+    # *later* query (even if independent) also moves to the consumer side so
+    # the repeated application of Rule A (§3.2) batches it in turn.
+    consumer_eqns: set[int] = set()
+    for j in q_idxs:
+        consumer_eqns |= ddg.downstream(j)
+
+    # Statement reordering, SSA style ([4]'s reordering algorithm): an
+    # equation that reads the previous-iteration value of a *consumer*-side
+    # carry (e.g. an accumulator update chain) must itself move to the
+    # consumer side — unless the query's own inputs flow through it, in
+    # which case the query sits on a true-dependence cycle and Rule A is
+    # inapplicable.  Iterate to a fixed point (the consumer set only grows).
+    must_stay_producer = ddg.upstream_of_vars(ddg.eqn_reads(qi)) | {qi}
+    while True:
+        producer_pos, consumer_pos = ddg.classify_carry(consumer_eqns)
+        consumer_carry_in_vars = {ddg.carry_in[j] for j in consumer_pos}
+        moved = False
+        for i in range(len(jaxpr.eqns)):
+            if i in consumer_eqns:
+                continue
+            if ddg.eqn_reads(i) & consumer_carry_in_vars:
+                if i in must_stay_producer:
+                    raise FissionPreconditionError(
+                        "query inputs depend (across iterations) on values "
+                        "produced by the query's own consumers — true-"
+                        "dependence cycle; Rule A inapplicable (paper §4.1)."
+                    )
+                consumer_eqns |= ddg.downstream(i)
+                moved = True
+        if not moved:
+            break
+    producer_eqns = [i for i in range(len(jaxpr.eqns)) if i not in consumer_eqns]
+    ddg.check_split(qi, consumer_eqns, consumer_pos)
+
+    q_eqn = jaxpr.eqns[qi]
+    spec = get_query_spec(q_eqn.params["name"])
+
+    # ---- variable classification ---------------------------------------
+    const_env = dict(zip(jaxpr.constvars, consts))
+    carry_in_vars = list(jaxpr.invars[:n_carry])
+    x_vars = list(jaxpr.invars[n_carry:])
+    carry_out_vars = list(jaxpr.outvars[:n_carry])
+    y_out_vars = list(jaxpr.outvars[n_carry:])
+    x_var_pos = {v: i for i, v in enumerate(x_vars)}
+    carry_in_pos = {v: j for j, v in enumerate(carry_in_vars)}
+
+    consumer_eqn_list = [i for i in sorted(consumer_eqns) if i != qi]
+    consumer_reads = ddg.side_reads(consumer_eqn_list)
+    q_outvars = [v for v in q_eqn.outvars]
+    consumer_carry_in = {carry_in_vars[j] for j in consumer_pos}
+
+    def _side_of_var(v) -> str:
+        """Where is var v available? 'const' | 'x' | 'pcarry' | 'ccarry' |
+        'prod' | 'cons' | 'query'."""
+        if v in const_env:
+            return "const"
+        if v in x_var_pos:
+            return "x"
+        if v in carry_in_pos:
+            return "ccarry" if carry_in_pos[v] in consumer_pos else "pcarry"
+        d = ddg.def_site.get(v)
+        if d == qi:
+            return "query"
+        if d in consumer_eqns:
+            return "cons"
+        return "prod"
+
+    # Context table: values the consumer needs from the producer side.
+    ctx_vars: list = []
+    seen_ctx = set()
+
+    def _need_ctx(v):
+        if v in seen_ctx or _is_literal(v):
+            return
+        side = _side_of_var(v)
+        if side in ("prod", "pcarry"):
+            seen_ctx.add(v)
+            ctx_vars.append(v)
+
+    for v in sorted(consumer_reads, key=lambda v: str(v)):
+        _need_ctx(v)
+
+    # y outputs: which side emits each?
+    consumer_y_pos: list[int] = []
+    producer_y_pos: list[int] = []
+    for k, v in enumerate(y_out_vars):
+        side = "prod" if _is_literal(v) else _side_of_var(v)
+        if side in ("cons", "query", "ccarry"):
+            consumer_y_pos.append(k)
+        else:
+            producer_y_pos.append(k)
+
+    # x components the consumer reads directly (pass original xs through —
+    # no double stacking).
+    consumer_x_pos = sorted(
+        {x_var_pos[v] for v in consumer_reads if v in x_var_pos}
+        | {
+            x_var_pos[v]
+            for v in y_out_vars
+            if v in x_var_pos and y_out_vars.index(v) in consumer_y_pos
+        }
+    )
+
+    # Query arguments: stacked (varying) vs invariant.
+    q_arg_plan: list[tuple[str, Any]] = []  # (kind, payload)
+    for v in q_eqn.invars:
+        if _is_literal(v):
+            q_arg_plan.append(("lit", v.val))
+            continue
+        side = _side_of_var(v)
+        if side == "const":
+            q_arg_plan.append(("const", const_env[v]))
+        elif side == "x":
+            q_arg_plan.append(("xs", x_var_pos[v]))
+        elif side in ("prod", "pcarry"):
+            if v not in seen_ctx:
+                seen_ctx.add(v)
+                ctx_vars.append(v)
+            q_arg_plan.append(("ctx", v))
+        else:  # 'cons'/'query'/'ccarry' → cycle; check_split already raised
+            raise FissionPreconditionError(
+                "query argument produced on the consumer side"
+            )
+
+    ctx_index = {v: i for i, v in enumerate(ctx_vars)}
+
+    # ---- evaluation helper ----------------------------------------------
+    def _eval_eqns(eqn_idxs: Sequence[int], env: dict) -> None:
+        def read(v):
+            if _is_literal(v):
+                return v.val
+            return env[v]
+
+        for i in eqn_idxs:
+            eqn = jaxpr.eqns[i]
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            ans = eqn.primitive.bind(
+                *subfuns, *(read(v) for v in eqn.invars), **bind_params
+            )
+            outs = ans if eqn.primitive.multiple_results else [ans]
+            for ov, val in zip(eqn.outvars, outs):
+                env[ov] = val
+
+    def _read_out(env, v):
+        if _is_literal(v):
+            return v.val
+        return env[v]
+
+    producer_pos_list = sorted(producer_pos)
+    consumer_pos_list = sorted(consumer_pos)
+
+    # ---- producer scan ----------------------------------------------------
+    def producer_body(carry_p, x_flat):
+        env = dict(const_env)
+        for idx, j in enumerate(producer_pos_list):
+            env[carry_in_vars[j]] = carry_p[idx]
+        for i, v in enumerate(x_vars):
+            env[v] = x_flat[i]
+        _eval_eqns(producer_eqns, env)
+        new_carry = tuple(_read_out(env, carry_out_vars[j]) for j in producer_pos_list)
+        ctx = tuple(env[v] for v in ctx_vars)
+        ys_p = tuple(_read_out(env, y_out_vars[k]) for k in producer_y_pos)
+        return new_carry, (ctx, ys_p)
+
+    carry_p_init = tuple(flat_init[j] for j in producer_pos_list)
+    xs_flat_tuple = tuple(flat_xs)
+    carry_p_final, (ctx_stacked, ys_p_stacked) = lax.scan(
+        producer_body, carry_p_init, xs_flat_tuple, length=length
+    )
+
+    # ---- ONE batched query execution (the set-oriented form) --------------
+    flat_args = []
+    batched_mask = []
+    for kind, payload in q_arg_plan:
+        if kind in ("lit", "const"):
+            flat_args.append(payload)
+            batched_mask.append(False)
+        elif kind == "xs":
+            flat_args.append(flat_xs[payload])
+            batched_mask.append(True)
+        else:  # ctx
+            flat_args.append(ctx_stacked[ctx_index[payload]])
+            batched_mask.append(True)
+    args = tree_util.tree_unflatten(q_eqn.params["in_tree"], flat_args)
+    mask_tree = tree_util.tree_unflatten(q_eqn.params["in_tree"], batched_mask)
+    if spec.execute_batch is not None:
+        out = spec.execute_batch(*args, batched=tree_util.tree_leaves(mask_tree))
+    else:
+        in_axes = tree_util.tree_map(lambda b: 0 if b else None, mask_tree)
+        out = jax.vmap(spec.execute, in_axes=tuple(in_axes))(*args)
+    q_res_flat, _ = tree_util.tree_flatten(out)
+    if report is not None:
+        report.n_queries_batched += 1
+        report.batched_specs.append(spec.name)
+
+    # ---- consumer scan -----------------------------------------------------
+    consumer_xs = (
+        tuple(q_res_flat),
+        tuple(ctx_stacked[ctx_index[v]] for v in ctx_vars),
+        tuple(flat_xs[i] for i in consumer_x_pos),
+    )
+    carry_c_init = tuple(flat_init[j] for j in consumer_pos_list)
+
+    def consumer_body(carry_c, per_iter):
+        qres, ctx_slice, x_slice = per_iter
+        env = dict(const_env)
+        for idx, j in enumerate(consumer_pos_list):
+            env[carry_in_vars[j]] = carry_c[idx]
+        for v, val in zip(ctx_vars, ctx_slice):
+            env[v] = val
+        for i, xi in zip(consumer_x_pos, x_slice):
+            env[x_vars[i]] = xi
+        for ov, val in zip(q_outvars, qres):
+            env[ov] = val
+        _eval_eqns(consumer_eqn_list, env)
+        new_carry = tuple(_read_out(env, carry_out_vars[j]) for j in consumer_pos_list)
+        ys_c = tuple(_read_out(env, y_out_vars[k]) for k in consumer_y_pos)
+        return new_carry, ys_c
+
+    # Recurse if more queries remain on the consumer side (§3.2: repeated
+    # application).
+    remaining = [i for i in consumer_eqn_list if jaxpr.eqns[i].primitive is async_query_p]
+    if remaining:
+        carry_c_final, ys_c_stacked = fission_scan(
+            consumer_body,
+            carry_c_init,
+            consumer_xs,
+            report=report,
+            _depth=_depth + 1,
+        )
+    else:
+        carry_c_final, ys_c_stacked = lax.scan(
+            consumer_body, carry_c_init, consumer_xs, length=length
+        )
+
+    # ---- reassemble ---------------------------------------------------------
+    flat_carry_final: list = [None] * n_carry
+    for idx, j in enumerate(producer_pos_list):
+        flat_carry_final[j] = carry_p_final[idx]
+    for idx, j in enumerate(consumer_pos_list):
+        flat_carry_final[j] = carry_c_final[idx]
+
+    flat_ys: list = [None] * len(y_out_vars)
+    for idx, k in enumerate(producer_y_pos):
+        flat_ys[k] = ys_p_stacked[idx]
+    for idx, k in enumerate(consumer_y_pos):
+        flat_ys[k] = ys_c_stacked[idx]
+
+    return tree_util.tree_unflatten(out_tree, flat_carry_final + flat_ys)
+
+
+def _count_queries_jaxpr(jaxpr) -> int:
+    n = 0
+    for e in jaxpr.eqns:
+        if e.primitive is async_query_p:
+            n += 1
+        for sub in jax.core.jaxprs_in_params(e.params) if hasattr(
+            jax.core, "jaxprs_in_params"
+        ) else []:
+            n += _count_queries_jaxpr(sub)
+    return n
+
+
+def scan_with_queries(f: Callable, init, xs, *, fission: bool = True, length=None):
+    """Config-switchable entry point: the *same* model code runs either the
+    paper-faithful per-iteration form (``fission=False`` — the baseline) or
+    the fissioned batched form (``fission=True``)."""
+    if fission:
+        return fission_scan(f, init, xs, length=length)
+    return lax.scan(f, init, xs, length=length)

@@ -1,0 +1,971 @@
+"""Host-level IR (HIR) — the paper's source-to-source transformer.
+
+The paper (Ramachandra et al., "Program Transformations for Asynchronous and
+Batched Query Submission") rewrites Java/JDBC programs.  Our host-level IR is
+the language-neutral core of that tool: a tiny imperative language of
+statements with explicit read/write sets, over which we implement
+
+  * the **data dependence graph** (§3.1): flow / anti / output dependencies
+    and their loop-carried variants, plus *external* dependencies through a
+    shared service (the "database"),
+  * **Rule B** (§3.3): control-dependence → flow-dependence conversion by
+    predication (guard variables),
+  * **statement reordering** ([4] §"Applicability"): dependence-preserving
+    topological reordering that moves the query and its dependents apart so
+    the Rule A precondition holds,
+  * **Rule A** (§3.2): loop fission at a query statement into a *producer*
+    loop (asynchronous ``submit``) and a *consumer* loop (blocking ``fetch``),
+    communicating through a **loop context table**,
+  * **nested-loop fission** (§3.4), and
+  * the **applicability analysis** of §6.2 (Table 1).
+
+Programs in this IR are *executable*: :class:`Interpreter` runs them against
+a :class:`~repro.core.services.QueryService`, so every transformation can be
+property-tested for semantic equivalence (transformed(program) ≡ program).
+
+The IR deliberately mirrors the paper's presentation:
+
+  ``v = executeQuery(q)``  →  :class:`Query` statement
+  ``ss1; s; ss2``          →  :class:`Loop` body (list of statements)
+  guard variables          →  ``Assign.guard`` (Rule B predication)
+
+Expressions are Python callables over an environment dict; read/write sets
+are declared explicitly (exactly the information SOOT/Jimple dataflow gives
+the paper's tool).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
+
+__all__ = [
+    "Stmt",
+    "Assign",
+    "Query",
+    "If",
+    "Loop",
+    "Program",
+    "DepKind",
+    "DepEdge",
+    "DataDependenceGraph",
+    "build_ddg",
+    "apply_rule_b",
+    "reorder_for_fission",
+    "FissionError",
+    "apply_rule_a",
+    "fission_loop",
+    "transform_program",
+    "analyze_applicability",
+    "Interpreter",
+]
+
+
+# ---------------------------------------------------------------------------
+# Statements
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Stmt:
+    """Base statement.  ``guard`` is the Rule B predication variable: when
+    set, the statement only executes if ``env[guard]`` is truthy (negated if
+    ``guard_negated``)."""
+
+    guard: Optional[str] = dataclasses.field(default=None, kw_only=True)
+    guard_negated: bool = dataclasses.field(default=False, kw_only=True)
+
+    # --- dataflow interface -------------------------------------------------
+    def reads(self) -> frozenset[str]:
+        raise NotImplementedError
+
+    def writes(self) -> frozenset[str]:
+        raise NotImplementedError
+
+    def external_reads(self) -> bool:
+        """True if the statement reads external state (the database)."""
+        return False
+
+    def external_writes(self) -> bool:
+        """True if the statement writes external state (the database)."""
+        return False
+
+    def _guard_reads(self) -> frozenset[str]:
+        return frozenset([self.guard]) if self.guard else frozenset()
+
+    def with_guard(self, guard: str, negated: bool = False) -> "Stmt":
+        new = dataclasses.replace(self)
+        if new.guard is not None:
+            raise ValueError(
+                "nested guards unsupported; apply Rule B innermost-first "
+                "(the paper groups guards back in a readability pass)"
+            )
+        new.guard = guard
+        new.guard_negated = negated
+        return new
+
+
+@dataclasses.dataclass
+class Assign(Stmt):
+    """``target = fn(*[env[v] for v in args])``.
+
+    ``effect`` marks external writes (e.g. ``log``/``print``/DB update —
+    §3.1 "External data dependencies"); such statements are modelled
+    conservatively as writing the external resource named by ``effect``.
+    """
+
+    target: Optional[str] = None
+    fn: Callable[..., Any] = None  # type: ignore[assignment]
+    args: tuple[str, ...] = ()
+    effect: Optional[str] = None
+
+    def reads(self) -> frozenset[str]:
+        return frozenset(self.args) | self._guard_reads()
+
+    def writes(self) -> frozenset[str]:
+        return frozenset([self.target]) if self.target else frozenset()
+
+    def external_writes(self) -> bool:
+        return self.effect is not None
+
+    def __repr__(self) -> str:  # readable transformed programs (§4.1 goal 1)
+        g = f"[{'!' if self.guard_negated else ''}{self.guard}] " if self.guard else ""
+        t = f"{self.target} = " if self.target else ""
+        return f"{g}{t}{getattr(self.fn, '__name__', 'fn')}({', '.join(self.args)})"
+
+
+@dataclasses.dataclass
+class Query(Stmt):
+    """``target = executeQuery(query_name, params...)`` — the blocking call.
+
+    ``updates_db`` marks data-modifying statements (INSERT/UPDATE): they are
+    external writes, any query is an external read (§3.1, §8 "update
+    transactions" — conservative model).
+    """
+
+    target: Optional[str] = None
+    query_name: str = ""
+    params: tuple[str, ...] = ()
+    updates_db: bool = False
+
+    def reads(self) -> frozenset[str]:
+        return frozenset(self.params) | self._guard_reads()
+
+    def writes(self) -> frozenset[str]:
+        return frozenset([self.target]) if self.target else frozenset()
+
+    def external_reads(self) -> bool:
+        return True
+
+    def external_writes(self) -> bool:
+        return self.updates_db
+
+    def __repr__(self) -> str:
+        g = f"[{'!' if self.guard_negated else ''}{self.guard}] " if self.guard else ""
+        return (
+            f"{g}{self.target} = executeQuery({self.query_name!r}, "
+            f"{', '.join(self.params)})"
+        )
+
+
+@dataclasses.dataclass
+class _Submit(Stmt):
+    """``handle = submitQuery(...)`` — produced by Rule A, non-blocking."""
+
+    target: Optional[str] = None
+    query_name: str = ""
+    params: tuple[str, ...] = ()
+
+    def reads(self) -> frozenset[str]:
+        return frozenset(self.params) | self._guard_reads()
+
+    def writes(self) -> frozenset[str]:
+        return frozenset([self.target]) if self.target else frozenset()
+
+    def external_reads(self) -> bool:
+        return True
+
+    def __repr__(self) -> str:
+        g = f"[{'!' if self.guard_negated else ''}{self.guard}] " if self.guard else ""
+        return (
+            f"{g}{self.target} = submitQuery({self.query_name!r}, "
+            f"{', '.join(self.params)})"
+        )
+
+
+@dataclasses.dataclass
+class _Fetch(Stmt):
+    """``v = fetchResult(handle)`` — produced by Rule A, blocking."""
+
+    target: Optional[str] = None
+    handle: str = ""
+
+    def reads(self) -> frozenset[str]:
+        return frozenset([self.handle]) | self._guard_reads()
+
+    def writes(self) -> frozenset[str]:
+        return frozenset([self.target]) if self.target else frozenset()
+
+    def __repr__(self) -> str:
+        g = f"[{'!' if self.guard_negated else ''}{self.guard}] " if self.guard else ""
+        return f"{g}{self.target} = fetchResult({self.handle})"
+
+
+@dataclasses.dataclass
+class If(Stmt):
+    """``if (pred_var) { then_body } else { else_body }`` (§3.3)."""
+
+    pred: str = ""
+    then_body: list[Stmt] = dataclasses.field(default_factory=list)
+    else_body: list[Stmt] = dataclasses.field(default_factory=list)
+
+    def reads(self) -> frozenset[str]:
+        r = frozenset([self.pred]) | self._guard_reads()
+        for s in itertools.chain(self.then_body, self.else_body):
+            r |= s.reads()
+        return r
+
+    def writes(self) -> frozenset[str]:
+        w: frozenset[str] = frozenset()
+        for s in itertools.chain(self.then_body, self.else_body):
+            w |= s.writes()
+        return w
+
+    def external_reads(self) -> bool:
+        return any(
+            s.external_reads() for s in itertools.chain(self.then_body, self.else_body)
+        )
+
+    def external_writes(self) -> bool:
+        return any(
+            s.external_writes()
+            for s in itertools.chain(self.then_body, self.else_body)
+        )
+
+    def __repr__(self) -> str:
+        return f"if ({self.pred}) {{ {len(self.then_body)} stmts }} else {{ {len(self.else_body)} stmts }}"
+
+
+@dataclasses.dataclass
+class Loop(Stmt):
+    """``for item_var in env[iter_var]: body`` — the paper's generic loop.
+
+    The paper presents Rule A for ``while`` loops; our executable form is the
+    for-each loop (the paper's own second loop in Rule A's RHS is exactly
+    this).  ``while`` loops whose predicate is updated by the body are
+    expressible by reordering (Example 4/5) and covered in tests via an
+    explicit counter idiom.
+    """
+
+    item_var: str = ""
+    iter_var: str = ""
+    body: list[Stmt] = dataclasses.field(default_factory=list)
+
+    def reads(self) -> frozenset[str]:
+        r = frozenset([self.iter_var]) | self._guard_reads()
+        for s in self.body:
+            r |= s.reads()
+        return r - frozenset([self.item_var])
+
+    def writes(self) -> frozenset[str]:
+        w: frozenset[str] = frozenset()
+        for s in self.body:
+            w |= s.writes()
+        return w
+
+    def external_reads(self) -> bool:
+        return any(s.external_reads() for s in self.body)
+
+    def external_writes(self) -> bool:
+        return any(s.external_writes() for s in self.body)
+
+    def __repr__(self) -> str:
+        return f"for {self.item_var} in {self.iter_var}: {{ {len(self.body)} stmts }}"
+
+
+@dataclasses.dataclass
+class _ProducerConsumer(Stmt):
+    """Result of Rule A: producer loop + consumer loop over a context table.
+
+    Executed by the interpreter either sequentially (basic Rule A) or with
+    the producer in its own thread over a blocking queue (§5.1 overlap,
+    ``overlap=True``).
+    """
+
+    producer: Loop = None  # type: ignore[assignment]
+    consumer_body: list[Stmt] = dataclasses.field(default_factory=list)
+    table_var: str = ""
+    record_var: str = ""
+    split_vars: tuple[str, ...] = ()
+    overlap: bool = False
+
+    def reads(self) -> frozenset[str]:
+        r = self.producer.reads()
+        for s in self.consumer_body:
+            r |= s.reads()
+        return r - frozenset(self.split_vars) - frozenset([self.table_var, self.record_var])
+
+    def writes(self) -> frozenset[str]:
+        w = self.producer.writes()
+        for s in self.consumer_body:
+            w |= s.writes()
+        return w
+
+    def external_reads(self) -> bool:
+        return True
+
+    def __repr__(self) -> str:
+        mode = "overlap" if self.overlap else "two-phase"
+        return (
+            f"fissioned[{mode}](producer={self.producer!r}, "
+            f"consumer={{ {len(self.consumer_body)} stmts }})"
+        )
+
+
+@dataclasses.dataclass
+class Program:
+    """A statement sequence + the set of input variables."""
+
+    body: list[Stmt]
+    inputs: tuple[str, ...] = ()
+
+    def __repr__(self) -> str:
+        return "\n".join(repr(s) for s in self.body)
+
+
+# ---------------------------------------------------------------------------
+# Data dependence graph (§3.1)
+# ---------------------------------------------------------------------------
+
+
+class DepKind(enum.Enum):
+    FLOW = "FD"
+    ANTI = "AD"
+    OUTPUT = "OD"
+    LOOP_FLOW = "LFD"
+    LOOP_ANTI = "LAD"
+    LOOP_OUTPUT = "LOD"
+    EXT_FLOW = "xFD"
+    EXT_ANTI = "xAD"
+    EXT_OUTPUT = "xOD"
+    EXT_LOOP_FLOW = "xLFD"
+    EXT_LOOP_ANTI = "xLAD"
+    EXT_LOOP_OUTPUT = "xLOD"
+
+    @property
+    def loop_carried(self) -> bool:
+        return self in (
+            DepKind.LOOP_FLOW,
+            DepKind.LOOP_ANTI,
+            DepKind.LOOP_OUTPUT,
+            DepKind.EXT_LOOP_FLOW,
+            DepKind.EXT_LOOP_ANTI,
+            DepKind.EXT_LOOP_OUTPUT,
+        )
+
+    @property
+    def external(self) -> bool:
+        return self.value.startswith("x")
+
+    @property
+    def flow(self) -> bool:
+        return self in (
+            DepKind.FLOW,
+            DepKind.LOOP_FLOW,
+            DepKind.EXT_FLOW,
+            DepKind.EXT_LOOP_FLOW,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DepEdge:
+    src: int  # statement index
+    dst: int
+    kind: DepKind
+    var: str  # variable (or external resource) carrying the dependence
+
+    def __repr__(self) -> str:
+        return f"s{self.src} --{self.kind.value}[{self.var}]--> s{self.dst}"
+
+
+@dataclasses.dataclass
+class DataDependenceGraph:
+    stmts: list[Stmt]
+    edges: list[DepEdge]
+
+    def edges_from(self, i: int) -> list[DepEdge]:
+        return [e for e in self.edges if e.src == i]
+
+    def edges_to(self, i: int) -> list[DepEdge]:
+        return [e for e in self.edges if e.dst == i]
+
+    def intra_edges(self) -> list[DepEdge]:
+        return [e for e in self.edges if not e.kind.loop_carried]
+
+    def loop_carried_edges(self) -> list[DepEdge]:
+        return [e for e in self.edges if e.kind.loop_carried]
+
+
+_EXT = "__db__"  # §3.1: model the whole database as one external variable
+
+
+def build_ddg(body: Sequence[Stmt], loop_body: bool = True) -> DataDependenceGraph:
+    """Build the DDG of a statement sequence (Fig. 1 of the paper).
+
+    With ``loop_body=True`` the sequence is treated as the body of a loop and
+    loop-carried edges are added: for every (write in s_a, read in s_b) pair
+    with a ≥ b order in the *next* iteration, an ``LFD`` edge, etc.  External
+    dependencies conservatively route through the single resource ``__db__``
+    (every query reads it, every update/effect writes it).
+    """
+    stmts = list(body)
+    edges: list[DepEdge] = []
+
+    def rw(s: Stmt) -> tuple[frozenset[str], frozenset[str]]:
+        r, w = s.reads(), s.writes()
+        if s.external_reads():
+            r = r | {_EXT}
+        if s.external_writes():
+            w = w | {_EXT}
+        return r, w
+
+    rws = [rw(s) for s in stmts]
+
+    # Intra-iteration edges (forward control flow only).
+    for a in range(len(stmts)):
+        ra, wa = rws[a]
+        for b in range(a + 1, len(stmts)):
+            rb, wb = rws[b]
+            for v in wa & rb:  # a writes, b reads  → flow
+                kind = DepKind.EXT_FLOW if v == _EXT else DepKind.FLOW
+                edges.append(DepEdge(a, b, kind, v))
+            for v in ra & wb:  # a reads, b writes  → anti
+                kind = DepKind.EXT_ANTI if v == _EXT else DepKind.ANTI
+                edges.append(DepEdge(a, b, kind, v))
+            for v in wa & wb:  # both write         → output
+                kind = DepKind.EXT_OUTPUT if v == _EXT else DepKind.OUTPUT
+                edges.append(DepEdge(a, b, kind, v))
+
+    if loop_body:
+        # Loop-carried edges: s_a in iteration t, s_b in iteration t+1, for
+        # *all* (a, b) pairs including a >= b (that is what makes them
+        # loop-carried).
+        for a in range(len(stmts)):
+            ra, wa = rws[a]
+            for b in range(len(stmts)):
+                rb, wb = rws[b]
+                for v in wa & rb:
+                    kind = DepKind.EXT_LOOP_FLOW if v == _EXT else DepKind.LOOP_FLOW
+                    edges.append(DepEdge(a, b, kind, v))
+                for v in ra & wb:
+                    kind = DepKind.EXT_LOOP_ANTI if v == _EXT else DepKind.LOOP_ANTI
+                    edges.append(DepEdge(a, b, kind, v))
+                for v in wa & wb:
+                    kind = (
+                        DepKind.EXT_LOOP_OUTPUT if v == _EXT else DepKind.LOOP_OUTPUT
+                    )
+                    edges.append(DepEdge(a, b, kind, v))
+
+    return DataDependenceGraph(stmts, edges)
+
+
+# ---------------------------------------------------------------------------
+# Rule B (§3.3): control → flow dependencies
+# ---------------------------------------------------------------------------
+
+
+def apply_rule_b(body: Sequence[Stmt]) -> list[Stmt]:
+    """Flatten ``If`` statements into guarded statements (paper Rule B).
+
+    ``if (p) {ss1} else {ss2}`` becomes ``cv = p; [cv] ss1; [!cv] ss2``.
+    The predicate is already a variable in our IR, so no fresh assignment is
+    needed unless the branch bodies might overwrite it — we always introduce
+    the fresh ``cv`` for fidelity with the rule (and safety).
+    """
+    out: list[Stmt] = []
+    fresh = _FreshNames(body)
+    for s in body:
+        if isinstance(s, If):
+            inner_then = apply_rule_b(s.then_body)
+            inner_else = apply_rule_b(s.else_body)
+            cv = fresh("cv")
+            # cv = p  (possibly itself guarded — nested Ifs come pre-flattened
+            # by the recursive call, so s.guard is from an outer construct)
+            cap = Assign(target=cv, fn=lambda p: bool(p), args=(s.pred,))
+            if s.guard is not None:
+                cap = cap.with_guard(s.guard, s.guard_negated)
+            out.append(cap)
+            for t in inner_then:
+                out.append(_conjoin_guard(t, cv, False, fresh, out))
+            for t in inner_else:
+                out.append(_conjoin_guard(t, cv, True, fresh, out))
+        else:
+            out.append(s)
+    return out
+
+
+def _conjoin_guard(
+    s: Stmt, cv: str, negated: bool, fresh: "_FreshNames", out: list[Stmt]
+) -> Stmt:
+    """Guard ``s`` with ``cv`` (negated as requested), conjoining any
+    existing guard through a fresh boolean (guards are single variables)."""
+    if s.guard is None:
+        return s.with_guard(cv, negated)
+    g_old, old_neg = s.guard, s.guard_negated
+    conj = fresh("cv")
+
+    def _and(a, b, _n1=old_neg, _n2=negated):
+        va = (not a) if _n1 else bool(a)
+        vb = (not b) if _n2 else bool(b)
+        return va and vb
+
+    _and.__name__ = "and"
+    out.append(Assign(target=conj, fn=_and, args=(g_old, cv)))
+    t = dataclasses.replace(s)
+    t.guard = conj
+    t.guard_negated = False
+    return t
+
+
+class _FreshNames:
+    def __init__(self, body: Sequence[Stmt]):
+        self._used = set()
+        for s in body:
+            self._used |= s.reads() | s.writes()
+        self._n = 0
+
+    def __call__(self, prefix: str) -> str:
+        while True:
+            name = f"{prefix}_{self._n}"
+            self._n += 1
+            if name not in self._used:
+                self._used.add(name)
+                return name
+
+
+# ---------------------------------------------------------------------------
+# Statement reordering ([4]) — enable Rule A when LC flow deps cross the split
+# ---------------------------------------------------------------------------
+
+
+class FissionError(ValueError):
+    """Raised when the Rule A preconditions cannot be satisfied."""
+
+
+def _find_query(body: Sequence[Stmt]) -> Optional[int]:
+    for i, s in enumerate(body):
+        if isinstance(s, Query):
+            return i
+    return None
+
+
+def reorder_for_fission(body: Sequence[Stmt], qi: int) -> tuple[list[Stmt], int]:
+    """Reorder loop-body statements so Rule A applies at the query ``qi``.
+
+    The paper's sufficient condition ([4]): the query must not lie on a
+    true-dependence (flow) cycle in the DDG.  We compute, over *flow* edges
+    only (intra + loop-carried), the set of statements transitively required
+    to produce the query's inputs (``pre``) and schedule them (in original
+    order) before the query; all other statements go after it.  The schedule
+    is then checked: it must respect every *intra-iteration* dependence
+    (flow, anti and output); if not, fission is impossible by reordering.
+
+    Returns the reordered body and the new query index.
+    """
+    ddg = build_ddg(body, loop_body=True)
+    n = len(body)
+
+    # Transitive predecessors of the query over flow edges (both intra and
+    # loop-carried): these statements feed the query's parameters, possibly
+    # through values carried around the loop, so they must stay on the
+    # producer side.
+    flow_preds: dict[int, set[int]] = {i: set() for i in range(n)}
+    for e in ddg.edges:
+        if e.kind.flow:
+            flow_preds[e.dst].add(e.src)
+    pre: set[int] = set()
+    stack = [qi]
+    while stack:
+        cur = stack.pop()
+        for p in flow_preds[cur]:
+            if p != qi and p not in pre:
+                pre.add(p)
+                stack.append(p)
+    if qi in pre or any(
+        e.src == qi and e.dst == qi and e.kind.flow for e in ddg.edges
+    ):
+        raise FissionError(
+            "query lies on a true-dependence cycle (its inputs depend on its "
+            "own result); Rule A is inapplicable (paper §4.1)"
+        )
+
+    order = [i for i in range(n) if i in pre] + [qi] + [
+        i for i in range(n) if i not in pre and i != qi
+    ]
+
+    # Validate: the new order must respect all intra-iteration dependencies.
+    pos = {old: new for new, old in enumerate(order)}
+    for e in ddg.intra_edges():
+        if pos[e.src] > pos[e.dst]:
+            raise FissionError(
+                f"reordering would violate intra-iteration dependence {e!r}"
+            )
+    new_body = [body[i] for i in order]
+    return new_body, pos[qi]
+
+
+# ---------------------------------------------------------------------------
+# Rule A (§3.2): loop fission
+# ---------------------------------------------------------------------------
+
+
+def _check_rule_a_preconditions(body: Sequence[Stmt], qi: int) -> None:
+    """Rule A preconditions (the paper's relaxed form):
+
+    (a) no loop-carried *flow* dependencies (external or otherwise) cross the
+        split points before/after the query statement ``s``;
+    (b) no loop-carried *external* anti or output dependencies cross them.
+
+    "Crossing" means: the edge connects a statement in ``ss2`` (after s) to a
+    statement in ``ss1 ∪ {s}`` (at or before s) in a later iteration —
+    i.e. src ∈ after-side, dst ∈ before-side.  (Plain loop-carried anti /
+    output deps on program variables are *allowed* to cross — that is the
+    paper's improvement over [1]; the loop context table renames them away.)
+    """
+    ddg = build_ddg(body, loop_body=True)
+    before = set(range(qi + 1))  # ss1 ∪ {s}
+    after = set(range(qi + 1, len(body)))  # ss2
+
+    for e in ddg.loop_carried_edges():
+        crosses = e.src in after and e.dst in before
+        if not crosses:
+            continue
+        if e.kind.flow:
+            raise FissionError(
+                f"loop-carried flow dependence crosses the split: {e!r} "
+                f"(precondition (a) of Rule A)"
+            )
+        if e.kind.external:
+            raise FissionError(
+                f"loop-carried external {e.kind.value} dependence crosses the "
+                f"split: {e!r} (precondition (b) of Rule A)"
+            )
+
+
+def _split_variables(body: Sequence[Stmt], qi: int) -> tuple[str, ...]:
+    """SV of Rule A: variables with an LCAD or LCOD edge crossing the split
+    boundary, i.e. read/written on the consumer side while (re)written on the
+    producer side in a later iteration — they must be captured per-iteration
+    in the loop context table.
+
+    We compute them directly: any variable that the consumer side (ss2)
+    reads, and that the producer side (ss1 ∪ s) writes, must be captured
+    (the producer of a *later* iteration would otherwise clobber the value
+    the consumer of an *earlier* iteration needs — exactly the LCAD case).
+    Variables the consumer both writes before reading are still captured
+    when a producer write may reach a consumer read (conditional writes —
+    Rule A item 3 restores only non-null attributes; we capture
+    conservatively and restore unconditionally, which is equivalent because
+    capture happens after the producer's write of the same iteration).
+    """
+    before = list(body[: qi + 1])
+    after = list(body[qi + 1 :])
+    written_before: set[str] = set()
+    for s in before:
+        written_before |= s.writes()
+        # Loop item var and guards of queries also flow through records.
+        written_before |= {g for g in [s.guard] if g}
+    read_after: set[str] = set()
+    for s in after:
+        read_after |= s.reads()
+    return tuple(sorted((written_before & read_after)))
+
+
+def apply_rule_a(
+    loop: Loop,
+    *,
+    overlap: bool = False,
+    reorder: bool = True,
+) -> _ProducerConsumer:
+    """Split ``loop`` at its first Query statement (paper Rule A).
+
+    ``overlap=True`` produces the §5.1 variant (producer in its own thread,
+    blocking-queue context table).  ``reorder=True`` first applies the
+    statement-reordering algorithm when the preconditions fail.
+    """
+    body = apply_rule_b(loop.body)
+    qi = _find_query(body)
+    if qi is None:
+        raise FissionError("loop contains no query execution statement")
+
+    try:
+        _check_rule_a_preconditions(body, qi)
+    except FissionError:
+        if not reorder:
+            raise
+        body, qi = reorder_for_fission(body, qi)
+        _check_rule_a_preconditions(body, qi)
+
+    q = body[qi]
+    assert isinstance(q, Query)
+    if q.updates_db:
+        raise FissionError(
+            "data-modifying query cannot be submitted asynchronously under "
+            "the conservative external-dependence model (paper §8)"
+        )
+
+    fresh = _FreshNames(body)
+    table_var = fresh("t")
+    record_var = fresh("r")
+    handle_attr = fresh("handle")
+    sv = _split_variables(body, qi)
+
+    # Producer body: ss1' = ss1 with capture of split variables, then
+    # r.handle = submitQuery(q).
+    producer_body: list[Stmt] = list(body[:qi])
+    submit = _Submit(
+        target=handle_attr,
+        query_name=q.query_name,
+        params=q.params,
+    )
+    if q.guard is not None:
+        submit = submit.with_guard(q.guard, q.guard_negated)
+    producer_body.append(submit)
+
+    producer = Loop(
+        item_var=loop.item_var,
+        iter_var=loop.iter_var,
+        body=producer_body,
+    )
+
+    # Consumer body: ss_r (restore) is handled by the interpreter (it binds
+    # the record's captured variables into the environment); then
+    # v = fetchResult(handle); ss2.
+    fetch = _Fetch(target=q.target, handle=handle_attr)
+    if q.guard is not None:
+        fetch = fetch.with_guard(q.guard, q.guard_negated)
+    consumer_body: list[Stmt] = [fetch] + list(body[qi + 1 :])
+
+    split_vars = tuple(
+        sorted(set(sv) | {loop.item_var} | ({q.guard} if q.guard else set()))
+    )
+
+    return _ProducerConsumer(
+        producer=producer,
+        consumer_body=consumer_body,
+        table_var=table_var,
+        record_var=record_var,
+        split_vars=split_vars,
+        overlap=overlap,
+    )
+
+
+def fission_loop(loop: Loop, **kw) -> Stmt:
+    """Public alias of :func:`apply_rule_a`."""
+    return apply_rule_a(loop, **kw)
+
+
+def transform_program(
+    prog: Program, *, overlap: bool = False, max_depth: int = 8
+) -> Program:
+    """Transform every fissionable loop in ``prog`` (nested loops §3.4:
+    innermost-first, then the outer loop sees the fissioned inner statement
+    as an opaque external-reading statement and may itself be fissioned when
+    preconditions hold — matching the paper's nested-table construction
+    conceptually, executed here via the runtime queue which is shared).
+    Loops whose preconditions fail are left untouched (rule application can
+    stop at any point — §3)."""
+
+    def rewrite(stmts: list[Stmt], depth: int) -> list[Stmt]:
+        out: list[Stmt] = []
+        for s in stmts:
+            if isinstance(s, Loop) and depth < max_depth:
+                s = dataclasses.replace(s, body=rewrite(s.body, depth + 1))
+                try:
+                    out.append(apply_rule_a(s, overlap=overlap))
+                    continue
+                except FissionError:
+                    pass
+            if isinstance(s, If):
+                s = dataclasses.replace(
+                    s,
+                    then_body=rewrite(s.then_body, depth),
+                    else_body=rewrite(s.else_body, depth),
+                )
+            out.append(s)
+        return out
+
+    return Program(body=rewrite(list(prog.body), 0), inputs=prog.inputs)
+
+
+# ---------------------------------------------------------------------------
+# Applicability analysis (§6.2, Table 1)
+# ---------------------------------------------------------------------------
+
+
+def analyze_applicability(prog: Program) -> dict[str, Any]:
+    """Count query-in-loop opportunities and how many Rule A (with Rule B +
+    reordering) can transform — the paper's Table 1."""
+    opportunities = 0
+    transformed = 0
+    failures: list[str] = []
+
+    def visit(stmts: Sequence[Stmt]):
+        nonlocal opportunities, transformed
+        for s in stmts:
+            if isinstance(s, Loop):
+                flat = apply_rule_b(s.body)
+                n_queries = sum(1 for t in flat if isinstance(t, Query))
+                opportunities += n_queries
+                probe = s
+                for _ in range(n_queries):
+                    try:
+                        pc = apply_rule_a(probe)
+                        transformed += 1
+                        # Remaining queries live in the consumer; probe again.
+                        probe = Loop(
+                            item_var=pc.record_var,
+                            iter_var=pc.table_var,
+                            body=pc.consumer_body[1:],
+                        )
+                    except FissionError as e:
+                        failures.append(str(e))
+                        break
+                visit(s.body)
+            elif isinstance(s, If):
+                visit(s.then_body)
+                visit(s.else_body)
+
+    visit(prog.body)
+    pct = 100.0 * transformed / opportunities if opportunities else 100.0
+    return {
+        "opportunities": opportunities,
+        "transformed": transformed,
+        "applicability_pct": pct,
+        "failures": failures,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Interpreter
+# ---------------------------------------------------------------------------
+
+
+class Interpreter:
+    """Executes HIR programs against a query service.
+
+    ``service`` must provide ``execute(query_name, params) -> result``.  For
+    transformed programs it must additionally provide the asynchronous API
+    ``submit(query_name, params) -> handle`` and ``fetch(handle) -> result``
+    (see :class:`repro.core.runtime.AsyncQueryRuntime`).  The untransformed
+    and transformed programs then execute observably identically — the
+    property our tests check.
+    """
+
+    def __init__(self, service, outputs: Optional[Callable[[Any], None]] = None):
+        self.service = service
+        self.emitted: list[Any] = []  # ordered observable outputs (print/log)
+
+    # -- public --------------------------------------------------------------
+    def run(self, prog: Program, inputs: Mapping[str, Any]) -> dict[str, Any]:
+        env = dict(inputs)
+        self._exec_block(prog.body, env)
+        return env
+
+    # -- internals -----------------------------------------------------------
+    def _guard_ok(self, s: Stmt, env: dict) -> bool:
+        if s.guard is None:
+            return True
+        v = bool(env[s.guard])
+        return (not v) if s.guard_negated else v
+
+    def _exec_block(self, stmts: Sequence[Stmt], env: dict) -> None:
+        for s in stmts:
+            self._exec(s, env)
+
+    def _exec(self, s: Stmt, env: dict) -> None:
+        if not self._guard_ok(s, env):
+            return
+        if isinstance(s, Assign):
+            val = s.fn(*[env[a] for a in s.args])
+            if s.effect is not None:
+                self.emitted.append((s.effect, val))
+            if s.target is not None:
+                env[s.target] = val
+        elif isinstance(s, Query):
+            env[s.target] = self.service.execute(s.query_name, tuple(env[p] for p in s.params))
+        elif isinstance(s, _Submit):
+            env[s.target] = self.service.submit(s.query_name, tuple(env[p] for p in s.params))
+        elif isinstance(s, _Fetch):
+            env[s.target] = self.service.fetch(env[s.handle])
+        elif isinstance(s, If):
+            branch = s.then_body if bool(env[s.pred]) else s.else_body
+            self._exec_block(branch, env)
+        elif isinstance(s, Loop):
+            for item in list(env[s.iter_var]):
+                env[s.item_var] = item
+                self._exec_block(s.body, env)
+        elif isinstance(s, _ProducerConsumer):
+            self._exec_fissioned(s, env)
+        else:
+            raise TypeError(f"unknown statement {type(s)}")
+
+    def _exec_fissioned(self, s: _ProducerConsumer, env: dict) -> None:
+        from repro.core.loop_context import LoopContextTable
+
+        table = LoopContextTable(blocking=s.overlap)
+
+        # In overlap mode (§5.1) the producer runs in its own thread over a
+        # *snapshot* of the environment: by Rule A's preconditions there are
+        # no dependences between producer and consumer other than through the
+        # loop context table, so the snapshot is safe; it prevents the
+        # low-level race of both threads mutating one dict entry (the paper's
+        # Java tool gets this for free from per-iteration locals).
+        penv = dict(env) if s.overlap else env
+
+        def produce():
+            for item in list(penv[s.producer.iter_var]):
+                penv[s.producer.item_var] = item
+                self._exec_block(s.producer.body, penv)
+                record = {v: penv[v] for v in s.split_vars if v in penv}
+                # the submit handle:
+                for st in s.producer.body:
+                    if isinstance(st, _Submit):
+                        if self._guard_ok(st, penv):
+                            record[st.target] = penv[st.target]
+                        else:
+                            record[st.target] = None
+                table.put(record)
+            table.close()
+            # The producer loop has submitted everything: strategies that
+            # wait for the full request set (PureBatch) may now fire.
+            done_hook = getattr(self.service, "producer_done", None)
+            if done_hook is not None:
+                done_hook()
+
+        if s.overlap:
+            import threading
+
+            th = threading.Thread(target=produce, name="hir-producer")
+            th.start()
+        else:
+            produce()
+
+        for record in table:
+            env.update(record)
+            self._exec_block(s.consumer_body, env)
+
+        if s.overlap:
+            th.join()
+            # Merge back producer-only writes (vars the consumer neither
+            # restores nor writes), preserving the original program's final
+            # values: per body order, a consumer write supersedes the
+            # producer's, otherwise the producer's final value stands.
+            consumer_writes: set[str] = set()
+            for st in s.consumer_body:
+                consumer_writes |= st.writes()
+            producer_writes = s.producer.writes() | {s.producer.item_var}
+            for v in producer_writes - consumer_writes - set(s.split_vars):
+                if v in penv:
+                    env[v] = penv[v]

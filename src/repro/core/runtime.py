@@ -1,0 +1,270 @@
+"""AsyncQueryRuntime — the paper's runtime asynchronous-submission framework
+(§4.2, Fig. 3) with asynchronous batching (§5.2).
+
+Layout mirrors the paper exactly:
+
+  * ``submit(query_name, params) -> handle``  (non-blocking ``submitQuery`` /
+    ``stmt.addBatch(ctx)``): enqueue the request keyed by a monotonically
+    increasing loop-context key.
+  * a **thread pool** of ``n_threads`` workers, each holding its own
+    "connection" to the service (the paper: one JDBC connection per thread),
+    monitors the queue.  A free worker asks the :class:`BatchingStrategy`
+    how many pending requests to take:
+
+        1  → execute individually (pure asynchronous submission)
+        k>1→ rewrite as one set-oriented request: ``service.execute_batch``
+             (the paper's runtime query rewrite), then split the result set.
+
+  * results land in a **cache** keyed by the loop context
+    (``stmt.getResultSet(ctx)`` ≡ ``fetch(handle)``), which blocks until the
+    corresponding request completes.
+
+Extras needed at production scale (system brief):
+
+  * **straggler mitigation**: an optional per-request timeout after which a
+    waiting ``fetch`` *re-submits* the request to the queue so another worker
+    (connection/serving lane) retries; first result wins, duplicates are
+    dropped idempotently.  This is the natural generalization of the paper's
+    thread-pool model to lossy clusters.
+  * **bounded queue** (§8 memory overheads): ``submit`` blocks when more
+    than ``max_pending`` requests are outstanding, implementing producer
+    back-off.
+  * **batch-size trace** for Fig. 10-style analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Optional, Sequence
+
+from repro.core.services import QueryService
+from repro.core.strategies import BatchingStrategy, PureAsync
+
+__all__ = ["Handle", "AsyncQueryRuntime", "RuntimeStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Handle:
+    """Loop-context key for one submitted request (paper: ``ctx``)."""
+
+    key: int
+    query_name: str
+
+    def __repr__(self) -> str:
+        return f"<handle #{self.key} {self.query_name}>"
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    submitted: int = 0
+    completed: int = 0
+    single_executions: int = 0
+    batch_executions: int = 0
+    resubmissions: int = 0
+    batch_trace: list = dataclasses.field(default_factory=list)  # (seq, size)
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["batch_sizes"] = [s for _, s in self.batch_trace if s > 1]
+        return d
+
+
+class _Pending:
+    __slots__ = ("handle", "params", "inflight")
+
+    def __init__(self, handle: Handle, params: tuple):
+        self.handle = handle
+        self.params = params
+        self.inflight = 0
+
+
+class AsyncQueryRuntime:
+    """The runtime library of §4.2 + §5.2.
+
+    May be used directly (``submit``/``fetch``) or as the service behind the
+    HIR :class:`~repro.core.hir.Interpreter` for transformed programs.
+    """
+
+    def __init__(
+        self,
+        service: QueryService,
+        n_threads: int = 10,
+        strategy: Optional[BatchingStrategy] = None,
+        max_pending: Optional[int] = None,
+        straggler_timeout: Optional[float] = None,
+    ):
+        self.service = service
+        self.strategy = strategy or PureAsync()
+        self.strategy.reset()
+        self.n_threads = n_threads
+        self.max_pending = max_pending
+        self.straggler_timeout = straggler_timeout
+
+        self._queue: deque[_Pending] = deque()
+        self._results: dict[int, Any] = {}
+        self._errors: dict[int, BaseException] = {}
+        self._lock = threading.Lock()
+        self._work_cv = threading.Condition(self._lock)  # queue state changed
+        self._done_cv = threading.Condition(self._lock)  # a result arrived
+        self._next_key = 0
+        self._producer_done = False
+        self._shutdown = False
+        self._inflight_params: dict[int, tuple] = {}
+        self.stats = RuntimeStats()
+
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"aqr-worker-{i}", daemon=True)
+            for i in range(n_threads)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, query_name: str, params: tuple) -> Handle:
+        """Non-blocking query submission (``submitQuery``).  Blocks only when
+        the bounded queue is full (§8 producer back-off)."""
+        with self._lock:
+            while (
+                self.max_pending is not None
+                and len(self._queue) >= self.max_pending
+                and not self._shutdown
+            ):
+                self._done_cv.wait(timeout=0.1)
+            if self._shutdown:
+                raise RuntimeError("runtime is shut down")
+            handle = Handle(self._next_key, query_name)
+            self._next_key += 1
+            self._queue.append(_Pending(handle, params))
+            self.stats.submitted += 1
+            self._producer_done = False
+            self._work_cv.notify()
+        return handle
+
+    def producer_done(self) -> None:
+        """Signal that no more requests are coming (enables PureBatch and
+        lets adaptive strategies drain the tail)."""
+        with self._lock:
+            self._producer_done = True
+            self._work_cv.notify_all()
+
+    def fetch(self, handle: Optional[Handle]) -> Any:
+        """Blocking result fetch (``fetchResult`` / ``getResultSet(ctx)``).
+        ``None`` handles (guarded-away submissions, Rule B) return ``None``.
+        """
+        if handle is None:
+            return None
+        deadline = (
+            time.monotonic() + self.straggler_timeout
+            if self.straggler_timeout is not None
+            else None
+        )
+        with self._lock:
+            while handle.key not in self._results and handle.key not in self._errors:
+                timeout = None
+                if deadline is not None:
+                    timeout = max(0.0, deadline - time.monotonic())
+                    if timeout == 0.0:
+                        # Straggler: re-enqueue so another lane retries.
+                        self._resubmit_locked(handle)
+                        deadline = time.monotonic() + self.straggler_timeout
+                        timeout = self.straggler_timeout
+                self._done_cv.wait(timeout=timeout)
+            if handle.key in self._errors:
+                raise self._errors[handle.key]
+            return self._results[handle.key]
+
+    # The HIR interpreter's synchronous path delegates to the service.
+    def execute(self, query_name: str, params: tuple) -> Any:
+        return self.service.execute(query_name, params)
+
+    def drain(self) -> None:
+        """Block until every submitted request has a result."""
+        self.producer_done()
+        with self._lock:
+            while self.stats.completed < self.stats.submitted:
+                self._done_cv.wait(timeout=0.1)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._shutdown = True
+            self._work_cv.notify_all()
+            self._done_cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.drain()
+        self.shutdown()
+        return False
+
+    # ------------------------------------------------------------ internals
+    def _resubmit_locked(self, handle: Handle) -> None:
+        for p in self._queue:
+            if p.handle.key == handle.key:
+                return  # already pending again
+        # Need original params: look in the inflight registry.
+        params = self._inflight_params.get(handle.key)
+        if params is None:
+            return
+        self._queue.append(_Pending(handle, params))
+        self.stats.resubmissions += 1
+        self._work_cv.notify()
+
+    def _worker(self) -> None:
+        while True:
+            with self._lock:
+                take = 0
+                while not self._shutdown:
+                    n = len(self._queue)
+                    take = self.strategy.decide(n, self._producer_done) if n else 0
+                    if take > 0:
+                        break
+                    self._work_cv.wait(timeout=0.05)
+                if self._shutdown:
+                    return
+                take = min(take, len(self._queue))
+                # Requests in one batch must share a query template; split at
+                # the first boundary (the paper: same query, varying params).
+                first_q = self._queue[0].handle.query_name
+                picked: list[_Pending] = []
+                while self._queue and len(picked) < take:
+                    if self._queue[0].handle.query_name != first_q:
+                        break
+                    p = self._queue.popleft()
+                    p.inflight += 1
+                    self._inflight_params[p.handle.key] = p.params
+                    picked.append(p)
+                seq = self.stats.single_executions + self.stats.batch_executions
+                self.stats.batch_trace.append((seq, len(picked)))
+                if len(picked) == 1:
+                    self.stats.single_executions += 1
+                else:
+                    self.stats.batch_executions += 1
+
+            try:
+                if len(picked) == 1:
+                    out = [self.service.execute(first_q, picked[0].params)]
+                else:
+                    out = self.service.execute_batch(
+                        first_q, [p.params for p in picked]
+                    )
+                err = None
+            except BaseException as e:  # noqa: BLE001 — propagate via fetch
+                out, err = None, e
+
+            with self._lock:
+                for i, p in enumerate(picked):
+                    if p.handle.key in self._results or p.handle.key in self._errors:
+                        continue  # straggler duplicate: first result won
+                    if err is not None:
+                        self._errors[p.handle.key] = err
+                    else:
+                        self._results[p.handle.key] = out[i]
+                    self.stats.completed += 1
+                    self._inflight_params.pop(p.handle.key, None)
+                self._done_cv.notify_all()

@@ -1,0 +1,215 @@
+"""Query services — what the runtime submits requests *to*.
+
+The paper's "database" generalizes (its §6, Experiment 4 uses a Web
+service).  In this framework a service is anything with a blocking
+single-request form and (optionally) a set-oriented batched form:
+
+* :class:`SimulatedDBService` — a latency-model service for benchmarks that
+  reproduces the paper's cost structure: each individual request pays one
+  network round trip plus per-query processing; a batch pays **3 round
+  trips** (parameter insert, batched query, temp-table cleanup — §5.2.3)
+  plus cheaper per-item set-oriented processing.
+* :class:`ModelService` — the ML-serving instantiation: a request is a model
+  forward (e.g. score/embed/generate-step) executed by a JAX callable; the
+  batched form pads and stacks requests into one device invocation —
+  batching amortizes dispatch + kernel-launch + HBM-stream fixed costs the
+  same way set-oriented SQL amortizes round trips and random IO.
+* :class:`TableService` — an in-memory key→row "database" used for unit
+  tests and the HIR interpreter (deterministic, no latency).
+
+Each service also exposes counters (round trips, executed queries, batches)
+so tests and benchmarks can assert the *mechanism*, not just timing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Mapping, Optional, Protocol, Sequence
+
+__all__ = [
+    "QueryService",
+    "ServiceStats",
+    "TableService",
+    "SimulatedDBService",
+    "ModelService",
+]
+
+
+class QueryService(Protocol):
+    def execute(self, query_name: str, params: tuple) -> Any: ...
+
+    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list: ...
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    round_trips: int = 0
+    single_queries: int = 0
+    batches: int = 0
+    batched_items: int = 0
+    busy_time: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _StatsMixin:
+    def __init__(self):
+        self.stats = ServiceStats()
+        self._stats_lock = threading.Lock()
+
+    def _count(self, *, round_trips=0, single=0, batches=0, items=0, busy=0.0):
+        with self._stats_lock:
+            self.stats.round_trips += round_trips
+            self.stats.single_queries += single
+            self.stats.batches += batches
+            self.stats.batched_items += items
+            self.stats.busy_time += busy
+
+
+class TableService(_StatsMixin):
+    """Deterministic in-memory database: ``tables[name][key] -> row``.
+
+    ``queries`` maps a query name to ``fn(tables, params) -> result`` so
+    tests can define arbitrary deterministic queries.  The default query
+    ``"<table>.lookup"`` returns ``tables[table].get(key)``.
+    """
+
+    def __init__(
+        self,
+        tables: Optional[Mapping[str, Mapping[Any, Any]]] = None,
+        queries: Optional[Mapping[str, Callable]] = None,
+        latency: float = 0.0,
+        batch_latency: Optional[Callable[[int], float]] = None,
+    ):
+        super().__init__()
+        self.tables = dict(tables or {})
+        self.queries = dict(queries or {})
+        self.latency = latency
+        self.batch_latency = batch_latency
+
+    def _run(self, query_name: str, params: tuple) -> Any:
+        if query_name in self.queries:
+            return self.queries[query_name](self.tables, params)
+        if query_name.endswith(".lookup"):
+            table = query_name[: -len(".lookup")]
+            (key,) = params
+            return self.tables[table].get(key)
+        raise KeyError(f"unknown query {query_name!r}")
+
+    def execute(self, query_name: str, params: tuple) -> Any:
+        if self.latency:
+            time.sleep(self.latency)
+        self._count(round_trips=1, single=1)
+        return self._run(query_name, params)
+
+    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        if self.batch_latency is not None:
+            time.sleep(self.batch_latency(len(params_list)))
+        elif self.latency:
+            time.sleep(self.latency)
+        self._count(round_trips=3, batches=1, items=len(params_list))
+        return [self._run(query_name, p) for p in params_list]
+
+
+class SimulatedDBService(_StatsMixin):
+    """Latency-model service reproducing the paper's cost trade-offs.
+
+    Cost model (times in seconds):
+      single request : ``rtt + single_proc``           (1 round trip)
+      batch of n     : ``3*rtt + batch_fixed + n*batch_proc``  (3 round trips)
+
+    With ``single_proc > batch_proc`` (set-oriented plans beat n random
+    probes — §5.2.1 "random IO at the database") and ``concurrency`` limiting
+    how many requests the server truly overlaps (its CPUs/disks).  A
+    ``threading.Semaphore(concurrency)`` models server capacity, so client
+    threads beyond it queue — matching Fig. 5's plateau when threads exceed
+    what the server exploits.
+    """
+
+    def __init__(
+        self,
+        rtt: float = 2e-3,
+        single_proc: float = 1e-3,
+        batch_proc: float = 2e-4,
+        batch_fixed: float = 1e-3,
+        concurrency: int = 8,
+        compute_fn: Optional[Callable[[str, tuple], Any]] = None,
+    ):
+        super().__init__()
+        self.rtt = rtt
+        self.single_proc = single_proc
+        self.batch_proc = batch_proc
+        self.batch_fixed = batch_fixed
+        self._server = threading.Semaphore(concurrency)
+        self.compute_fn = compute_fn or (lambda q, p: (q, p))
+
+    def execute(self, query_name: str, params: tuple) -> Any:
+        t0 = time.perf_counter()
+        time.sleep(self.rtt / 2)
+        with self._server:
+            time.sleep(self.single_proc)
+            out = self.compute_fn(query_name, params)
+        time.sleep(self.rtt / 2)
+        self._count(round_trips=1, single=1, busy=time.perf_counter() - t0)
+        return out
+
+    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        n = len(params_list)
+        t0 = time.perf_counter()
+        # 3 round trips: parameter insert, batched query, cleanup (§5.2.3).
+        time.sleep(self.rtt * 1.5)
+        with self._server:
+            time.sleep(self.batch_fixed + n * self.batch_proc)
+            out = [self.compute_fn(query_name, p) for p in params_list]
+        time.sleep(self.rtt * 1.5)
+        self._count(round_trips=3, batches=1, items=n, busy=time.perf_counter() - t0)
+        return out
+
+
+class ModelService(_StatsMixin):
+    """A JAX model as the query service (the ML-serving instantiation).
+
+    ``single_fn(params...) -> result`` must be a JAX callable; the batched
+    form stacks the per-request parameter tuples along a new leading axis and
+    runs ``batch_fn`` (default ``jax.vmap(single_fn)``) **once** — one device
+    dispatch for the whole batch, the device analogue of the set-oriented
+    query.  Results are split back per request.
+    """
+
+    def __init__(self, single_fn: Callable, batch_fn: Optional[Callable] = None):
+        super().__init__()
+        import jax
+        import jax.numpy as jnp
+
+        self._jnp = jnp
+        self.single_fn = jax.jit(single_fn)
+        self.batch_fn = jax.jit(batch_fn) if batch_fn is not None else jax.jit(
+            jax.vmap(single_fn)
+        )
+
+    def execute(self, query_name: str, params: tuple) -> Any:
+        self._count(round_trips=1, single=1)
+        out = self.single_fn(*params)
+        return jax_block(out)
+
+    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        jnp = self._jnp
+        n = len(params_list)
+        stacked = tuple(
+            jnp.stack([p[i] for p in params_list]) for i in range(len(params_list[0]))
+        )
+        self._count(round_trips=3, batches=1, items=n)
+        out = jax_block(self.batch_fn(*stacked))
+        import jax
+
+        return [jax.tree_util.tree_map(lambda a: a[i], out) for i in range(n)]
+
+
+def jax_block(x):
+    import jax
+
+    return jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a, x
+    )

@@ -1,0 +1,143 @@
+"""Batch-size decision strategies for asynchronous batching (paper §5.2.3).
+
+A free worker thread observes the pending-request queue and asks its
+strategy *how many requests to take*.  The strategies are exactly the
+paper's:
+
+* :class:`PureAsync` — always take 1 (plain asynchronous submission, §3).
+* :class:`PureBatch` — take everything, but only once the producer is done
+  (classic batching of [1]: one set-oriented execution of the whole loop).
+* :class:`OneOrAll` — ``n == 1 → 1`` else take all ``n`` (§5.2.3).
+* :class:`LowerThreshold` — take all when ``n > bt`` (``bt ≥ 3``, motivated
+  by batching's 3 round trips: param insert, batched query, cleanup), else
+  take 1 (§5.2.3).
+* :class:`GrowingUpperThreshold` — cap the batch at a doubling upper bound
+  so early batches stay small (better time-to-first-response) while later
+  batches amortize (§5.2.3).  Orthogonal to the lower threshold; the class
+  composes both, as the paper notes.
+
+``decide`` receives the full queue state; returning ``0`` means "wait".
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+__all__ = [
+    "BatchingStrategy",
+    "PureAsync",
+    "PureBatch",
+    "OneOrAll",
+    "LowerThreshold",
+    "GrowingUpperThreshold",
+    "from_name",
+]
+
+
+class BatchingStrategy:
+    """Decide how many pending requests a free worker should take."""
+
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        raise NotImplementedError
+
+    def reset(self) -> None:  # per-run state (e.g. growing threshold)
+        pass
+
+
+@dataclasses.dataclass
+class PureAsync(BatchingStrategy):
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        return 1 if n_pending >= 1 else 0
+
+
+@dataclasses.dataclass
+class PureBatch(BatchingStrategy):
+    """The [1] baseline: a single set-oriented execution of all requests."""
+
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        if producer_done and n_pending >= 1:
+            return n_pending
+        return 0
+
+
+@dataclasses.dataclass
+class OneOrAll(BatchingStrategy):
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        if n_pending == 0:
+            return 0
+        return 1 if n_pending == 1 else n_pending
+
+
+@dataclasses.dataclass
+class LowerThreshold(BatchingStrategy):
+    """Take all iff ``n > bt``; else take one.  The paper derives ``bt >= 3``
+    from batching's fixed 3-round-trip overhead."""
+
+    bt: int = 3
+
+    def __post_init__(self):
+        if self.bt < 3:
+            raise ValueError("batching threshold bt must be >= 3 (paper §5.2.3)")
+
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        if n_pending == 0:
+            return 0
+        return n_pending if n_pending > self.bt else 1
+
+
+class GrowingUpperThreshold(BatchingStrategy):
+    """Bound batches by an upper threshold that doubles whenever a batch of
+    exactly the current threshold size is emitted.  Optionally composed with
+    a lower threshold (``bt``): below ``bt`` requests go out individually.
+    """
+
+    def __init__(self, initial_upper: int = 200, bt: int | None = None, growth: int = 2):
+        if bt is not None and bt < 3:
+            raise ValueError("batching threshold bt must be >= 3 (paper §5.2.3)")
+        self.initial_upper = initial_upper
+        self.bt = bt
+        self.growth = growth
+        self._lock = threading.Lock()
+        self._upper = initial_upper
+
+    def reset(self) -> None:
+        with self._lock:
+            self._upper = self.initial_upper
+
+    @property
+    def upper(self) -> int:
+        with self._lock:
+            return self._upper
+
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        if n_pending == 0:
+            return 0
+        if self.bt is not None and n_pending <= self.bt:
+            return 1
+        with self._lock:
+            if n_pending <= self._upper:
+                return n_pending
+            take = self._upper
+            # A full-threshold batch was just formed: grow for future batches.
+            self._upper *= self.growth
+            return take
+
+    def __repr__(self) -> str:
+        return (
+            f"GrowingUpperThreshold(initial_upper={self.initial_upper}, "
+            f"bt={self.bt}, growth={self.growth})"
+        )
+
+
+def from_name(name: str, **kw) -> BatchingStrategy:
+    table = {
+        "async": PureAsync,
+        "batch": PureBatch,
+        "one_or_all": OneOrAll,
+        "lower_threshold": LowerThreshold,
+        "growing_upper": GrowingUpperThreshold,
+    }
+    try:
+        return table[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; one of {sorted(table)}") from None

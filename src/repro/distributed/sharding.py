@@ -1,0 +1,204 @@
+"""Sharding rules: how every parameter and activation maps onto the mesh.
+
+Mesh axes (see ``repro.launch.mesh``):
+
+  * ``pod``   — outermost data parallelism across pods (multi-pod mesh only)
+  * ``data``  — data parallelism + FSDP parameter sharding + sequence
+                sharding for long-context activations
+  * ``model`` — tensor parallelism (attention heads / FFN hidden) and
+                expert parallelism for MoE
+
+Parameters follow a **path-based rule table** (the MaxText/GSPMD idiom):
+each rule maps a parameter-path regex to logical axes, resolved per mesh.
+FSDP shards the *non-TP* dimension of every large matrix over ``data``; TP
+shards heads/FFN over ``model``; MoE expert stacks shard their expert axis
+over ``model`` (EP).  Embeddings shard vocab over ``model`` and d_model over
+``data``.
+
+Activations use :func:`shard_activation`, a no-op outside a mesh context so
+models stay runnable on a single CPU device (smoke tests) while dry-runs get
+full constraint coverage.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "mesh_context",
+    "current_mesh",
+    "shard_activation",
+    "logical_to_spec",
+    "param_shardings",
+    "input_shardings",
+    "PARAM_RULES",
+]
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _axes_in_mesh(mesh: Mesh, axes):
+    """Drop logical axes the mesh does not have; turn 'dp' into the full
+    data-parallel axis group (('pod','data') on the multi-pod mesh)."""
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif a == "dp":
+            grp = tuple(x for x in ("pod", "data") if x in mesh.axis_names)
+            out.append(grp if grp else None)
+        elif a in mesh.axis_names:
+            out.append(a)
+        else:
+            out.append(None)
+    return out
+
+
+def logical_to_spec(mesh: Mesh, axes) -> P:
+    return P(*_axes_in_mesh(mesh, axes))
+
+
+def shard_activation(x, *axes):
+    """``with_sharding_constraint`` against the ambient mesh; no-op without
+    one (single-device smoke tests) or under abstract tracing w/o mesh.
+    Non-dividing assignments fall back to replication per dim."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = divisible_spec(mesh, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules.  Paths are '/'-joined key paths into the params pytree,
+# e.g. "layers/attn/wq", "embed/table", "layers/moe/experts/w_up".
+# Axis names refer to the *array dims in order*.
+#
+# Conventions (dims):
+#   embed table          (vocab, d_model)         → (model, dp)   [TP vocab]
+#   attn wq              (d_model, n_heads, hd)   → (dp, model, None)
+#   attn wk/wv           (d_model, n_kv, hd)      → (dp, model, None)
+#   attn wo              (n_heads, hd, d_model)   → (model, None, dp)
+#   mlp w_in/w_gate      (d_model, d_ff)          → (dp, model)
+#   mlp w_out            (d_ff, d_model)          → (model, dp)
+#   moe router           (d_model, E)             → (dp, None)
+#   moe experts w_*      (E, d_model, ff)         → (model, dp, None)  [EP]
+#   moe experts w_down   (E, ff, d_model)         → (model, None, dp)
+#   ssm in/out proj      (d_model, d_inner)       → (dp, model)
+#   norms / biases / scalars                      → replicated
+#
+# All stacked-over-layers params have a leading layer axis (None).
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r".*embed/table$", ("model", "dp")),
+    (r".*lm_head/w$", ("dp", "model")),
+    (r".*(attn|cross_attn)/wq$", ("dp", "model", None)),
+    # GQA: kv heads (2..20) rarely divide the 16-way model axis — replicate
+    # heads, FSDP-shard d_model (Megatron GQA convention).
+    (r".*(attn|cross_attn)/w[kv]$", ("dp", None, None)),
+    (r".*(attn|cross_attn)/wo$", ("model", None, "dp")),
+    (r".*(attn|cross_attn)/bq$", ("model", None)),
+    (r".*(attn|cross_attn)/b[kv]$", (None, None)),
+    (r".*mlp/w_(gate|in)$", ("dp", "model")),
+    (r".*mlp/w_out$", ("model", "dp")),
+    (r".*moe/router/w$", ("dp", None)),
+    (r".*moe/(experts|shared)/w_(gate|in)$", ("model", "dp", None)),
+    (r".*moe/(experts|shared)/w_out$", ("model", None, "dp")),
+    (r".*ssm/in_proj$", ("dp", "model")),
+    (r".*ssm/out_proj$", ("model", "dp")),
+    (r".*ssm/conv_w$", (None, "model")),
+    # everything else (norms, biases, A_log, D, dt_bias): replicated
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, ndim: int, stacked: bool) -> tuple:
+    """Resolve a param path to logical axes, prepending the layer-stack axis."""
+    for pat, axes in PARAM_RULES:
+        if re.match(pat, path_str):
+            axes = tuple(axes)
+            if stacked:
+                axes = (None,) + axes
+            if len(axes) < ndim:
+                axes = axes + (None,) * (ndim - len(axes))
+            return axes[:ndim]
+    return (None,) * ndim
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def divisible_spec(mesh: Mesh, axes, shape) -> P:
+    """Resolve logical axes and DROP any assignment that does not divide the
+    dimension (jit arguments demand exact divisibility; replication is the
+    correct fallback — e.g. 20 query-head groups on a 16-way model axis, or
+    a 50280-row vocab)."""
+    resolved = _axes_in_mesh(mesh, axes)
+    out = []
+    for dim, ax in zip(shape, resolved):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0 else None)
+    return P(*out)
+
+
+def param_shardings(
+    mesh: Mesh,
+    params,
+    stacked_prefixes=("layers", "enc_layers", "dense_layers"),
+):
+    """NamedShardings for a params pytree (ShapeDtypeStructs or arrays)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = any(
+            ps.startswith(pfx) or f"/{pfx}/" in ps for pfx in stacked_prefixes
+        )
+        ndim = len(leaf.shape)
+        spec = spec_for_path(ps, ndim, stacked)
+        return NamedSharding(mesh, divisible_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def input_shardings(mesh: Mesh, batch_axes=("dp",)):
+    """Sharding for (batch, seq[, ...]) token inputs: batch over dp."""
+    return NamedSharding(mesh, logical_to_spec(mesh, batch_axes + (None,)))

@@ -1,0 +1,88 @@
+"""Batched row gather — the paper's set-oriented query execution as a TPU
+kernel (one kernel, many in-flight DMA descriptors).
+
+The fissioned loop hands us ALL row ids at once (the loop-context table).
+The original loop's execution pattern — one scalar-driven gather per scan
+step — costs a full HBM round trip per row with no pipelining.  Here the
+ids arrive via scalar prefetch (SMEM), the table stays in HBM
+(``memory_space=ANY``, never copied wholesale), and the kernel issues the
+row DMAs HBM→VMEM back-to-back with ``pltpu.make_async_copy``, keeping
+``PIPE`` descriptors in flight before the first wait — the amortization the
+paper gets from its one set-oriented SQL query, restated in DMA terms.
+
+Grid: (N / bn,); each step fills one (bn × D) VMEM output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["batched_gather"]
+
+PIPE = 8  # DMA descriptors kept in flight
+
+
+def _kernel(ids_ref, table_ref, o_ref, sems, *, bn):
+    blk = pl.program_id(0)
+    base = blk * bn
+
+    def start(i):
+        row = ids_ref[base + i]
+        pltpu.make_async_copy(
+            table_ref.at[row], o_ref.at[i], sems.at[i % PIPE]
+        ).start()
+
+    def wait(i):
+        row = ids_ref[base + i]
+        pltpu.make_async_copy(
+            table_ref.at[row], o_ref.at[i], sems.at[i % PIPE]
+        ).wait()
+
+    # prologue: fill the pipe
+    for i in range(min(PIPE, bn)):
+        start(i)
+    # steady state: wait one, start the next — PIPE copies always in flight
+    def body(i, _):
+        wait_i = i
+        nxt = i + PIPE
+
+        @pl.when(nxt < bn)
+        def _():
+            row = ids_ref[base + nxt]
+            pltpu.make_async_copy(
+                table_ref.at[row], o_ref.at[nxt], sems.at[nxt % PIPE]
+            ).start()
+
+        row = ids_ref[base + wait_i]
+        pltpu.make_async_copy(
+            table_ref.at[row], o_ref.at[wait_i], sems.at[wait_i % PIPE]
+        ).wait()
+        return 0
+
+    jax.lax.fori_loop(0, bn, body, 0)
+
+
+def batched_gather(table, ids, *, bn: int = 256, interpret: bool = False):
+    """table: (V, D); ids: (N,) int32 → (N, D).  N must divide by bn."""
+    v, d = table.shape
+    n = ids.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bn=bn),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n // bn,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+            out_specs=pl.BlockSpec((bn, d), lambda blk, ids: (blk, 0)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA((PIPE,))],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)
+    return out

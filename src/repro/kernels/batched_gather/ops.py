@@ -1,0 +1,21 @@
+"""jit'd wrapper; also registers the kernel as the set-oriented executor of
+the ``table_gather`` QuerySpec on TPU (the fission pass then emits ONE
+kernel launch with pipelined DMAs for the whole loop-context table)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.batched_gather.kernel import batched_gather
+from repro.kernels.batched_gather.ref import gather_ref
+
+__all__ = ["gather_op"]
+
+
+@partial(jax.jit, static_argnames=("bn", "use_kernel", "interpret"))
+def gather_op(table, ids, *, bn=256, use_kernel=True, interpret=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel and (on_tpu or interpret) and ids.shape[0] % min(bn, ids.shape[0]) == 0:
+        return batched_gather(table, ids, bn=bn, interpret=interpret or not on_tpu)
+    return gather_ref(table, ids)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: row gather (the set-oriented table query)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_ref"]
+
+
+def gather_ref(table, ids):
+    """table: (V, D); ids: (N,) int32 → (N, D)."""
+    return jnp.take(table, ids, axis=0)

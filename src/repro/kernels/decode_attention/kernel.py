@@ -1,0 +1,107 @@
+"""Split-KV decode attention (flash-decoding [arXiv:2311.01282] on TPU).
+
+Decode is memory-bound: one query token must stream the whole KV cache from
+HBM.  The kernel's only job is to hit HBM bandwidth — so the grid splits the
+cache length T into blocks and walks them sequentially per (batch, kv-head)
+while the online-softmax state for ALL q-heads of that kv head (the GQA
+group) sits in VMEM scratch.  Grid: (B, Hkv, T/bk); the group dim G = Hq/Hkv
+rides inside the block so the q@k product is an (G×D)·(D×bk) MXU matmul
+instead of G vector dots.
+
+Per-lane variable lengths come in via scalar prefetch (SMEM) and mask the
+tail block; fully-invalid blocks are skipped with ``pl.when`` so a
+short-context lane in a long-cache batch does not pay for the whole cache
+sweep (the straggler-friendly property the serving engine relies on).
+
+VMEM working set (bk=512, D=128, G=8, bf16 kv): k/v 2·512·128·2 = 256 KiB,
+acc G·D·4 = 4 KiB — trivially fits; bk can grow to 2048 for long caches.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel"]
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, sm_scale, bk):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = lengths_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_start = ki * bk
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)   # (bk, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)   # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                              # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]                       # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lengths, *, bk: int = 512,
+                            interpret: bool = False):
+    """q: (B, Hq, D); k/v: (B, T, Hkv, D); lengths: (B,) → (B, Hq, D)."""
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bk = min(bk, t)
+    assert t % bk == 0, (t, bk)
+    sm_scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, t // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, bk=bk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d), lambda b_, h, ki, lens: (b_, h, 0, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda b_, h, ki, lens: (b_, ki, h, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda b_, h, ki, lens: (b_, ki, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, ki, lens: (b_, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, d), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the split-KV decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_ref
+
+__all__ = ["decode_op"]
+
+
+@partial(jax.jit, static_argnames=("bk", "use_kernel", "interpret"))
+def decode_op(q, k, v, lengths, *, bk=512, use_kernel=True, interpret=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel and (on_tpu or interpret):
+        return decode_attention_kernel(q, k, v, lengths, bk=bk,
+                                       interpret=interpret or not on_tpu)
+    return decode_ref(q, k, v, lengths)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_ref"]
+
+
+def decode_ref(q, k, v, lengths):
+    """q: (B, Hq, D) one token; k/v: (B, T, Hkv, D); lengths: (B,) int32.
+
+    Attends slots [0, lengths); returns (B, Hq, D) in q.dtype.
+    """
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    valid = jnp.arange(t)[None, :] < lengths[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

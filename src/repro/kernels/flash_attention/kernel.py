@@ -1,0 +1,133 @@
+"""Blockwise causal GQA attention (FlashAttention-2 schedule) for TPU.
+
+Grid: (B·Hq, S/bq, T/bk) — the kv axis is the minor (fastest) grid dim, so
+on TPU the per-(head, q-block) online-softmax state lives in VMEM scratch
+across kv steps (TPU grids execute sequentially on a core; scratch persists
+between grid steps — the standard Pallas TPU accumulation idiom).
+
+BlockSpecs keep one q block (bq×D), one kv block (bk×D each for K and V),
+the f32 accumulator (bq×D) and the m/l statistics in VMEM.  With the
+defaults (bq=bk=512, D=128, bf16 in / f32 acc) the working set is
+
+    q 512·128·2 + k/v 2·512·128·2 + acc 512·128·4 + p 512·512·4  ≈ 1.7 MiB
+
+well under the ~16 MiB VMEM budget, and every matmul is MXU-aligned
+(contraction dims 128, tiles ≥ 128).  GQA is done by the index maps: the
+kv block for q-head h comes from kv-head h // (Hq/Hkv) — no K/V duplication
+in HBM, which is the point of GQA.
+
+Causality skips fully-masked kv blocks via ``pl.when`` (upper-triangular
+blocks cost nothing but the grid step) and applies the elementwise mask on
+the diagonal blocks only.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, sm_scale,
+            bq, bk, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip kv blocks strictly above the diagonal.
+        pl.when(k_start <= q_start + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512, bk: int = 512,
+                    interpret: bool = False):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, T, D) → (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    sm_scale = 1.0 / math.sqrt(d)
+
+    grid = (b * hq, s // bq, t // bk)
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        return (h // g, ki, 0)  # GQA: share the kv head across the group
+
+    qs = q.reshape(b * hq, s, d)
+    ks = k.reshape(b * hkv, t, d)
+    vs = v.reshape(b * hkv, t, d)
+
+    # flatten (b, h) jointly: q index h in [0, b*hq) maps to kv index
+    # (h // hq) * hkv + (h % hq) // g
+    def kv_map_joint(h, qi, ki):
+        return ((h // hq) * hkv + (h % hq) // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, sm_scale=sm_scale, bq=bq, bk=bk, causal=causal
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map_joint),
+            pl.BlockSpec((1, bk, d), kv_map_joint),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),   # l (running sum)
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``use_kernel=False`` (or a non-TPU backend without ``interpret``) falls back
+to the jnp oracle, so models can call :func:`attention_op` unconditionally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention_op"]
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "use_kernel", "interpret"))
+def attention_op(q, k, v, *, causal=True, bq=512, bk=512, use_kernel=True,
+                 interpret=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel and (on_tpu or interpret):
+        return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret or not on_tpu)
+    return attention_ref(q, k, v, causal=causal)

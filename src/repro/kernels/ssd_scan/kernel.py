@@ -1,0 +1,80 @@
+"""SSD inter-chunk state scan (Mamba-2's only sequential dependency) on TPU.
+
+The chunked SSD algorithm (``repro.models.ssm.ssd_chunked``) reduces the
+whole sequence to per-chunk state contributions; what remains sequential is
+the tiny first-order recurrence
+
+    s_{c+1} = s_c * decay_c + states_c            (per (batch, head))
+
+XLA lowers the ``lax.scan`` form as a while loop whose per-step kernels
+re-launch and round-trip the (P, N) state through HBM every chunk.  This
+kernel walks the chunk axis in the GRID (TPU grids execute sequentially per
+core) and keeps the running state in VMEM scratch — one kernel launch, the
+state never leaves VMEM, and each step streams exactly one (P, N) chunk
+contribution in and one out.
+
+Grid: (B·H, C), chunk minor.  Block shapes: states/prev (1, 1, P, N) with
+P=64..128, N=64..256 → MXU/VPU-aligned lanes; decay is a (1, 1) SMEM-like
+block.  VMEM working set: 3 × P·N·4 B ≈ 200 KiB at P=128, N=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(states_ref, decay_ref, prev_ref, final_ref, carry_ref):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    # emit the state ENTERING this chunk, then advance the recurrence
+    prev_ref[0, 0] = carry_ref[...].astype(prev_ref.dtype)
+    carry_ref[...] = (
+        carry_ref[...] * decay_ref[0, 0]
+        + states_ref[0, 0].astype(jnp.float32)
+    )
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        final_ref[0] = carry_ref[...].astype(final_ref.dtype)
+
+
+def ssd_scan(states, decay, *, interpret: bool = False):
+    """states: (B, C, H, P, N); decay: (B, C, H) →
+    (prev_states (B, C, H, P, N), final_state (B, H, P, N))."""
+    b, c, h, p, n = states.shape
+    sts = jnp.moveaxis(states, 2, 1).reshape(b * h, c, p, n)
+    dec = jnp.moveaxis(decay, 2, 1).reshape(b * h, c)
+
+    prev, final = pl.pallas_call(
+        _kernel,
+        grid=(b * h, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, p, n), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, c, p, n), states.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(sts, dec)
+
+    prev = jnp.moveaxis(prev.reshape(b, h, c, p, n), 1, 2)
+    final = final.reshape(b, h, p, n)
+    return prev, final

@@ -1,0 +1,19 @@
+"""jit'd wrapper for the SSD chunk-state scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+__all__ = ["ssd_scan_op"]
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def ssd_scan_op(states, decay, *, use_kernel=True, interpret=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel and (on_tpu or interpret):
+        return ssd_scan(states, decay, interpret=interpret or not on_tpu)
+    return ssd_scan_ref(states, decay)

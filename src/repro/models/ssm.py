@@ -1,0 +1,291 @@
+"""Mamba-2 mixer — state-space duality (SSD) [arXiv:2405.21060].
+
+Full-sequence form is the *chunked* SSD algorithm (intra-chunk quadratic
+attention-like term + inter-chunk state recurrence via ``lax.scan``), which
+is the TPU-friendly formulation: every chunk term is an MXU matmul, and the
+only sequential dependency is the O(S/Q) chunk-state scan.  Decode is the
+O(1) recurrent update.
+
+Layout (n_groups = 1):
+  x       (B, S, H, P)     H = ssm_heads, P = ssm_head_dim
+  dt      (B, S, H)        softplus(raw + dt_bias)
+  A       (H,)             -exp(A_log)
+  B, C    (B, S, N)        N = ssm_state (shared across heads, g=1)
+  state   (B, H, P, N)
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = [
+    "ssm_params",
+    "ssm_forward",
+    "ssm_decode_step",
+    "init_ssm_state",
+    "ssd_chunked",
+    "ssd_reference",
+]
+
+
+def _dims(cfg: ModelConfig):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_inner = H * P
+    d_conv_ch = d_inner + 2 * N  # conv runs over (x, B, C) channels
+    return H, P, N, d_inner, d_conv_ch
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, P, N, d_inner, d_conv_ch = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    out_dim = 2 * d_inner + 2 * N + H
+    p = {
+        "in_proj": dense_init(k1, d, out_dim, cfg.pdtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, d_conv_ch)) /
+                   math.sqrt(cfg.ssm_conv)).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((d_conv_ch,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), cfg.pdtype),
+        "out_proj": dense_init(k3, d_inner, d, cfg.pdtype),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(dA):
+    """segsum(dA)[..., i, j] = sum_{j<k<=i} dA[..., k]  (lower-triangular).
+
+    dA: (..., Q) → (..., Q, Q); exp of this is the intra-chunk decay L.
+    """
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD (Mamba-2 Listing 1, jnp port with g=1 shared B/C).
+
+    x: (b,l,h,p)  dt: (b,l,h)  A: (h,)  B,C: (b,l,n)
+    Returns y: (b,l,h,p), final_state: (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, l) if l < chunk else chunk
+    pad = (-l) % Q
+    if pad:
+        # dt=0 padding is exact: decay exp(0)=1, update dt·x = 0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    l_pad = l + pad
+    c = l_pad // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(b, c, Q, h, p).astype(f32)
+    dtc = dt.reshape(b, c, Q, h).astype(f32)
+    Bc = B.reshape(b, c, Q, n).astype(f32)
+    Cc = C.reshape(b, c, Q, n).astype(f32)
+    del x, dt, B, C
+    dA = dtc * A[None, None, None, :]  # (b,c,Q,h)
+    dA_h = jnp.moveaxis(dA, -1, 2)  # (b,c,h,Q)
+    dA_cs = jnp.cumsum(dA_h, axis=-1)  # (b,c,h,Q)
+
+    # ---- intra-chunk (diagonal blocks): attention-like quadratic term ----
+    L = jnp.exp(_segsum(dA_h))  # (b,c,h,Q,Q)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,c,Q,Q)
+    scores = CB[:, :, None] * L  # (b,c,h,i,j)
+    sx = xc * dtc[..., None]  # dt-weighted input
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, sx)
+
+    # ---- chunk states -----------------------------------------------------
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)  # (b,c,h,Q)
+    states = jnp.einsum("bcqn,bchq,bcqhp->bchpn", Bc, decay_states, sx)
+
+    # ---- inter-chunk recurrence (sequential scan over chunks) -------------
+    chunk_decay = jnp.exp(dA_cs[..., -1])  # (b,c,h)
+    s0 = (
+        jnp.zeros((b, h, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(carry, inp):
+        st_c, dec_c = inp  # (b,h,p,n), (b,h)
+        new = carry * dec_c[:, :, None, None] + st_c
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    # ---- off-diagonal contribution from carried-in states ------------------
+    state_decay = jnp.exp(dA_cs)  # (b,c,h,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l_pad, h, p)[:, :l]
+    return y, final_state
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """O(S·N·P) sequential oracle for tests: plain recurrence."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+    s = (
+        jnp.zeros((b, h, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(state, t):
+        xt, dtt, Bt, Ct = t
+        dA = jnp.exp(dtt * A)  # (b,h)
+        upd = dtt[..., None, None] * xt[..., None] * Bt[:, None, None, :]
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(B.astype(f32), 1, 0),
+        jnp.moveaxis(C.astype(f32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# full mixer (proj → causal depthwise conv → SSD → gate → out)
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(cfg, proj):
+    H, P, N, d_inner, _ = _dims(cfg)
+    z, xin, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xin, B, C, dt
+
+
+def _causal_conv(seq, w, b):
+    """seq: (B, S, Ch); depthwise causal conv, kernel (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def ssm_forward(p: dict, cfg: ModelConfig, x, initial_state=None, return_state=False):
+    """Full-sequence mamba2 mixer.  x: (B,S,d) → (B,S,d)."""
+    cd = cfg.cdtype
+    H, P, N, d_inner, d_conv_ch = _dims(cfg)
+    Bsz, S, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+    z, xin, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                     p["conv_b"].astype(jnp.float32))
+    )
+    xin, Bm, Cm = (
+        conv_out[..., :d_inner],
+        conv_out[..., d_inner : d_inner + N],
+        conv_out[..., d_inner + N :],
+    )
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(Bsz, S, H, P)
+    xh = shard_activation(xh, "dp", None, "model", None)
+    if return_state:
+        # conv tail (pre-activation conv inputs) so decode continues exactly
+        K = cfg.ssm_conv
+        tail = conv_in[:, -(K - 1):].astype(cd)
+        if tail.shape[1] < K - 1:
+            tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+    y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                 initial_state=initial_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(cd)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_w"].astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+    out = shard_activation(out, "dp", None, None)
+    if return_state:
+        return out, {"ssm": final_state, "conv": tail}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers=None):
+    H, P, N, d_inner, d_conv_ch = _dims(cfg)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, d_conv_ch), cfg.cdtype),
+    }
+
+
+def ssm_decode_step(p: dict, cfg: ModelConfig, x, ssm_state, conv_state):
+    """One-token recurrent update.  x: (B,1,d).
+
+    Returns (y, new_ssm_state, new_conv_state).
+    """
+    cd = cfg.cdtype
+    H, P, N, d_inner, d_conv_ch = _dims(cfg)
+    Bsz = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd),
+                      preferred_element_type=jnp.float32).astype(cd)
+    z, xin, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)[:, 0]  # (B, Ch)
+    # roll conv window
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B,K,Ch)
+    new_conv_state = window[:, 1:]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+        + p["conv_b"].astype(jnp.float32)
+    )
+    xin = conv_out[:, :d_inner].reshape(Bsz, H, P)
+    Bm = conv_out[:, d_inner : d_inner + N]
+    Cm = conv_out[:, d_inner + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    upd = dt[..., None, None] * xin.astype(jnp.float32)[..., None] * Bm[:, None, None, :]
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_inner).astype(cd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_w"].astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd),
+                     preferred_element_type=jnp.float32).astype(cd)
+    return out, new_state, new_conv_state

@@ -1,0 +1,148 @@
+"""Inference engine: lane-based KV cache + jitted prefill/decode steps.
+
+The engine owns ``n_lanes`` decode slots (the thread-pool "connections" of
+the paper's Fig. 3, device edition).  Admission inserts a prefilled
+request's KV into a free lane; every engine tick runs ONE batched decode
+step over all lanes (inactive lanes are masked).  The admission policy —
+how many queued requests to prefill together — is the scheduler's call
+(:mod:`repro.serving.scheduler`), where the paper's §5.2 strategies live.
+
+Prefill batches are padded to power-of-two buckets (bounded jit cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Arch
+
+__all__ = ["InferenceEngine"]
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclasses.dataclass
+class InferenceEngine:
+    arch: Arch
+    params: object
+    n_lanes: int = 8
+    max_prompt_len: int = 64
+    max_len: int = 128
+
+    def __post_init__(self):
+        cfg = self.arch.cfg
+        self.cache = self.arch.init_cache(self.n_lanes, self.max_len)
+        self.lengths = jnp.zeros((self.n_lanes,), jnp.int32)
+        self.active = np.zeros((self.n_lanes,), bool)
+        self.last_token = jnp.zeros((self.n_lanes,), jnp.int32)
+        self.free_lanes = list(range(self.n_lanes))
+        self.decode_steps = 0
+        self.prefill_calls = 0
+
+        @partial(jax.jit, static_argnums=())
+        def _decode(params, token, cache, lengths):
+            logits, new_cache = self.arch.decode_step(params, token, cache, lengths)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._decode = _decode
+
+        from repro.models import transformer as _tf
+
+        @partial(jax.jit, static_argnums=(3,))
+        def _prefill(params, tokens, plens, max_len):
+            logits, cache = _tf.prefill(
+                self.arch.cfg, params, tokens=tokens, max_len=max_len,
+                return_all_logits=True,
+            )
+            last = jnp.take_along_axis(
+                logits, (plens - 1)[:, None, None], axis=1
+            )[:, 0]
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        self._prefill = _prefill
+
+    # ------------------------------------------------------------- admission
+    def admit(self, requests: Sequence) -> None:
+        """Prefill ``requests`` as ONE padded batch and insert into lanes.
+
+        One prefill call for k requests is the set-oriented execution: one
+        device dispatch amortized over the batch (vs k single dispatches) —
+        the serving analogue of the paper's batched query.
+        """
+        if not requests:
+            return
+        assert len(requests) <= len(self.free_lanes), "admit() beyond free lanes"
+        bsz = _bucket(len(requests))
+        plen = self.max_prompt_len
+        toks = np.zeros((bsz, plen), np.int32)
+        plens = np.ones((bsz,), np.int32)
+        for i, r in enumerate(requests):
+            p = r.prompt[-plen:]
+            toks[i, : len(p)] = p  # right-pad; causal mask hides pad keys
+            plens[i] = len(p)
+        first, cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(plens), self.max_len
+        )
+        first = np.asarray(first)
+
+        lanes = [self.free_lanes.pop(0) for _ in requests]
+        self.cache = _insert_lanes(self.cache, cache, lanes)
+        lt = np.array(self.last_token)
+        ln = np.array(self.lengths)
+        for i, (r, lane) in enumerate(zip(requests, lanes)):
+            r.lane = lane
+            r.generated.append(int(first[i]))
+            lt[lane] = first[i]
+            ln[lane] = plens[i]  # real prompt length; decode writes here next
+            self.active[lane] = True
+        self.last_token = jnp.asarray(lt)
+        self.lengths = jnp.asarray(ln)
+        self.prefill_calls += 1
+
+    # ----------------------------------------------------------------- tick
+    def decode_tick(self) -> dict[int, int]:
+        """One batched decode step over all lanes → {lane: token}."""
+        if not self.active.any():
+            return {}
+        nxt, self.cache = self._decode(
+            self.params, self.last_token, self.cache, self.lengths
+        )
+        self.lengths = jnp.where(
+            jnp.asarray(self.active), jnp.minimum(self.lengths + 1, self.max_len - 1),
+            self.lengths,
+        )
+        self.last_token = nxt
+        self.decode_steps += 1
+        out = np.asarray(nxt)
+        return {lane: int(out[lane]) for lane in np.nonzero(self.active)[0]}
+
+    def retire(self, lane: int) -> None:
+        self.active[lane] = False
+        self.free_lanes.append(lane)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_lanes)
+
+
+def _insert_lanes(lane_cache, new_cache, lanes: list[int]):
+    """Copy per-request cache entries (batch axis=1 after the layer axis)
+    into lane slots.  Works on the nested {stack: {k,v,ssm,conv}} pytree."""
+    idx = jnp.asarray(lanes)
+
+    def one(dst, src):
+        # dst: (L, B_lanes, ...); src: (L, B_new_bucket, ...)
+        take = src[:, : len(lanes)]
+        return dst.at[:, idx].set(take.astype(dst.dtype))
+
+    return jax.tree_util.tree_map(one, lane_cache, new_cache)

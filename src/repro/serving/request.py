@@ -1,0 +1,44 @@
+"""Serving request objects + per-request latency accounting."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Request", "RequestMetrics"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    arrival: float = 0.0
+    admitted: float = 0.0
+    first_token: float = 0.0
+    finished: float = 0.0
+
+    @property
+    def ttft(self) -> float:  # time to first token (paper: time to k-th response)
+        return self.first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
+    lane: Optional[int] = None
+
+    def __post_init__(self):
+        if self.metrics.arrival == 0.0:
+            self.metrics.arrival = time.perf_counter()
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens

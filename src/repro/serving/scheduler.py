@@ -1,0 +1,133 @@
+"""Continuous batching scheduler — the paper's §5.2 as ML serving.
+
+The decode loop has a *true-dependence cycle* (token t+1 needs token t), so
+device-level Rule A cannot fission it — exactly the paper's inapplicable
+case (§4.1).  The paper's answer is runtime **asynchronous batching**: keep
+requests flowing through a queue and let free capacity decide, adaptively,
+between latency (serve one now) and throughput (batch many).  Continuous
+batching in LLM serving is that same decision made per engine tick, and the
+paper's three strategies transfer verbatim:
+
+  admission per tick = strategy.decide(queue_length, producer_done)
+
+  * PureAsync        → admit one request at a time (latency-optimal ttft
+                       for the head of the queue, poor throughput)
+  * OneOrAll         → admit everything waiting
+  * LowerThreshold   → admit all only when the backlog exceeds bt (batch
+                       setup — a prefill dispatch — costs ~3 decode ticks)
+  * GrowingUpper     → cap admissions at a doubling threshold: small early
+                       batches protect time-to-first-token, large late
+                       batches protect throughput (Fig. 10's ramp)
+
+Admissions are also capped by free lanes (the thread pool size).  The
+scheduler records the per-tick admission trace (= Fig. 10 batch sizes) and
+per-request ttft/latency (= Fig. 11 time-to-k-th-response).
+
+Straggler mitigation: a lane whose request exceeds ``lane_timeout`` decode
+ticks is force-retired and the request re-queued (re-submission, as in the
+runtime's fetch-timeout path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.strategies import BatchingStrategy, PureAsync
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request
+
+__all__ = ["ContinuousBatchingScheduler"]
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    admission_trace: list = dataclasses.field(default_factory=list)  # (tick, n)
+    decode_ticks: int = 0
+    completed: int = 0
+    requeued: int = 0
+
+
+class ContinuousBatchingScheduler:
+    def __init__(
+        self,
+        engine: InferenceEngine,
+        strategy: Optional[BatchingStrategy] = None,
+        lane_timeout: Optional[int] = None,
+    ):
+        self.engine = engine
+        self.strategy = strategy or PureAsync()
+        self.strategy.reset()
+        self.queue: deque[Request] = deque()
+        self.running: dict[int, Request] = {}  # lane -> request
+        self.stats = SchedulerStats()
+        self.lane_timeout = lane_timeout
+        self._lane_age: dict[int, int] = {}
+        self._producer_done = False
+
+    # ------------------------------------------------------------------ api
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def producer_done(self) -> None:
+        self._producer_done = True
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            if not self.queue and not self.running:
+                if self._producer_done:
+                    break
+            done.extend(self.tick())
+        return done
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> list[Request]:
+        """One scheduling round: admit per strategy, one decode step."""
+        # 1) admission — the paper's "how many requests does a free worker
+        # take from the queue" decision.
+        n_free = self.engine.n_free
+        if n_free > 0 and self.queue:
+            want = self.strategy.decide(len(self.queue), self._producer_done)
+            take = min(want, n_free, len(self.queue))
+            if take > 0:
+                batch = [self.queue.popleft() for _ in range(take)]
+                now = time.perf_counter()
+                for r in batch:
+                    r.metrics.admitted = now
+                self.engine.admit(batch)
+                now = time.perf_counter()
+                for r in batch:
+                    r.metrics.first_token = now  # prefill emits token 0
+                    self.running[r.lane] = r
+                    self._lane_age[r.lane] = 0
+                self.stats.admission_trace.append((self.stats.decode_ticks, take))
+
+        # 2) one batched decode step over all active lanes
+        finished: list[Request] = []
+        tokens = self.engine.decode_tick()
+        self.stats.decode_ticks += 1
+        for lane, tok in tokens.items():
+            r = self.running.get(lane)
+            if r is None:
+                continue
+            r.generated.append(tok)
+            self._lane_age[lane] += 1
+            if r.done:
+                r.metrics.finished = time.perf_counter()
+                self.engine.retire(lane)
+                del self.running[lane]
+                finished.append(r)
+                self.stats.completed += 1
+            elif self.lane_timeout and self._lane_age[lane] > self.lane_timeout:
+                # straggler: retire the lane, re-queue the request
+                self.engine.retire(lane)
+                del self.running[lane]
+                r.generated.clear()
+                r.lane = None
+                self.queue.appendleft(r)
+                self.stats.requeued += 1
+        return finished

@@ -1,0 +1,195 @@
+"""AdamW with optional block-quantized 8-bit moments.
+
+8-bit moments (block-wise absmax quantization, block=64 along the flattened
+last axis — the 8-bit-Adam recipe [arXiv:2110.02861] adapted to JAX) cut
+optimizer-state HBM from 8 bytes/param (fp32 m+v) to ~2.1 bytes/param,
+which is what lets kimi-k2-1t (1.03e12 params) train on 512 chips
+(napkin math in EXPERIMENTS.md §Dry-run).  States are stored per-tensor as
+``{"q": int8[...], "scale": f32[..., n_blocks]}``; m uses signed absmax, v
+uses unsigned (v ≥ 0).
+
+Also here: global-norm clipping and the cosine/linear LR schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+_BLOCK = 64
+
+
+# ---------------------------------------------------------------------------
+# block-wise int8 quantization
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_block(x):
+    """Block along the LAST axis, keeping the leading structure intact so
+    the quantized state inherits the parameter's sharding (a flat layout
+    forced whole-fleet reshards of TB-scale tensors in the kimi dry-run —
+    EXPERIMENTS.md §Perf C1)."""
+    last = x.shape[-1]
+    pad = (-last) % _BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(*x.shape[:-1], -1, _BLOCK), pad
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """int8 blocks + fp32 scales; shape/pad/domain are STATIC aux data so
+    the object flows through jit/scan/pjit like any array pair."""
+
+    def __init__(self, q, scale, *, shape, pad, sqrt_domain):
+        self.q = q
+        self.scale = scale
+        self.shape = tuple(shape)
+        self.pad = pad
+        self.sqrt_domain = sqrt_domain
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.pad, self.sqrt_domain)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        shape, pad, sqrt_domain = aux
+        return cls(q, scale, shape=shape, pad=pad, sqrt_domain=sqrt_domain)
+
+
+def _quantize(x, signed: bool = True):
+    """Blockwise absmax int8.  Unsigned tensors (the v moment, v ≥ 0) are
+    stored in the SQRT domain: v spans many orders of magnitude within a
+    block, and linear quantization collapses small entries to exactly 0 —
+    then ``m/(sqrt(v)+eps)`` explodes.  sqrt halves the dynamic range in
+    exponent terms (the same reason bitsandbytes uses a non-linear map)."""
+    if not signed:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    blocks, pad = _pad_to_block(x)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q, scale[..., 0], shape=x.shape, pad=pad,
+                           sqrt_domain=not signed)
+
+
+def _dequantize(s: "QuantizedTensor"):
+    x = s.q.astype(jnp.float32) * s.scale[..., None]
+    x = x.reshape(*s.shape[:-1], -1)  # merge (nb, BLOCK) → padded last axis
+    out = x[..., : s.shape[-1]]
+    if s.sqrt_domain:
+        out = out * out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moments_dtype: str = "float32"  # float32 | int8
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    def one(p):
+        if cfg.moments_dtype == "int8":
+            z = jnp.zeros(p.shape, jnp.float32)
+            return {"m": _quantize(z), "v": _quantize(z, signed=False)}
+        return {
+            "m": jnp.zeros(p.shape, jnp.float32),
+            "v": jnp.zeros(p.shape, jnp.float32),
+        }
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(one, params),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), g
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """→ (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else cfg.lr
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def one(g, mu, p):
+        gf = g.astype(jnp.float32)
+        if cfg.moments_dtype == "int8":
+            m = _dequantize(mu["m"])
+            v = _dequantize(mu["v"])
+        else:
+            m, v = mu["m"], mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m / bc1
+        vhat = v / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        if cfg.moments_dtype == "int8":
+            new_mu = {"m": _quantize(m), "v": _quantize(v, signed=False)}
+        else:
+            new_mu = {"m": m, "v": v}
+        return pf.astype(p.dtype), new_mu
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_p = tdef.flatten_up_to(params)
+    new_p, new_mu = [], []
+    for g, mu, p in zip(flat_g, flat_mu, flat_p):
+        np_, nmu = one(g, mu, p)
+        new_p.append(np_)
+        new_mu.append(nmu)
+    new_params = jax.tree_util.tree_unflatten(tdef, new_p)
+    new_state = {"step": step, "mu": jax.tree_util.tree_unflatten(tdef, new_mu)}
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, float(warmup))
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, float(total - warmup)), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+
+    return fn

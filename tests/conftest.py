@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests and benches must see ONE device — never set
+# xla_force_host_platform_device_count here (the dry-run sets it itself,
+# in its own process).  Multi-device tests spawn subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

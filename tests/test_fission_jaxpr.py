@@ -1,0 +1,310 @@
+"""Device-level Rule A (jaxpr scan fission): semantic equivalence with
+``lax.scan`` across program shapes, autodiff/vmap composition, precondition
+errors, and hypothesis property tests over random scan bodies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.core.fission import (
+    FissionPreconditionError,
+    FissionReport,
+    count_queries,
+    fission_scan,
+    scan_with_queries,
+)
+from repro.core.query import QuerySpec, async_query, register_query, table_gather_spec
+
+TABLE = jax.random.normal(jax.random.PRNGKey(7), (128, 8))
+IDS = (jnp.arange(24) * 5 + 3) % 128
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-5):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), rtol=rtol, atol=atol)
+
+
+def test_basic_equivalence():
+    def body(c, i):
+        row = async_query(table_gather_spec, TABLE, i)
+        return c + row.sum(), row[0]
+
+    ref = lax.scan(body, jnp.float32(0), IDS)
+    out = fission_scan(body, jnp.float32(0), IDS)
+    assert_trees_close(ref, out)
+
+
+def test_report_counts():
+    def body(c, i):
+        r = async_query(table_gather_spec, TABLE, i)
+        return c + r.sum(), None
+
+    rep = FissionReport()
+    fission_scan(body, jnp.float32(0), IDS, report=rep)
+    assert rep.n_queries_found == rep.n_queries_batched == 1
+    assert count_queries(body, jnp.float32(0), IDS) == 1
+
+
+def test_producer_recurrence_allowed():
+    """Example 2's pattern: loop-carried dep entirely on the producer side."""
+
+    def body(carry, i):
+        acc, key = carry
+        key = (key * 7 + 13) % 128
+        row = async_query(table_gather_spec, TABLE, key)
+        return (acc + row.mean(), key), row[:2]
+
+    init = (jnp.float32(0), jnp.int32(3))
+    assert_trees_close(lax.scan(body, init, IDS), fission_scan(body, init, IDS))
+
+
+def test_consumer_recurrence_allowed():
+    """Accumulator over query results: consumer-side recurrence is fine."""
+
+    def body(carry, i):
+        row = async_query(table_gather_spec, TABLE, i)
+        return carry * 0.9 + row.sum(), carry
+
+    assert_trees_close(
+        lax.scan(body, jnp.float32(1), IDS), fission_scan(body, jnp.float32(1), IDS)
+    )
+
+
+def test_cycle_rejected():
+    def body(key, i):
+        row = async_query(table_gather_spec, TABLE, key)
+        return jnp.argmax(row).astype(jnp.int32), row.sum()
+
+    with pytest.raises(FissionPreconditionError):
+        fission_scan(body, jnp.int32(0), IDS)
+
+
+def test_two_independent_queries_both_batched():
+    def body(c, i):
+        r1 = async_query(table_gather_spec, TABLE, i)
+        r2 = async_query(table_gather_spec, TABLE, (i + 7) % 128)
+        return c + r1.sum() + r2.sum(), (r1[0], r2[1])
+
+    rep = FissionReport()
+    ref = lax.scan(body, jnp.float32(0), IDS)
+    out = fission_scan(body, jnp.float32(0), IDS, report=rep)
+    assert_trees_close(ref, out, rtol=1e-4)
+    assert rep.n_queries_batched == 2
+
+
+def test_chained_queries_both_batched():
+    def body(c, i):
+        r1 = async_query(table_gather_spec, TABLE, i)
+        k2 = jnp.abs(r1[0] * 100).astype(jnp.int32) % 128
+        r2 = async_query(table_gather_spec, TABLE, k2)
+        return c + r2.sum(), r2[0]
+
+    rep = FissionReport()
+    assert_trees_close(
+        lax.scan(body, jnp.float32(0), IDS),
+        fission_scan(body, jnp.float32(0), IDS, report=rep),
+        rtol=1e-4,
+    )
+    assert rep.n_queries_batched == 2
+
+
+def test_nested_fission():
+    def inner(c, j):
+        r = async_query(table_gather_spec, TABLE, j)
+        return c + r.sum(), None
+
+    def outer_f(c, i):
+        s, _ = fission_scan(inner, jnp.float32(0), (i + jnp.arange(4)) % 128)
+        r = async_query(table_gather_spec, TABLE, i)
+        return c + s + r[0], s
+
+    def outer_ref(c, i):
+        s, _ = lax.scan(inner, jnp.float32(0), (i + jnp.arange(4)) % 128)
+        r = async_query(table_gather_spec, TABLE, i)
+        return c + s + r[0], s
+
+    assert_trees_close(
+        lax.scan(outer_ref, jnp.float32(0), IDS),
+        fission_scan(outer_f, jnp.float32(0), IDS),
+        rtol=1e-4,
+    )
+
+
+def test_grad_through_fission():
+    def mk(scan):
+        def loss(t):
+            def b(c, i):
+                r = async_query(table_gather_spec, t, i)
+                return c + (r ** 2).sum(), None
+
+            return scan(b, jnp.float32(0), IDS)[0]
+
+        return loss
+
+    g1 = jax.grad(mk(fission_scan))(TABLE)
+    g2 = jax.grad(mk(lax.scan))(TABLE)
+    assert_trees_close(g1, g2)
+
+
+def test_vmap_over_fission():
+    def f(ii):
+        def b(c, i):
+            return c + async_query(table_gather_spec, TABLE, i).sum(), None
+
+        return fission_scan(b, jnp.float32(0), ii)[0]
+
+    batched_ids = jnp.stack([IDS, (IDS + 1) % 128, (IDS + 2) % 128])
+    out = jax.vmap(f)(batched_ids)
+    ref = jnp.stack([f(row) for row in batched_ids])
+    assert_trees_close(out, ref)
+
+
+def test_hlo_hoists_gather_out_of_loop():
+    """Structural proof of the transformation in the compiled HLO: the
+    fissioned program executes ONE batched gather outside every loop, while
+    the baseline fetches a row per iteration inside the while body (XLA
+    lowers the single-row take to a dynamic-slice in the loop — N scalar-
+    driven HBM accesses; exactly what Rule A removes)."""
+    import re
+
+    def _mk(scan):
+        def f(t, ii):
+            return scan(
+                lambda c, i: (c + async_query(table_gather_spec, t, i).sum(), None),
+                jnp.float32(0), ii,
+            )[0]
+
+        return f
+
+    def jaxpr_stats(f):
+        """(top-level gathers, gathers inside scan bodies) of the jaxpr."""
+        jx = jax.make_jaxpr(f)(TABLE, IDS).jaxpr
+
+        def count(j, top):
+            tg, lg = 0, 0
+            for e in j.eqns:
+                name = e.primitive.name
+                if name in ("gather", "take", "async_query"):
+                    if top:
+                        tg += 1
+                    else:
+                        lg += 1
+                elif name == "scan":
+                    stg, slg = count(e.params["jaxpr"].jaxpr, False)
+                    lg += stg + slg
+                elif "jaxpr" in e.params:  # pjit/closed_call wrappers
+                    sub = e.params["jaxpr"]
+                    sub = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    stg, slg = count(sub, top)
+                    tg += stg
+                    lg += slg
+            return tg, lg
+
+        return count(jx, True)
+
+    fg, flg = jaxpr_stats(_mk(fission_scan))
+    bg, blg = jaxpr_stats(_mk(lax.scan))
+    assert fg >= 1 and flg == 0, (fg, flg)  # fission: gather hoisted out
+    assert blg >= 1, (bg, blg)              # baseline: query inside the loop
+
+    # and the compiled artifact has exactly one real gather op
+    txt = jax.jit(_mk(fission_scan)).lower(TABLE, IDS).compile().as_text()
+    assert len(re.findall(r"gather\(", txt)) == 1
+
+
+def test_no_queries_falls_back_to_scan():
+    def body(c, i):
+        return c + i, c
+
+    assert_trees_close(
+        lax.scan(body, jnp.int32(0), IDS), fission_scan(body, jnp.int32(0), IDS)
+    )
+
+
+def test_scan_with_queries_switch():
+    def body(c, i):
+        return c + async_query(table_gather_spec, TABLE, i).sum(), None
+
+    a = scan_with_queries(body, jnp.float32(0), IDS, fission=True)
+    b = scan_with_queries(body, jnp.float32(0), IDS, fission=False)
+    assert_trees_close(a, b)
+
+
+def test_effectful_body_rejected():
+    def body(c, i):
+        jax.debug.print("i={i}", i=i)
+        r = async_query(table_gather_spec, TABLE, i)
+        return c + r.sum(), None
+
+    with pytest.raises(FissionPreconditionError):
+        fission_scan(body, jnp.float32(0), IDS)
+
+
+def test_masked_conditional_query():
+    """Rule B, device form: predication by masking (neutral key + select)."""
+
+    def body(c, i):
+        use = (i % 2) == 0
+        key = jnp.where(use, i, 0)  # neutral key
+        row = async_query(table_gather_spec, TABLE, key)
+        val = jnp.where(use, row.sum(), 0.0)
+        return c + val, val
+
+    assert_trees_close(
+        lax.scan(body, jnp.float32(0), IDS), fission_scan(body, jnp.float32(0), IDS)
+    )
+
+
+# ---------------------------------------------------------------------------
+# property test: random scan bodies
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def scan_body(draw):
+    """Random body: producer chain → query on derived key → consumer chain,
+    with randomized carry usage."""
+    n_carry = draw(st.integers(1, 3))
+    use_prod_rec = draw(st.booleans())
+    use_cons_rec = draw(st.booleans())
+    coefs = [draw(st.floats(0.1, 1.9)) for _ in range(4)]
+    emit_row = draw(st.booleans())
+
+    def body(carry, i):
+        cs = list(carry)
+        if use_prod_rec:
+            cs[0] = cs[0] * coefs[0] + jnp.float32(1.0)
+        key = (i + jnp.int32(cs[0] * 3 if use_prod_rec else 0)) % 128
+        row = async_query(table_gather_spec, TABLE, key)
+        v = (row * coefs[1]).sum()
+        # Never let a consumer value flow into a carry the producer reads
+        # (that would be a genuine true-dependence cycle → correctly raises).
+        if use_cons_rec and n_carry > 1:
+            cs[1] = cs[1] * coefs[2] + v
+        elif not use_prod_rec:
+            cs[-1] = v + coefs[3]
+        elif n_carry > 1:
+            cs[-1] = v + coefs[3]
+        y = row[0] if emit_row else v
+        return tuple(cs), y
+
+    init = tuple(jnp.float32(k + 1) for k in range(n_carry))
+    return body, init
+
+
+@settings(max_examples=25, deadline=None)
+@given(scan_body(), st.integers(2, 24))
+def test_property_fission_equals_scan(bi, n):
+    body, init = bi
+    ids = (jnp.arange(n) * 11 + 2) % 128
+    ref = lax.scan(body, init, ids)
+    out = fission_scan(body, init, ids)
+    assert_trees_close(ref, out, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,291 @@
+"""Paper transformation rules on the host IR: Rule A, Rule B, reordering,
+nested loops, applicability — each checked by executing original vs
+transformed programs against the same deterministic service, plus
+hypothesis property tests over randomly generated programs."""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hir import (
+    Assign,
+    FissionError,
+    If,
+    Interpreter,
+    Loop,
+    Program,
+    Query,
+    analyze_applicability,
+    apply_rule_a,
+    apply_rule_b,
+    build_ddg,
+    transform_program,
+)
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import TableService
+from repro.core.strategies import (
+    GrowingUpperThreshold,
+    LowerThreshold,
+    OneOrAll,
+    PureAsync,
+    PureBatch,
+)
+
+TABLES = {"part": {i: i * 10 + 1 for i in range(1000)}}
+
+
+def add(a, b):
+    return a + b
+
+
+def run_both(prog, inputs, strategy=None, overlap=False, n_threads=4):
+    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+    t = transform_program(prog, overlap=overlap)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=n_threads,
+                           strategy=strategy or OneOrAll())
+    interp = Interpreter(rt)
+    out = interp.run(t, dict(inputs))
+    rt.drain()
+    rt.shutdown()
+    return base, out
+
+
+# ---------------------------------------------------------------------------
+# paper examples
+# ---------------------------------------------------------------------------
+
+
+def example2_program():
+    """Paper Example 2: query + dependent statement in a loop."""
+    return Program(
+        inputs=("categories", "sum"),
+        body=[
+            Loop(item_var="category", iter_var="categories", body=[
+                Query(target="partCount", query_name="part.lookup",
+                      params=("category",)),
+                Assign(target="sum", fn=add, args=("sum", "partCount")),
+            ]),
+        ],
+    )
+
+
+def test_example2_rule_a():
+    base, out = run_both(example2_program(), {"categories": list(range(50)), "sum": 0})
+    assert base["sum"] == out["sum"]
+
+
+def test_example2_overlap():
+    base, out = run_both(example2_program(), {"categories": list(range(50)), "sum": 0},
+                         overlap=True)
+    assert base["sum"] == out["sum"]
+
+
+@pytest.mark.parametrize("strategy", [
+    PureAsync(), OneOrAll(), LowerThreshold(bt=3),
+    GrowingUpperThreshold(initial_upper=4, bt=3),
+])
+def test_example2_all_strategies(strategy):
+    base, out = run_both(example2_program(),
+                         {"categories": list(range(60)), "sum": 0},
+                         strategy=strategy)
+    assert base["sum"] == out["sum"]
+
+
+def test_example6_rule_b_conditional_query():
+    """Paper Example 6: query under an if; Rule B then Rule A."""
+    prog = Program(
+        inputs=("items", "acc", "emitted"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Assign(target="v", fn=lambda i: i % 3, args=("i",)),
+                Assign(target="is0", fn=lambda v: v == 0, args=("v",)),
+                If(pred="is0", then_body=[
+                    Query(target="v", query_name="part.lookup", params=("i",)),
+                    Assign(target="emitted", fn=add, args=("emitted", "v")),
+                ]),
+                Assign(target="acc", fn=add, args=("acc", "v")),
+            ]),
+        ],
+    )
+    inputs = {"items": list(range(40)), "acc": 0, "emitted": 0}
+    base, out = run_both(prog, inputs)
+    assert base["acc"] == out["acc"]
+    assert base["emitted"] == out["emitted"]
+
+
+def test_example4_reordering():
+    """Paper Example 4/5: accumulator write after the query forces
+    statement reordering before fission applies."""
+    prog = Program(
+        inputs=("cats", "total", "maxv"),
+        body=[
+            Loop(item_var="c", iter_var="cats", body=[
+                Query(target="n", query_name="part.lookup", params=("c",)),
+                Assign(target="total", fn=add, args=("total", "n")),
+                Assign(target="maxv", fn=max, args=("maxv", "n")),
+            ]),
+        ],
+    )
+    inputs = {"cats": list(range(30)), "total": 0, "maxv": -1}
+    base, out = run_both(prog, inputs)
+    assert base["total"] == out["total"] and base["maxv"] == out["maxv"]
+    rep = analyze_applicability(prog)
+    assert rep["transformed"] == rep["opportunities"] == 1
+
+
+def test_true_dependence_cycle_rejected():
+    """Query key depends on previous iteration's query result."""
+    prog_loop = Loop(item_var="i", iter_var="items", body=[
+        Query(target="r", query_name="part.lookup", params=("key",)),
+        Assign(target="key", fn=lambda r: r % 100, args=("r",)),
+    ])
+    with pytest.raises(FissionError):
+        apply_rule_a(prog_loop)
+    # transform_program leaves it untouched and running
+    prog = Program(inputs=("items", "key"), body=[prog_loop])
+    inputs = {"items": list(range(10)), "key": 5}
+    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+    t = transform_program(prog)
+    out = Interpreter(TableService(TABLES)).run(t, dict(inputs))
+    assert base["key"] == out["key"]
+    rep = analyze_applicability(prog)
+    assert rep["transformed"] == 0 and rep["opportunities"] == 1
+
+
+def test_nested_loops():
+    prog = Program(
+        inputs=("outer", "inner", "total"),
+        body=[
+            Loop(item_var="i", iter_var="outer", body=[
+                Loop(item_var="j", iter_var="inner", body=[
+                    Assign(target="k", fn=lambda i, j: (i * 7 + j) % 1000,
+                           args=("i", "j")),
+                    Query(target="x", query_name="part.lookup", params=("k",)),
+                    Assign(target="total", fn=add, args=("total", "x")),
+                ]),
+            ]),
+        ],
+    )
+    inputs = {"outer": list(range(6)), "inner": list(range(5)), "total": 0}
+    base, out = run_both(prog, inputs)
+    assert base["total"] == out["total"]
+
+
+def test_updates_db_not_transformed():
+    loop = Loop(item_var="i", iter_var="items", body=[
+        Query(target="r", query_name="part.lookup", params=("i",), updates_db=True),
+    ])
+    with pytest.raises(FissionError):
+        apply_rule_a(loop)
+
+
+def test_two_queries_per_iteration():
+    prog = Program(
+        inputs=("items", "a", "b"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Query(target="x", query_name="part.lookup", params=("i",)),
+                Assign(target="j", fn=lambda x: (x + 3) % 1000, args=("x",)),
+                Query(target="y", query_name="part.lookup", params=("j",)),
+                Assign(target="a", fn=add, args=("a", "x")),
+                Assign(target="b", fn=add, args=("b", "y")),
+            ]),
+        ],
+    )
+    inputs = {"items": list(range(25)), "a": 0, "b": 0}
+    base, out = run_both(prog, inputs)
+    assert base["a"] == out["a"] and base["b"] == out["b"]
+    rep = analyze_applicability(prog)
+    assert rep["opportunities"] == 2 and rep["transformed"] == 2
+
+
+def test_ddg_edges_example2():
+    body = example2_program().body[0].body
+    ddg = build_ddg(body, loop_body=True)
+    kinds = {(e.src, e.dst, e.kind.value) for e in ddg.edges}
+    assert (0, 1, "FD") in kinds          # partCount: query → sum
+    assert any(k[2] == "LAD" for k in kinds)  # loop-carried anti on partCount
+
+
+def test_rule_b_guard_grouping_repr():
+    body = [If(pred="p", then_body=[Assign(target="x", fn=lambda: 1, args=())],
+               else_body=[Assign(target="x", fn=lambda: 2, args=())])]
+    flat = apply_rule_b(body)
+    # cv assign + 2 guarded statements
+    assert len(flat) == 3
+    assert flat[1].guard is not None and flat[2].guard_negated
+
+
+# ---------------------------------------------------------------------------
+# property tests: random programs, transformed ≡ original
+# ---------------------------------------------------------------------------
+
+_OPS = [lambda a, b: a + b, lambda a, b: a - b, lambda a, b: a * b % 997,
+        lambda a, b: max(a, b), lambda a, b: min(a, b)]
+
+
+@st.composite
+def random_loop_program(draw):
+    """Random loop with query + mix of producer/consumer statements."""
+    n_pre = draw(st.integers(0, 3))
+    n_post = draw(st.integers(1, 4))
+    use_if = draw(st.booleans())
+    body = []
+    live = ["i", "seed"]
+    for k in range(n_pre):
+        op = draw(st.sampled_from(_OPS))
+        a = draw(st.sampled_from(live))
+        b = draw(st.sampled_from(live))
+        body.append(Assign(target=f"p{k}", fn=op, args=(a, b)))
+        live.append(f"p{k}")
+    keyvar = draw(st.sampled_from(live))
+    body.append(Assign(target="qkey", fn=lambda a: abs(a) % 1000, args=(keyvar,)))
+    q = Query(target="qres", query_name="part.lookup", params=("qkey",))
+    if use_if:
+        body.append(Assign(target="cond", fn=lambda a: a % 2 == 0, args=(keyvar,)))
+        body.append(If(pred="cond", then_body=[q]))
+        body.append(Assign(target="qres2", fn=lambda c, q_, s: q_ if c else s,
+                           args=("cond", "qres", "seed")))
+        live.append("qres2")
+    else:
+        body.append(q)
+        live.append("qres")
+    for k in range(n_post):
+        op = draw(st.sampled_from(_OPS))
+        a = draw(st.sampled_from(live + ["acc"]))
+        body.append(Assign(target="acc", fn=op, args=("acc", a)))
+    n_items = draw(st.integers(1, 20))
+    return Program(
+        inputs=("items", "acc", "seed", "qres"),
+        body=[Loop(item_var="i", iter_var="items", body=body)],
+    ), n_items
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_loop_program(), st.integers(0, 10_000))
+def test_property_transform_preserves_semantics(prog_items, seed):
+    prog, n_items = prog_items
+    inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
+    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+    t = transform_program(prog)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3, strategy=OneOrAll())
+    out = Interpreter(rt).run(t, dict(inputs))
+    rt.drain()
+    rt.shutdown()
+    assert base["acc"] == out["acc"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_loop_program(), st.integers(0, 10_000))
+def test_property_overlap_preserves_semantics(prog_items, seed):
+    prog, n_items = prog_items
+    inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
+    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+    t = transform_program(prog, overlap=True)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
+    out = Interpreter(rt).run(t, dict(inputs))
+    rt.drain()
+    rt.shutdown()
+    assert base["acc"] == out["acc"]

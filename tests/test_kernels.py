@@ -1,0 +1,168 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes on CPU exactly as it would on the TPU grid)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.batched_gather.kernel import batched_gather
+from repro.kernels.batched_gather.ref import gather_ref
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dt):
+    return (3e-2, 3e-2) if dt == jnp.bfloat16 else (2e-5, 2e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,bq,bk", [
+    (1, 4, 2, 128, 64, 32, 32),
+    (2, 8, 2, 256, 64, 64, 64),
+    (1, 2, 1, 64, 128, 64, 16),
+    (2, 4, 4, 96, 32, 32, 32),   # MHA, non-pow2 seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, hq, hkv, s, d, bq, bk, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d,bk", [
+    (2, 4, 2, 128, 64, 32),
+    (3, 8, 2, 256, 64, 64),
+    (1, 16, 4, 512, 32, 128),
+    (2, 4, 1, 64, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, hq, hkv, t, d, bk, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, t + 1)
+    out = decode_attention_kernel(q, k, v, lengths, bk=bk, interpret=True)
+    ref = decode_ref(q, k, v, lengths)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=rtol, atol=atol)
+
+
+def test_decode_attention_length_edge_cases():
+    """length=1 and length=T (full cache)."""
+    b, hq, hkv, t, d = 2, 4, 2, 64, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, t, hkv, d))
+    v = jax.random.normal(ks[2], (b, t, hkv, d))
+    for lengths in [jnp.array([1, 1]), jnp.array([t, t]), jnp.array([1, t])]:
+        out = decode_attention_kernel(q, k, v, lengths, bk=16, interpret=True)
+        ref = decode_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("v,d,n,bn", [
+    (64, 16, 32, 8), (128, 32, 64, 16), (100, 8, 40, 40), (256, 128, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_batched_gather_sweep(v, d, n, bn, dtype):
+    if dtype == jnp.int32:
+        table = jax.random.randint(KEY, (v, d), 0, 1000)
+    else:
+        table = jax.random.normal(KEY, (v, d), dtype)
+    ids = jax.random.randint(KEY, (n,), 0, v)
+    out = batched_gather(table, ids, bn=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gather_ref(table, ids)))
+
+
+def test_gather_duplicate_and_boundary_ids():
+    table = jax.random.normal(KEY, (32, 8))
+    ids = jnp.array([0, 0, 31, 31, 5, 5, 0, 31])
+    out = batched_gather(table, ids, bn=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gather_ref(table, ids)))
+
+
+@pytest.mark.parametrize("b,c,h,p,n", [
+    (2, 8, 4, 16, 32), (1, 16, 2, 8, 8), (3, 4, 5, 32, 16), (1, 32, 1, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, c, h, p, n, dtype):
+    from repro.kernels.ssd_scan.kernel import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    ks = jax.random.split(KEY, 2)
+    states = jax.random.normal(ks[0], (b, c, h, p, n), dtype)
+    decay = jax.nn.sigmoid(jax.random.normal(ks[1], (b, c, h))).astype(jnp.float32)
+    prev, fin = ssd_scan(states, decay, interpret=True)
+    rprev, rfin = ssd_scan_ref(states, decay)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(prev, np.float32),
+                               np.asarray(rprev, np.float32), rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(rfin),
+                               rtol=rtol, atol=atol)
+
+
+def test_ssd_scan_matches_model_ssd_chunked():
+    """The kernel's semantics == the inter-chunk lax.scan inside
+    models.ssm.ssd_chunked (state entering each chunk + final state)."""
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    b, c, h, p, n = 2, 6, 3, 8, 16
+    ks = jax.random.split(KEY, 2)
+    states = jax.random.normal(ks[0], (b, c, h, p, n))
+    decay = jax.nn.sigmoid(jax.random.normal(ks[1], (b, c, h)))
+
+    def model_scan(states, decay):
+        s0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+        def step(carry, inp):
+            st_c, dec_c = inp
+            return carry * dec_c[:, :, None, None] + st_c, carry
+
+        final, prev = jax.lax.scan(
+            step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay, 1, 0)))
+        return jnp.moveaxis(prev, 0, 1), final
+
+    p1, f1 = ssd_scan_ref(states, decay)
+    p2, f2 = model_scan(states, decay)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-6)
+
+
+def test_ops_wrappers_fall_back_on_cpu():
+    from repro.kernels.batched_gather.ops import gather_op
+    from repro.kernels.decode_attention.ops import decode_op
+    from repro.kernels.flash_attention.ops import attention_op
+
+    q = jax.random.normal(KEY, (1, 4, 64, 32))
+    k = jax.random.normal(KEY, (1, 2, 64, 32))
+    v = jax.random.normal(KEY, (1, 2, 64, 32))
+    out = attention_op(q, k, v, use_kernel=False)
+    # jit vs eager: XLA CPU fuses softmax differently → small numeric drift
+    np.testing.assert_allclose(np.asarray(out), np.asarray(attention_ref(q, k, v)),
+                               rtol=2e-3, atol=2e-3)
+    qd = jax.random.normal(KEY, (2, 4, 32))
+    kd = jax.random.normal(KEY, (2, 64, 2, 32))
+    vd = jax.random.normal(KEY, (2, 64, 2, 32))
+    lens = jnp.array([10, 60])
+    np.testing.assert_allclose(
+        np.asarray(decode_op(qd, kd, vd, lens, use_kernel=False)),
+        np.asarray(decode_ref(qd, kd, vd, lens)), rtol=2e-3, atol=2e-3)
+    t = jax.random.normal(KEY, (100, 16))
+    ids = jnp.arange(50) % 100
+    np.testing.assert_array_equal(np.asarray(gather_op(t, ids, use_kernel=False)),
+                                  np.asarray(gather_ref(t, ids)))

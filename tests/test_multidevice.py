@@ -1,0 +1,123 @@
+"""Multi-device proofs, each in a subprocess with 8 forced host devices:
+
+ * a REDUCED llama-family model actually RUNS a sharded train step on a
+   (data=4, model=2) mesh (not just compiles) and matches the single-device
+   loss;
+ * the production-mesh dry-run machinery lowers + compiles on a small mesh
+   inside the test suite (the full 512-device sweep is the dryrun script).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).parents[1]
+
+
+def run_sub(script: str, timeout=420) -> dict:
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+SHARDED_TRAIN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.registry import get_arch
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.distributed.sharding import param_shardings, mesh_context, logical_to_spec
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+arch = get_arch("llama3-8b")
+arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+key = jax.random.PRNGKey(0)
+toks = jax.random.randint(key, (8, 16), 0, arch.cfg.vocab_size)
+batch = {"tokens": toks, "labels": toks}
+
+# single-device reference
+init_state, step = make_train_step(arch, AdamWConfig(lr=1e-3), TrainStepConfig(donate=False))
+params = arch.init(key)
+state = init_state(params)
+_, _, m_ref = step(params, state, batch)
+
+# sharded execution on a 4x2 mesh
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+p_sh = param_shardings(mesh, jax.eval_shape(lambda: arch.init(key)))
+params_s = jax.device_put(params, p_sh)
+state_s = init_state(params_s)
+b_sh = NamedSharding(mesh, P("data", None))
+batch_s = {k: jax.device_put(v, b_sh) for k, v in batch.items()}
+with mesh_context(mesh):
+    init2, step2 = make_train_step(arch, AdamWConfig(lr=1e-3), TrainStepConfig(donate=False), mesh=mesh)
+    step2 = jax.jit(step2)
+    new_p, new_s, m = step2(params_s, state_s, batch_s)
+    jax.block_until_ready(new_p)
+
+wq = new_p["layers"]["attn"]["wq"]
+print(json.dumps({
+    "loss_ref": float(m_ref["loss"]), "loss_sharded": float(m["loss"]),
+    "n_devices": jax.device_count(),
+    "wq_nshards": len(wq.addressable_shards),
+}))
+"""
+
+
+def test_sharded_train_step_runs_and_matches():
+    res = run_sub(SHARDED_TRAIN)
+    assert res["n_devices"] == 8
+    assert res["wq_nshards"] == 8
+    assert abs(res["loss_ref"] - res["loss_sharded"]) < 1e-3
+
+
+SMALL_DRYRUN = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax, jax.numpy as jnp
+from repro.models.registry import get_arch
+from repro.models.config import ShapeSpec
+from repro.distributed.sharding import param_shardings, mesh_context
+from repro.launch.dryrun import parse_collective_bytes, _input_shardings
+
+arch = get_arch("deepseek-moe-16b")
+arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = ShapeSpec("mini_train", 32, 8, "train")
+specs = arch.input_specs(shape)
+params_sds = jax.eval_shape(lambda: arch.init(jax.random.PRNGKey(0)))
+p_sh = param_shardings(mesh, params_sds)
+in_sh = _input_shardings(mesh, specs)
+
+def fwd(params, batch):
+    logits, aux = arch.forward(params, batch)
+    return logits.mean() + aux
+
+with mesh_context(mesh):
+    lowered = jax.jit(fwd, in_shardings=(p_sh, in_sh)).lower(params_sds, specs)
+    compiled = lowered.compile()
+coll = parse_collective_bytes(compiled.as_text())
+cost = compiled.cost_analysis()
+print(json.dumps({
+    "collective_count": coll["total_count"],
+    "collective_bytes": coll["total_bytes"],
+    "flops": float(cost.get("flops", 0)),
+}))
+"""
+
+
+def test_small_mesh_moe_compiles_with_collectives():
+    res = run_sub(SMALL_DRYRUN)
+    # a TP+EP-sharded MoE forward must contain real collectives
+    assert res["collective_count"] >= 1
+    assert res["collective_bytes"] > 0
+    assert res["flops"] > 0

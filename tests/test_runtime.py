@@ -1,0 +1,181 @@
+"""AsyncQueryRuntime + batching strategies: decision semantics, ordering,
+adaptivity, straggler re-submission, bounded-queue back-off."""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import SimulatedDBService, TableService
+from repro.core.strategies import (
+    GrowingUpperThreshold,
+    LowerThreshold,
+    OneOrAll,
+    PureAsync,
+    PureBatch,
+    from_name,
+)
+
+TABLES = {"t": {i: i * 3 for i in range(10_000)}}
+
+
+# ---------------------------------------------------------------------------
+# strategy.decide semantics (paper §5.2.3)
+# ---------------------------------------------------------------------------
+
+
+def test_pure_async_decides_one():
+    s = PureAsync()
+    assert s.decide(0, False) == 0
+    assert s.decide(1, False) == 1
+    assert s.decide(100, False) == 1
+
+
+def test_pure_batch_waits_for_producer():
+    s = PureBatch()
+    assert s.decide(50, False) == 0  # not until the whole loop has submitted
+    assert s.decide(50, True) == 50
+
+
+def test_one_or_all():
+    s = OneOrAll()
+    assert s.decide(1, False) == 1
+    assert s.decide(7, False) == 7
+
+
+def test_lower_threshold():
+    s = LowerThreshold(bt=3)
+    assert s.decide(2, False) == 1   # at/below bt → individual
+    assert s.decide(3, False) == 1
+    assert s.decide(4, False) == 4   # above bt → take all
+    with pytest.raises(ValueError):
+        LowerThreshold(bt=2)  # paper: bt >= 3 (3 round trips per batch)
+
+
+def test_growing_upper_threshold_doubles():
+    s = GrowingUpperThreshold(initial_upper=4, bt=None)
+    assert s.decide(3, False) == 3       # below upper → all
+    assert s.decide(10, False) == 4      # capped at upper, upper doubles
+    assert s.upper == 8
+    assert s.decide(10, False) == 8      # next cap
+    assert s.upper == 16
+    s.reset()
+    assert s.upper == 4
+
+
+def test_growing_upper_with_lower():
+    s = GrowingUpperThreshold(initial_upper=8, bt=3)
+    assert s.decide(2, False) == 1       # under bt → individual
+    assert s.decide(6, False) == 6
+
+
+def test_from_name():
+    assert isinstance(from_name("async"), PureAsync)
+    assert isinstance(from_name("growing_upper", initial_upper=2), GrowingUpperThreshold)
+    with pytest.raises(KeyError):
+        from_name("nope")
+
+
+# ---------------------------------------------------------------------------
+# runtime behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_submit_fetch_order_and_values():
+    svc = TableService(TABLES)
+    with AsyncQueryRuntime(svc, n_threads=4, strategy=OneOrAll()) as rt:
+        handles = [rt.submit("t.lookup", (i,)) for i in range(200)]
+        results = [rt.fetch(h) for h in handles]
+    assert results == [i * 3 for i in range(200)]
+
+
+def test_batching_actually_batches():
+    svc = TableService(TABLES, latency=0.002)
+    rt = AsyncQueryRuntime(svc, n_threads=2, strategy=LowerThreshold(bt=3))
+    handles = [rt.submit("t.lookup", (i,)) for i in range(100)]
+    rt.drain()
+    assert svc.stats.batches >= 1
+    assert svc.stats.batched_items + svc.stats.single_queries == 100
+    # batch trace recorded sizes
+    assert any(sz > 1 for _, sz in rt.stats.batch_trace)
+    results = [rt.fetch(h) for h in handles]
+    assert results == [i * 3 for i in range(100)]
+    rt.shutdown()
+
+
+def test_pure_batch_single_set_oriented_execution():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=4, strategy=PureBatch())
+    handles = [rt.submit("t.lookup", (i,)) for i in range(50)]
+    rt.producer_done()
+    results = [rt.fetch(h) for h in handles]
+    rt.shutdown()
+    assert results == [i * 3 for i in range(50)]
+    assert svc.stats.batches == 1 and svc.stats.batched_items == 50
+    assert svc.stats.single_queries == 0
+
+
+def test_bounded_queue_backoff():
+    svc = TableService(TABLES, latency=0.005)
+    rt = AsyncQueryRuntime(svc, n_threads=1, strategy=PureAsync(), max_pending=4)
+    t0 = time.perf_counter()
+    handles = [rt.submit("t.lookup", (i,)) for i in range(20)]
+    dt = time.perf_counter() - t0
+    # submissions must have blocked (20 reqs, 5ms each, queue of 4)
+    assert dt > 0.02
+    rt.drain()
+    assert [rt.fetch(h) for h in handles] == [i * 3 for i in range(20)]
+    rt.shutdown()
+
+
+def test_error_propagates_through_fetch():
+    svc = TableService({"t": {}}, queries={"boom": lambda tables, p: 1 / 0})
+    rt = AsyncQueryRuntime(svc, n_threads=1)
+    h = rt.submit("boom", ())
+    with pytest.raises(ZeroDivisionError):
+        rt.fetch(h)
+    rt.shutdown()
+
+
+class _FlakyService(TableService):
+    """First execution of each key hangs (straggler); retries are instant."""
+
+    def __init__(self):
+        super().__init__(TABLES)
+        self._seen = set()
+        self._lock2 = threading.Lock()
+
+    def execute(self, query_name, params):
+        with self._lock2:
+            first = params not in self._seen
+            self._seen.add(params)
+        if first:
+            time.sleep(0.25)
+        return super().execute(query_name, params)
+
+
+def test_straggler_resubmission():
+    svc = _FlakyService()
+    rt = AsyncQueryRuntime(svc, n_threads=3, strategy=PureAsync(),
+                           straggler_timeout=0.05)
+    h = rt.submit("t.lookup", (7,))
+    val = rt.fetch(h)
+    assert val == 21
+    assert rt.stats.resubmissions >= 1
+    rt.shutdown()
+
+
+def test_simulated_db_cost_model():
+    svc = SimulatedDBService(rtt=0.004, single_proc=0.001, batch_proc=0.0001,
+                             batch_fixed=0.001, concurrency=4)
+    t0 = time.perf_counter()
+    svc.execute("q", (1,))
+    single = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.execute_batch("q", [(i,) for i in range(50)])
+    batch = time.perf_counter() - t0
+    # batch of 50 ≈ 3 RTTs + fixed + 50·batch_proc  «  50 single requests
+    assert batch < 50 * single
+    assert svc.stats.round_trips == 1 + 3

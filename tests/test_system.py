@@ -1,0 +1,92 @@
+"""End-to-end behaviour of the paper's system: a program written against a
+blocking query API is mechanically transformed and served by the async
+runtime with adaptive batching — against a *JAX model* as the backing
+service (the ML instantiation), with observable semantics preserved."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hir import (
+    Assign,
+    Interpreter,
+    Loop,
+    Program,
+    Query,
+    transform_program,
+)
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import ModelService, SimulatedDBService
+from repro.core.strategies import GrowingUpperThreshold, LowerThreshold
+
+
+def test_model_service_end_to_end():
+    """The 'database' is a jitted scoring model; the transformed program
+    batches N per-item forwards into few vmapped dispatches."""
+    W = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+
+    def score(x):
+        return jnp.tanh(x @ W).sum()
+
+    svc = ModelService(score)
+    items = [jax.random.normal(jax.random.PRNGKey(i), (16,)) for i in range(40)]
+
+    prog = Program(
+        inputs=("items", "total"),
+        body=[
+            Loop(item_var="x", iter_var="items", body=[
+                Query(target="s", query_name="score", params=("x",)),
+                Assign(target="total", fn=lambda t, s: t + float(s), args=("total", "s")),
+            ]),
+        ],
+    )
+    base = Interpreter(ModelService(score)).run(prog, {"items": items, "total": 0.0})
+
+    t = transform_program(prog, overlap=True)
+    rt = AsyncQueryRuntime(svc, n_threads=2, strategy=LowerThreshold(bt=3))
+    out = Interpreter(rt).run(t, {"items": items, "total": 0.0})
+    rt.drain()
+    rt.shutdown()
+    np.testing.assert_allclose(out["total"], base["total"], rtol=1e-5)
+    # batching actually kicked in: far fewer device dispatches than items
+    assert svc.stats.batches >= 1
+    assert svc.stats.single_queries + svc.stats.batched_items == 40
+
+
+def test_async_faster_than_sync_on_latency_bound_service():
+    """The paper's headline effect: with round-trip-dominated queries the
+    transformed program is significantly faster end-to-end."""
+    def mk():
+        return SimulatedDBService(rtt=4e-3, single_proc=1e-3, batch_proc=5e-5,
+                                  batch_fixed=5e-4, concurrency=8)
+
+    prog = Program(
+        inputs=("keys", "acc"),
+        body=[
+            Loop(item_var="k", iter_var="keys", body=[
+                Query(target="r", query_name="q", params=("k",)),
+                Assign(target="acc", fn=lambda a, r: a + 1, args=("acc", "r")),
+            ]),
+        ],
+    )
+    inputs = {"keys": list(range(60)), "acc": 0}
+
+    t0 = time.perf_counter()
+    base = Interpreter(mk()).run(prog, dict(inputs))
+    t_sync = time.perf_counter() - t0
+
+    tp = transform_program(prog, overlap=True)
+    rt = AsyncQueryRuntime(mk(), n_threads=10,
+                           strategy=GrowingUpperThreshold(initial_upper=8, bt=3))
+    t0 = time.perf_counter()
+    out = Interpreter(rt).run(tp, dict(inputs))
+    rt.drain()
+    t_async = time.perf_counter() - t0
+    rt.shutdown()
+
+    assert out["acc"] == base["acc"] == 60
+    assert t_async < t_sync / 2, (t_sync, t_async)

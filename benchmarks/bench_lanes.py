@@ -1,20 +1,101 @@
-"""Fig. 5 / Fig. 8 — execution time vs number of threads (connections).
+"""Lane benchmarks.
 
-Paper: time drops sharply with threads then plateaus once the server's
-usable concurrency is exhausted.  The simulated DB has concurrency=8, so
-the knee should appear around 8 threads.
+Part 1 (Fig. 5 / Fig. 8) — execution time vs number of threads
+(connections).  Paper: time drops sharply with threads then plateaus once
+the server's usable concurrency is exhausted.  The simulated DB has
+concurrency=8, so the knee should appear around 8 threads.
+
+Part 2 (sharded lanes, beyond the paper) — single-queue vs sharded-lane
+runtime under a mixed-template workload.  Four query templates arrive
+strictly interleaved (A,B,C,D,A,B,...), the worst case for the paper's
+single queue: batches split at the first template boundary, so every batch
+degenerates to size 1.  Sharded lanes batch each template independently.
+Results (mean batch size, wall time, throughput, speedup) go to the CSV
+and to ``results/bench_lanes.json``.
 """
 from __future__ import annotations
 
-from benchmarks.common import CSV, run_variant
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import CSV, make_service, run_variant
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.strategies import LowerThreshold
+
+N_TEMPLATES = 4
+
+
+def run_mixed(sharded: bool, n_requests: int, n_threads: int = 8) -> dict:
+    """Drive one runtime config with an interleaved 4-template workload
+    submitted as a burst (the transformed producer loop's arrival pattern)."""
+    svc = make_service()
+    rt = AsyncQueryRuntime(svc, n_threads=n_threads,
+                           strategy=LowerThreshold(bt=3), sharded=sharded)
+    t0 = time.perf_counter()
+    handles = []
+    for i in range(n_requests):
+        handles.append(rt.submit(f"q{i % N_TEMPLATES}", (i,)))
+    rt.drain()
+    results = [rt.fetch(h) for h in handles]
+    dt = time.perf_counter() - t0
+    rt.shutdown()
+    assert len(results) == n_requests
+    st = rt.stats
+    return {
+        "sharded": sharded,
+        "n_requests": n_requests,
+        "n_threads": n_threads,
+        "wall_s": dt,
+        "throughput_rps": n_requests / dt,
+        "mean_batch_size": st.mean_batch_size,
+        "batch_executions": st.batch_executions,
+        "single_executions": st.single_executions,
+        "lanes": {k: len(v) for k, v in st.lane_traces.items()},
+        "service": svc.stats.snapshot(),
+    }
 
 
 def main(csv: CSV | None = None, quick: bool = False):
     csv = csv or CSV()
+
+    # -- Fig. 5/8: thread scaling ----------------------------------------
     n = 120 if quick else 300
     for threads in (1, 2, 4, 8, 16, 32):
         t, _, _ = run_variant("async", n, n_threads=threads)
         csv.add(f"fig5.async.threads{threads}", f"{t*1e3:.1f}", "ms_total")
+
+    # -- sharded lanes vs single queue, mixed templates ------------------
+    n_mixed = 160 if quick else 400
+    # Burst arrival (the transformed producer loop submits the whole loop's
+    # worth of requests up front): the backlog is fully interleaved, so the
+    # single queue splits every batch at a template boundary.
+    single = run_mixed(sharded=False, n_requests=n_mixed)
+    lanes = run_mixed(sharded=True, n_requests=n_mixed)
+    report = {
+        "workload": f"{N_TEMPLATES} templates, strict interleave, "
+                    f"n={n_mixed}, threads=8, LowerThreshold(bt=3)",
+        "single_queue": single,
+        "sharded_lanes": lanes,
+        "batch_size_ratio": (lanes["mean_batch_size"]
+                             / max(single["mean_batch_size"], 1e-9)),
+        "throughput_ratio": (lanes["throughput_rps"]
+                             / max(single["throughput_rps"], 1e-9)),
+    }
+    csv.add("lanes.single_queue.mean_batch",
+            f"{single['mean_batch_size']:.2f}", "requests")
+    csv.add("lanes.sharded.mean_batch",
+            f"{lanes['mean_batch_size']:.2f}", "requests")
+    csv.add("lanes.single_queue.throughput",
+            f"{single['throughput_rps']:.0f}", "req_per_s")
+    csv.add("lanes.sharded.throughput",
+            f"{lanes['throughput_rps']:.0f}", "req_per_s")
+    csv.add("lanes.batch_size_ratio", f"{report['batch_size_ratio']:.2f}", "x")
+    csv.add("lanes.throughput_ratio", f"{report['throughput_ratio']:.2f}", "x")
+
+    out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
     return csv
 
 

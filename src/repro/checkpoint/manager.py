@@ -118,7 +118,10 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.async_writes = async_writes
-        self._runtime = AsyncQueryRuntime(_FsWriteService(), n_threads=1)
+        # Effectful service: two saves must never coalesce into one write,
+        # so request deduplication is pinned off (see runtime docstring).
+        self._runtime = AsyncQueryRuntime(_FsWriteService(), n_threads=1,
+                                          dedup=False)
         self._pending = []
 
     # ------------------------------------------------------------------ save

@@ -1,48 +1,70 @@
 """AsyncQueryRuntime — the paper's runtime asynchronous-submission framework
-(§4.2, Fig. 3) with asynchronous batching (§5.2).
+(§4.2, Fig. 3) with asynchronous batching (§5.2), generalized to a
+**sharded, multi-lane** runtime for heterogeneous multi-tenant traffic.
 
-Layout mirrors the paper exactly:
+The paper's runtime (and this module's first incarnation) keeps ONE FIFO
+queue and batches "requests that share a query template, split at the first
+boundary".  That is exact for the paper's setting — a single transformed
+loop submits one template with varying params — but it head-of-line blocks
+the moment two templates interleave: a strict A,B,A,B arrival order makes
+every batch degenerate to size 1.  At production scale concurrent users
+issue many templates at once, and SharedDB-style shared execution says the
+win comes from batching *across* concurrent queries.  So:
 
-  * ``submit(query_name, params) -> handle``  (non-blocking ``submitQuery`` /
-    ``stmt.addBatch(ctx)``): enqueue the request keyed by a monotonically
-    increasing loop-context key.
-  * a **thread pool** of ``n_threads`` workers, each holding its own
-    "connection" to the service (the paper: one JDBC connection per thread),
-    monitors the queue.  A free worker asks the :class:`BatchingStrategy`
-    how many pending requests to take:
+  * **Lanes.**  Pending requests are sharded into one lane per query
+    template (``query_name``).  A free worker round-robins over lanes and
+    asks the :class:`BatchingStrategy` how many of THAT lane's pending
+    requests to take — each lane batches independently, so mixed traffic
+    batches per-template instead of serializing.  ``sharded=False``
+    restores the paper's single-queue behaviour (one lane, batches split at
+    template boundaries) for A/B comparison — see
+    ``benchmarks/bench_lanes.py``.
+  * **In-flight deduplication.**  Identical ``(query_name, params)``
+    submissions coalesce onto one pending/in-flight service call whose
+    result fans out to every attached handle (SharedDB-style sharing);
+    ``stats.deduped`` counts coalesced submissions.  Pure queries only —
+    disable with ``dedup=False`` for effectful services.
+  * **Result cache.**  Opt-in LRU (``result_cache_size``) serving repeat
+    submissions of already-completed requests without a service call
+    (``stats.cache_hits``).
+  * **Adaptive feedback.**  Every service call's ``(batch_size, duration)``
+    is reported to ``strategy.observe`` so cost-learning strategies
+    (:class:`~repro.core.strategies.AdaptiveCost`) can fit the service's
+    fixed-vs-per-item cost model online.
 
-        1  → execute individually (pure asynchronous submission)
-        k>1→ rewrite as one set-oriented request: ``service.execute_batch``
-             (the paper's runtime query rewrite), then split the result set.
+The paper-facing API is unchanged:
 
-  * results land in a **cache** keyed by the loop context
-    (``stmt.getResultSet(ctx)`` ≡ ``fetch(handle)``), which blocks until the
-    corresponding request completes.
+  * ``submit(query_name, params) -> handle``  (non-blocking ``submitQuery``)
+  * ``fetch(handle)`` blocks on the result cache keyed by loop context
+  * a thread pool of ``n_threads`` workers ("connections") drains lanes,
+    executing a take of 1 individually and k>1 as one set-oriented
+    ``service.execute_batch`` (the runtime query rewrite), splitting the
+    result set back per request.
 
-Extras needed at production scale (system brief):
+Production extras carried over from the single-queue version:
 
-  * **straggler mitigation**: an optional per-request timeout after which a
-    waiting ``fetch`` *re-submits* the request to the queue so another worker
-    (connection/serving lane) retries; first result wins, duplicates are
-    dropped idempotently.  This is the natural generalization of the paper's
-    thread-pool model to lossy clusters.
+  * **straggler mitigation**: ``fetch`` past ``straggler_timeout``
+    re-submits the request so another lane/connection retries; first
+    result wins, duplicates are dropped idempotently.
   * **bounded queue** (§8 memory overheads): ``submit`` blocks when more
-    than ``max_pending`` requests are outstanding, implementing producer
-    back-off.
-  * **batch-size trace** for Fig. 10-style analysis.
+    than ``max_pending`` requests are outstanding (producer back-off).
+  * **batch-size traces**, now also per lane (``stats.lane_traces``) for
+    Fig. 10-style analysis of each template's ramp.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from collections import deque
-from typing import Any, Optional, Sequence
+from collections import OrderedDict, deque
+from typing import Any, Optional
 
 from repro.core.services import QueryService
 from repro.core.strategies import BatchingStrategy, PureAsync
 
 __all__ = ["Handle", "AsyncQueryRuntime", "RuntimeStats"]
+
+_SINGLE_LANE = "__single__"  # lane key in sharded=False compatibility mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,25 +85,39 @@ class RuntimeStats:
     single_executions: int = 0
     batch_executions: int = 0
     resubmissions: int = 0
+    deduped: int = 0      # submissions coalesced onto a pending/in-flight call
+    cache_hits: int = 0   # submissions served from the completed-result LRU
     batch_trace: list = dataclasses.field(default_factory=list)  # (seq, size)
+    # per-lane (seq, size) traces; lane key == query template (or __single__)
+    lane_traces: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
         d["batch_sizes"] = [s for _, s in self.batch_trace if s > 1]
+        d["mean_batch_size"] = self.mean_batch_size
         return d
 
+    @property
+    def mean_batch_size(self) -> float:
+        if not self.batch_trace:
+            return 0.0
+        return sum(s for _, s in self.batch_trace) / len(self.batch_trace)
 
-class _Pending:
-    __slots__ = ("handle", "params", "inflight")
 
-    def __init__(self, handle: Handle, params: tuple):
-        self.handle = handle
+class _Entry:
+    """One service call's worth of work: a params tuple plus every handle
+    key whose submission coalesced onto it (dedup fan-out)."""
+
+    __slots__ = ("keys", "query_name", "params")
+
+    def __init__(self, key: int, query_name: str, params: tuple):
+        self.keys = [key]
+        self.query_name = query_name
         self.params = params
-        self.inflight = 0
 
 
 class AsyncQueryRuntime:
-    """The runtime library of §4.2 + §5.2.
+    """The runtime library of §4.2 + §5.2, sharded into per-template lanes.
 
     May be used directly (``submit``/``fetch``) or as the service behind the
     HIR :class:`~repro.core.hir.Interpreter` for transformed programs.
@@ -94,6 +130,9 @@ class AsyncQueryRuntime:
         strategy: Optional[BatchingStrategy] = None,
         max_pending: Optional[int] = None,
         straggler_timeout: Optional[float] = None,
+        sharded: bool = True,
+        dedup: bool = True,
+        result_cache_size: int = 0,
     ):
         self.service = service
         self.strategy = strategy or PureAsync()
@@ -101,8 +140,13 @@ class AsyncQueryRuntime:
         self.n_threads = n_threads
         self.max_pending = max_pending
         self.straggler_timeout = straggler_timeout
+        self.sharded = sharded
+        self.dedup = dedup
 
-        self._queue: deque[_Pending] = deque()
+        # lane key -> deque[_Entry]; insertion-ordered for round-robin
+        self._lanes: "OrderedDict[str, deque[_Entry]]" = OrderedDict()
+        self._rr = 0  # round-robin cursor over lanes
+        self._n_pending = 0  # total queued entries across lanes
         self._results: dict[int, Any] = {}
         self._errors: dict[int, BaseException] = {}
         self._lock = threading.Lock()
@@ -111,7 +155,13 @@ class AsyncQueryRuntime:
         self._next_key = 0
         self._producer_done = False
         self._shutdown = False
+        # dedup registries: request identity -> live entry
+        self._queued_by_req: dict[tuple, _Entry] = {}
+        self._inflight_by_req: dict[tuple, _Entry] = {}
+        # handle key -> (query_name, params) while unresolved (stragglers)
         self._inflight_params: dict[int, tuple] = {}
+        self._cache: "OrderedDict[tuple, Any]" = OrderedDict()
+        self._cache_size = result_cache_size
         self.stats = RuntimeStats()
 
         self._threads = [
@@ -126,9 +176,13 @@ class AsyncQueryRuntime:
         """Non-blocking query submission (``submitQuery``).  Blocks only when
         the bounded queue is full (§8 producer back-off)."""
         with self._lock:
+            # §8 back-off bounds OUTSTANDING requests (submitted, unresolved)
+            # rather than queued entries, so coalesced duplicates — which
+            # enqueue nothing but still hold a handle, a registry slot and
+            # eventually a result — cannot grow memory past the bound either.
             while (
                 self.max_pending is not None
-                and len(self._queue) >= self.max_pending
+                and self.stats.submitted - self.stats.completed >= self.max_pending
                 and not self._shutdown
             ):
                 self._done_cv.wait(timeout=0.1)
@@ -136,9 +190,33 @@ class AsyncQueryRuntime:
                 raise RuntimeError("runtime is shut down")
             handle = Handle(self._next_key, query_name)
             self._next_key += 1
-            self._queue.append(_Pending(handle, params))
             self.stats.submitted += 1
             self._producer_done = False
+
+            req = self._req_key(query_name, params)
+            # 1) completed-result cache (SharedDB-style reuse across time)
+            if req is not None and self._cache_size and req in self._cache:
+                self._cache.move_to_end(req)
+                self._results[handle.key] = self._cache[req]
+                self.stats.cache_hits += 1
+                self.stats.completed += 1
+                self._done_cv.notify_all()
+                return handle
+            # 2) in-flight/pending dedup (sharing across concurrent users)
+            if req is not None and self.dedup:
+                live = self._queued_by_req.get(req) or self._inflight_by_req.get(req)
+                if live is not None:
+                    live.keys.append(handle.key)
+                    self._inflight_params[handle.key] = (query_name, params)
+                    self.stats.deduped += 1
+                    return handle
+            # 3) enqueue on this template's lane
+            entry = _Entry(handle.key, query_name, params)
+            if req is not None and self.dedup:
+                self._queued_by_req[req] = entry
+            self._inflight_params[handle.key] = (query_name, params)
+            self._lane_for(query_name).append(entry)
+            self._n_pending += 1
             self._work_cv.notify()
         return handle
 
@@ -203,68 +281,137 @@ class AsyncQueryRuntime:
         return False
 
     # ------------------------------------------------------------ internals
+    def _req_key(self, query_name: str, params: tuple) -> Optional[tuple]:
+        """Request identity for dedup/caching; None if params unhashable."""
+        try:
+            hash(params)
+        except TypeError:
+            return None
+        return (query_name, params)
+
+    def _lane_key(self, query_name: str) -> str:
+        return query_name if self.sharded else _SINGLE_LANE
+
+    def _lane_for(self, query_name: str) -> deque:
+        lk = self._lane_key(query_name)
+        lane = self._lanes.get(lk)
+        if lane is None:
+            lane = self._lanes[lk] = deque()
+            self.stats.lane_traces.setdefault(lk, [])
+        return lane
+
     def _resubmit_locked(self, handle: Handle) -> None:
-        for p in self._queue:
-            if p.handle.key == handle.key:
+        qp = self._inflight_params.get(handle.key)
+        if qp is None:
+            return  # already resolved
+        query_name, params = qp
+        lane = self._lane_for(query_name)
+        for e in lane:
+            if handle.key in e.keys:
                 return  # already pending again
-        # Need original params: look in the inflight registry.
-        params = self._inflight_params.get(handle.key)
-        if params is None:
-            return
-        self._queue.append(_Pending(handle, params))
+        # Bypass dedup on purpose: the point is a racing duplicate call.
+        lane.append(_Entry(handle.key, query_name, params))
+        self._n_pending += 1
         self.stats.resubmissions += 1
         self._work_cv.notify()
+
+    def _pick_locked(self) -> Optional[tuple]:
+        """Round-robin over lanes; first lane whose strategy grants a take
+        yields ``(query_name, [entries])``.  None → nothing to do."""
+        keys = list(self._lanes.keys())
+        if not keys:
+            return None
+        n_lanes = len(keys)
+        for off in range(n_lanes):
+            lk = keys[(self._rr + off) % n_lanes]
+            lane = self._lanes[lk]
+            if not lane:
+                continue
+            take = self.strategy.decide(len(lane), self._producer_done)
+            if take <= 0:
+                continue
+            self._rr = (self._rr + off + 1) % n_lanes
+            take = min(take, len(lane))
+            # Batches must share a query template.  Sharded lanes are
+            # homogeneous by construction; the single-queue compatibility
+            # mode splits at the first boundary (the paper's behaviour).
+            first_q = lane[0].query_name
+            picked: list[_Entry] = []
+            while lane and len(picked) < take:
+                if lane[0].query_name != first_q:
+                    break
+                entry = lane.popleft()
+                rk = self._req_key(entry.query_name, entry.params)
+                if rk is not None and self._queued_by_req.get(rk) is entry:
+                    del self._queued_by_req[rk]
+                if self.dedup and rk is not None \
+                        and rk not in self._inflight_by_req:
+                    self._inflight_by_req[rk] = entry
+                picked.append(entry)
+            self._n_pending -= len(picked)
+            if not lane:
+                # GC empty lanes so high-cardinality template churn doesn't
+                # grow the round-robin scan (traces keep the history).
+                del self._lanes[lk]
+            seq = self.stats.single_executions + self.stats.batch_executions
+            self.stats.batch_trace.append((seq, len(picked)))
+            self.stats.lane_traces.setdefault(lk, []).append((seq, len(picked)))
+            if len(picked) == 1:
+                self.stats.single_executions += 1
+            else:
+                self.stats.batch_executions += 1
+            return first_q, picked
+        return None
 
     def _worker(self) -> None:
         while True:
             with self._lock:
-                take = 0
+                work = None
                 while not self._shutdown:
-                    n = len(self._queue)
-                    take = self.strategy.decide(n, self._producer_done) if n else 0
-                    if take > 0:
-                        break
+                    if self._n_pending:
+                        work = self._pick_locked()
+                        if work is not None:
+                            break
                     self._work_cv.wait(timeout=0.05)
                 if self._shutdown:
                     return
-                take = min(take, len(self._queue))
-                # Requests in one batch must share a query template; split at
-                # the first boundary (the paper: same query, varying params).
-                first_q = self._queue[0].handle.query_name
-                picked: list[_Pending] = []
-                while self._queue and len(picked) < take:
-                    if self._queue[0].handle.query_name != first_q:
-                        break
-                    p = self._queue.popleft()
-                    p.inflight += 1
-                    self._inflight_params[p.handle.key] = p.params
-                    picked.append(p)
-                seq = self.stats.single_executions + self.stats.batch_executions
-                self.stats.batch_trace.append((seq, len(picked)))
-                if len(picked) == 1:
-                    self.stats.single_executions += 1
-                else:
-                    self.stats.batch_executions += 1
+            query_name, picked = work
 
+            t0 = time.perf_counter()
             try:
                 if len(picked) == 1:
-                    out = [self.service.execute(first_q, picked[0].params)]
+                    out = [self.service.execute(query_name, picked[0].params)]
                 else:
                     out = self.service.execute_batch(
-                        first_q, [p.params for p in picked]
+                        query_name, [e.params for e in picked]
                     )
                 err = None
             except BaseException as e:  # noqa: BLE001 — propagate via fetch
                 out, err = None, e
+            if err is None:
+                # Failed calls (often fast-failing) would corrupt a learned
+                # cost model — only successful durations are evidence.
+                self.strategy.observe(len(picked), time.perf_counter() - t0)
 
             with self._lock:
-                for i, p in enumerate(picked):
-                    if p.handle.key in self._results or p.handle.key in self._errors:
-                        continue  # straggler duplicate: first result won
-                    if err is not None:
-                        self._errors[p.handle.key] = err
-                    else:
-                        self._results[p.handle.key] = out[i]
-                    self.stats.completed += 1
-                    self._inflight_params.pop(p.handle.key, None)
+                for i, entry in enumerate(picked):
+                    rk = self._req_key(entry.query_name, entry.params)
+                    if rk is not None and self._inflight_by_req.get(rk) is entry:
+                        del self._inflight_by_req[rk]
+                    if err is None and rk is not None and self._cache_size:
+                        self._cache[rk] = out[i]
+                        self._cache.move_to_end(rk)
+                        while len(self._cache) > self._cache_size:
+                            self._cache.popitem(last=False)
+                    # Fan the result out to every coalesced handle; straggler
+                    # duplicates may already be resolved — first result wins.
+                    for key in entry.keys:
+                        if key in self._results or key in self._errors:
+                            continue
+                        if err is not None:
+                            self._errors[key] = err
+                        else:
+                            self._results[key] = out[i]
+                        self.stats.completed += 1
+                        self._inflight_params.pop(key, None)
                 self._done_cv.notify_all()

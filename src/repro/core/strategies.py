@@ -16,12 +16,25 @@ paper's:
   batches amortize (§5.2.3).  Orthogonal to the lower threshold; the class
   composes both, as the paper notes.
 
+Beyond the paper's static strategies:
+
+* :class:`AdaptiveCost` — learns the service's cost structure online.  The
+  paper fixes ``bt >= 3`` from SQL's 3-round-trip batch overhead; a generic
+  service (Web API, model server) has an *unknown* fixed overhead ``F`` and
+  per-item cost ``c`` for batches, and single-request latency ``s``.  The
+  runtime reports every call's ``(batch_size, duration)`` back through
+  :meth:`observe`; the strategy fits ``T_batch(n) = F + n·c`` by
+  exponentially-weighted least squares and keeps an EWMA of ``s``, then
+  batches exactly when predicted batch time beats individual submission:
+  ``F + n·c < n·s  ⇔  n > F/(s − c)`` — a *learned* lower threshold.
+
 ``decide`` receives the full queue state; returning ``0`` means "wait".
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+from typing import Optional
 
 __all__ = [
     "BatchingStrategy",
@@ -30,6 +43,7 @@ __all__ = [
     "OneOrAll",
     "LowerThreshold",
     "GrowingUpperThreshold",
+    "AdaptiveCost",
     "from_name",
 ]
 
@@ -42,6 +56,10 @@ class BatchingStrategy:
 
     def reset(self) -> None:  # per-run state (e.g. growing threshold)
         pass
+
+    def observe(self, batch_size: int, duration: float) -> None:
+        """Feedback from the runtime after each service call.  Static
+        strategies ignore it; adaptive ones learn from it."""
 
 
 @dataclasses.dataclass
@@ -129,6 +147,114 @@ class GrowingUpperThreshold(BatchingStrategy):
         )
 
 
+class AdaptiveCost(BatchingStrategy):
+    """Cost-model-based adaptive batching (learned lower threshold).
+
+    Model (times in seconds, learned online from :meth:`observe`):
+
+      * ``s``  — EWMA latency of single-request executions;
+      * ``F, c`` — intercept/slope of ``T_batch(n) = F + n·c``, fit by
+        exponentially-decayed least squares over batched executions.
+
+    Draining ``n`` pending requests costs ``n·s`` submitted individually
+    (one connection, serialized) vs ``F + n·c`` as one set-oriented call, so
+    batching wins iff ``n > F/(s − c)``.  ``decide`` takes everything when
+    the backlog clears that learned threshold, else one.
+
+    Until ``min_samples`` observations of each kind exist the strategy
+    *explores*: it alternates single executions and take-all batches so both
+    sides of the model get data (and batch sizes vary enough to identify the
+    slope).  If the data says batching never pays (``s <= c``) it degrades
+    to pure async.
+    """
+
+    def __init__(self, alpha: float = 0.3, min_samples: int = 3,
+                 max_take: Optional[int] = None):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self.min_samples = min_samples
+        self.max_take = max_take
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with getattr(self, "_lock", threading.Lock()):
+            self._s: Optional[float] = None  # EWMA single latency
+            self._n_single = 0
+            self._n_batch = 0
+            # decayed least-squares moments for T(n) = F + n*c
+            self._w = self._sn = self._st = self._snt = self._snn = 0.0
+            self._explore_flip = False
+
+    # ------------------------------------------------------------- learning
+    def observe(self, batch_size: int, duration: float) -> None:
+        with self._lock:
+            if batch_size <= 1:
+                self._n_single += 1
+                self._s = (
+                    duration if self._s is None
+                    else (1 - self.alpha) * self._s + self.alpha * duration
+                )
+                return
+            self._n_batch += 1
+            d = 1 - self.alpha  # decay old evidence
+            self._w = self._w * d + 1.0
+            self._sn = self._sn * d + batch_size
+            self._st = self._st * d + duration
+            self._snt = self._snt * d + batch_size * duration
+            self._snn = self._snn * d + batch_size * batch_size
+
+    def estimates(self) -> Optional[tuple]:
+        """``(F, c, s)`` once enough evidence exists, else ``None``."""
+        with self._lock:
+            if (self._s is None or self._n_single < self.min_samples
+                    or self._n_batch < self.min_samples or self._w <= 0):
+                return None
+            mean_n = self._sn / self._w
+            mean_t = self._st / self._w
+            var_n = self._snn / self._w - mean_n * mean_n
+            if var_n <= 1e-12:  # all batches same size: slope unidentifiable
+                return None
+            cov = self._snt / self._w - mean_n * mean_t
+            c = cov / var_n
+            f = mean_t - c * mean_n
+            return max(f, 0.0), max(c, 0.0), self._s
+
+    @property
+    def threshold(self) -> Optional[float]:
+        """The learned batching threshold ``F/(s − c)`` (``inf`` when
+        batching never pays; ``None`` while still exploring)."""
+        est = self.estimates()
+        if est is None:
+            return None
+        f, c, s = est
+        if s <= c:
+            return float("inf")
+        return f / (s - c)
+
+    # ------------------------------------------------------------- decision
+    def decide(self, n_pending: int, producer_done: bool) -> int:
+        if n_pending == 0:
+            return 0
+        cap = self.max_take or n_pending
+        bt = self.threshold
+        if bt is None:  # explore: feed both sides of the cost model
+            if n_pending == 1:
+                return 1
+            with self._lock:
+                self._explore_flip = not self._explore_flip
+                take_all = self._explore_flip
+            return min(n_pending, cap) if take_all else 1
+        if bt == float("inf"):
+            return 1
+        return min(n_pending, cap) if n_pending > bt else 1
+
+    def __repr__(self) -> str:
+        return (f"AdaptiveCost(alpha={self.alpha}, "
+                f"min_samples={self.min_samples}, threshold={self.threshold})")
+
+
 def from_name(name: str, **kw) -> BatchingStrategy:
     table = {
         "async": PureAsync,
@@ -136,6 +262,7 @@ def from_name(name: str, **kw) -> BatchingStrategy:
         "one_or_all": OneOrAll,
         "lower_threshold": LowerThreshold,
         "growing_upper": GrowingUpperThreshold,
+        "adaptive": AdaptiveCost,
     }
     try:
         return table[name](**kw)

@@ -312,13 +312,14 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)  # static (per-program-text) counts
 
     # Loop-aware per-device cost: XLA's cost_analysis reports while bodies
     # once; analyze_hlo multiplies by trip counts (see hlo_cost.py).
-    from repro.launch.hlo_cost import analyze_hlo
+    from repro.launch.hlo_cost import analyze_hlo, cost_analysis_dict
+
+    cost = cost_analysis_dict(compiled)
 
     lcost = analyze_hlo(hlo)
     flops = lcost.flops

@@ -72,7 +72,7 @@ class InferenceEngine:
         self._prefill = _prefill
 
     # ------------------------------------------------------------- admission
-    def admit(self, requests: Sequence) -> None:
+    def admit(self, requests: Sequence) -> tuple[int, int]:
         """Prefill ``requests`` as ONE padded batch and insert into lanes.
 
         One prefill call for k requests is the set-oriented execution: one
@@ -80,14 +80,18 @@ class InferenceEngine:
         the serving analogue of the paper's batched query.
         """
         if not requests:
-            return
+            return (0, 0)
         assert len(requests) <= len(self.free_lanes), "admit() beyond free lanes"
         bsz = _bucket(len(requests))
-        plen = self.max_prompt_len
+        # Bucket the prompt axis to the batch's longest (truncated) prompt:
+        # lane-homogeneous admission (scheduler groups by template) means
+        # short-prompt classes prefill at e.g. 8 wide instead of always
+        # max_prompt_len — right-padding + causal mask keeps logits exact.
+        prompts = [r.prompt[-self.max_prompt_len:] for r in requests]
+        plen = min(self.max_prompt_len, _bucket(max(len(p) for p in prompts)))
         toks = np.zeros((bsz, plen), np.int32)
         plens = np.ones((bsz,), np.int32)
-        for i, r in enumerate(requests):
-            p = r.prompt[-plen:]
+        for i, p in enumerate(prompts):
             toks[i, : len(p)] = p  # right-pad; causal mask hides pad keys
             plens[i] = len(p)
         first, cache = self._prefill(
@@ -108,6 +112,7 @@ class InferenceEngine:
         self.last_token = jnp.asarray(lt)
         self.lengths = jnp.asarray(ln)
         self.prefill_calls += 1
+        return bsz, plen  # padded bucket actually dispatched (cost feedback)
 
     # ----------------------------------------------------------------- tick
     def decode_tick(self) -> dict[int, int]:

@@ -34,6 +34,10 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
     lane: Optional[int] = None
+    # Query template (runtime lane key): requests sharing a template are
+    # admitted/prefilled together, so heterogeneous traffic (chat vs embed vs
+    # summarize) batches per class instead of head-of-line blocking.
+    template: str = "default"
 
     def __post_init__(self):
         if self.metrics.arrival == 0.0:

@@ -6,7 +6,7 @@ case (§4.1).  The paper's answer is runtime **asynchronous batching**: keep
 requests flowing through a queue and let free capacity decide, adaptively,
 between latency (serve one now) and throughput (batch many).  Continuous
 batching in LLM serving is that same decision made per engine tick, and the
-paper's three strategies transfer verbatim:
+paper's strategies transfer verbatim:
 
   admission per tick = strategy.decide(queue_length, producer_done)
 
@@ -18,10 +18,19 @@ paper's three strategies transfer verbatim:
   * GrowingUpper     → cap admissions at a doubling threshold: small early
                        batches protect time-to-first-token, large late
                        batches protect throughput (Fig. 10's ramp)
+  * AdaptiveCost     → learns prefill fixed-vs-per-item cost from observed
+                       admit() durations and batches when it pays
 
-Admissions are also capped by free lanes (the thread pool size).  The
-scheduler records the per-tick admission trace (= Fig. 10 batch sizes) and
-per-request ttft/latency (= Fig. 11 time-to-k-th-response).
+Like the sharded :class:`~repro.core.runtime.AsyncQueryRuntime`, pending
+requests are held in one lane per :attr:`Request.template`: each admission
+batch is drawn from a single template's lane (homogeneous prompts bucket
+tighter in the padded prefill), and mixed traffic classes stop head-of-line
+blocking each other.  The strategy is consulted per lane; admission
+round-robins over lanes while engine slots remain free.
+
+The scheduler records the per-tick admission trace (= Fig. 10 batch sizes,
+also split per lane) and per-request ttft/latency (= Fig. 11
+time-to-k-th-response).
 
 Straggler mitigation: a lane whose request exceeds ``lane_timeout`` decode
 ticks is force-retired and the request re-queued (re-submission, as in the
@@ -31,10 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Optional, Sequence
-
-import numpy as np
+from collections import OrderedDict, deque
+from typing import Optional
 
 from repro.core.strategies import BatchingStrategy, PureAsync
 from repro.serving.engine import InferenceEngine
@@ -46,6 +53,8 @@ __all__ = ["ContinuousBatchingScheduler"]
 @dataclasses.dataclass
 class SchedulerStats:
     admission_trace: list = dataclasses.field(default_factory=list)  # (tick, n)
+    # per-template (tick, n) admission traces (runtime lane analogue)
+    lane_admissions: dict = dataclasses.field(default_factory=dict)
     decode_ticks: int = 0
     completed: int = 0
     requeued: int = 0
@@ -61,16 +70,26 @@ class ContinuousBatchingScheduler:
         self.engine = engine
         self.strategy = strategy or PureAsync()
         self.strategy.reset()
-        self.queue: deque[Request] = deque()
+        # template -> pending requests; insertion-ordered for round-robin
+        self.queues: "OrderedDict[str, deque[Request]]" = OrderedDict()
         self.running: dict[int, Request] = {}  # lane -> request
         self.stats = SchedulerStats()
         self.lane_timeout = lane_timeout
         self._lane_age: dict[int, int] = {}
+        self._rr = 0  # round-robin cursor over template lanes
+        self._warm_shapes: set = set()  # prefill buckets already compiled
         self._producer_done = False
 
     # ------------------------------------------------------------------ api
     def submit(self, request: Request) -> None:
-        self.queue.append(request)
+        q = self.queues.get(request.template)
+        if q is None:
+            q = self.queues[request.template] = deque()
+        q.append(request)
+
+    @property
+    def n_queued(self) -> int:
+        return sum(len(q) for q in self.queues.values())
 
     def producer_done(self) -> None:
         self._producer_done = True
@@ -78,7 +97,7 @@ class ContinuousBatchingScheduler:
     def run_until_drained(self, max_ticks: int = 100_000) -> list[Request]:
         done: list[Request] = []
         for _ in range(max_ticks):
-            if not self.queue and not self.running:
+            if not self.n_queued and not self.running:
                 if self._producer_done:
                     break
             done.extend(self.tick())
@@ -86,25 +105,54 @@ class ContinuousBatchingScheduler:
 
     # ----------------------------------------------------------------- tick
     def tick(self) -> list[Request]:
-        """One scheduling round: admit per strategy, one decode step."""
+        """One scheduling round: admit per strategy (per lane), one decode
+        step."""
         # 1) admission — the paper's "how many requests does a free worker
-        # take from the queue" decision.
-        n_free = self.engine.n_free
-        if n_free > 0 and self.queue:
-            want = self.strategy.decide(len(self.queue), self._producer_done)
-            take = min(want, n_free, len(self.queue))
-            if take > 0:
-                batch = [self.queue.popleft() for _ in range(take)]
-                now = time.perf_counter()
-                for r in batch:
-                    r.metrics.admitted = now
-                self.engine.admit(batch)
-                now = time.perf_counter()
-                for r in batch:
-                    r.metrics.first_token = now  # prefill emits token 0
-                    self.running[r.lane] = r
-                    self._lane_age[r.lane] = 0
-                self.stats.admission_trace.append((self.stats.decode_ticks, take))
+        # take from the queue" decision, asked once per template lane while
+        # engine slots remain free.
+        templates = list(self.queues.keys())
+        n_lanes = len(templates)
+        rr0 = self._rr  # snapshot: each lane is consulted at most once a tick
+        for off in range(n_lanes):
+            if self.engine.n_free == 0:
+                break
+            tmpl = templates[(rr0 + off) % n_lanes]
+            q = self.queues[tmpl]
+            if not q:
+                continue
+            want = self.strategy.decide(len(q), self._producer_done)
+            take = min(want, self.engine.n_free, len(q))
+            if take <= 0:
+                continue
+            self._rr = (rr0 + off + 1) % n_lanes  # next tick starts past us
+            batch = [q.popleft() for _ in range(take)]
+            if not q:
+                # GC drained lanes (mirrors the runtime): high-cardinality
+                # template churn must not grow the per-tick scan.
+                del self.queues[tmpl]
+            now = time.perf_counter()
+            for r in batch:
+                r.metrics.admitted = now
+            t0 = time.perf_counter()
+            shape = self.engine.admit(batch)
+            dt = time.perf_counter() - t0
+            # Adaptive feedback: the first admit of a bucket shape pays XLA
+            # compilation — an outlier that would blow up a learned fixed
+            # cost, so only steady-state admits are observed, sized by the
+            # padded bucket the device actually dispatched.
+            if shape in self._warm_shapes:
+                self.strategy.observe(shape[0], dt)
+            else:
+                self._warm_shapes.add(shape)
+            now = time.perf_counter()
+            for r in batch:
+                r.metrics.first_token = now  # prefill emits token 0
+                self.running[r.lane] = r
+                self._lane_age[r.lane] = 0
+            self.stats.admission_trace.append((self.stats.decode_ticks, take))
+            self.stats.lane_admissions.setdefault(tmpl, []).append(
+                (self.stats.decode_ticks, take)
+            )
 
         # 2) one batched decode step over all active lanes
         finished: list[Request] = []
@@ -128,6 +176,9 @@ class ContinuousBatchingScheduler:
                 del self.running[lane]
                 r.generated.clear()
                 r.lane = None
-                self.queue.appendleft(r)
+                rq = self.queues.get(r.template)
+                if rq is None:  # lane may have been GC'd since admission
+                    rq = self.queues[r.template] = deque()
+                rq.appendleft(r)
                 self.stats.requeued += 1
         return finished

@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade gracefully: property tests skip, rest run
+    HAVE_HYPOTHESIS = False
 from jax import lax
 
 from repro.core.fission import (
@@ -268,43 +273,49 @@ def test_masked_conditional_query():
 # ---------------------------------------------------------------------------
 
 
-@st.composite
-def scan_body(draw):
-    """Random body: producer chain → query on derived key → consumer chain,
-    with randomized carry usage."""
-    n_carry = draw(st.integers(1, 3))
-    use_prod_rec = draw(st.booleans())
-    use_cons_rec = draw(st.booleans())
-    coefs = [draw(st.floats(0.1, 1.9)) for _ in range(4)]
-    emit_row = draw(st.booleans())
+if HAVE_HYPOTHESIS:  # CI installs hypothesis (pip install -e .[dev])
+    @st.composite
+    def scan_body(draw):
+        """Random body: producer chain → query on derived key → consumer chain,
+        with randomized carry usage."""
+        n_carry = draw(st.integers(1, 3))
+        use_prod_rec = draw(st.booleans())
+        use_cons_rec = draw(st.booleans())
+        coefs = [draw(st.floats(0.1, 1.9)) for _ in range(4)]
+        emit_row = draw(st.booleans())
 
-    def body(carry, i):
-        cs = list(carry)
-        if use_prod_rec:
-            cs[0] = cs[0] * coefs[0] + jnp.float32(1.0)
-        key = (i + jnp.int32(cs[0] * 3 if use_prod_rec else 0)) % 128
-        row = async_query(table_gather_spec, TABLE, key)
-        v = (row * coefs[1]).sum()
-        # Never let a consumer value flow into a carry the producer reads
-        # (that would be a genuine true-dependence cycle → correctly raises).
-        if use_cons_rec and n_carry > 1:
-            cs[1] = cs[1] * coefs[2] + v
-        elif not use_prod_rec:
-            cs[-1] = v + coefs[3]
-        elif n_carry > 1:
-            cs[-1] = v + coefs[3]
-        y = row[0] if emit_row else v
-        return tuple(cs), y
+        def body(carry, i):
+            cs = list(carry)
+            if use_prod_rec:
+                cs[0] = cs[0] * coefs[0] + jnp.float32(1.0)
+            key = (i + jnp.int32(cs[0] * 3 if use_prod_rec else 0)) % 128
+            row = async_query(table_gather_spec, TABLE, key)
+            v = (row * coefs[1]).sum()
+            # Never let a consumer value flow into a carry the producer reads
+            # (that would be a genuine true-dependence cycle → correctly raises).
+            if use_cons_rec and n_carry > 1:
+                cs[1] = cs[1] * coefs[2] + v
+            elif not use_prod_rec:
+                cs[-1] = v + coefs[3]
+            elif n_carry > 1:
+                cs[-1] = v + coefs[3]
+            y = row[0] if emit_row else v
+            return tuple(cs), y
 
-    init = tuple(jnp.float32(k + 1) for k in range(n_carry))
-    return body, init
+        init = tuple(jnp.float32(k + 1) for k in range(n_carry))
+        return body, init
 
 
-@settings(max_examples=25, deadline=None)
-@given(scan_body(), st.integers(2, 24))
-def test_property_fission_equals_scan(bi, n):
-    body, init = bi
-    ids = (jnp.arange(n) * 11 + 2) % 128
-    ref = lax.scan(body, init, ids)
-    out = fission_scan(body, init, ids)
-    assert_trees_close(ref, out, rtol=1e-4, atol=1e-4)
+    @settings(max_examples=25, deadline=None)
+    @given(scan_body(), st.integers(2, 24))
+    def test_property_fission_equals_scan(bi, n):
+        body, init = bi
+        ids = (jnp.arange(n) * 11 + 2) % 128
+        ref = lax.scan(body, init, ids)
+        out = fission_scan(body, init, ids)
+        assert_trees_close(ref, out, rtol=1e-4, atol=1e-4)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[dev])")
+    def test_property_suite_requires_hypothesis():
+        """Placeholder so the dropped property tests surface as a SKIP
+        instead of silently disappearing from collection."""

@@ -7,7 +7,12 @@ from __future__ import annotations
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade gracefully: property tests skip, rest run
+    HAVE_HYPOTHESIS = False
 
 from repro.core.hir import (
     Assign,
@@ -222,70 +227,76 @@ def test_rule_b_guard_grouping_repr():
 # property tests: random programs, transformed ≡ original
 # ---------------------------------------------------------------------------
 
-_OPS = [lambda a, b: a + b, lambda a, b: a - b, lambda a, b: a * b % 997,
-        lambda a, b: max(a, b), lambda a, b: min(a, b)]
+if HAVE_HYPOTHESIS:  # CI installs hypothesis (pip install -e .[dev])
+    _OPS = [lambda a, b: a + b, lambda a, b: a - b, lambda a, b: a * b % 997,
+            lambda a, b: max(a, b), lambda a, b: min(a, b)]
 
 
-@st.composite
-def random_loop_program(draw):
-    """Random loop with query + mix of producer/consumer statements."""
-    n_pre = draw(st.integers(0, 3))
-    n_post = draw(st.integers(1, 4))
-    use_if = draw(st.booleans())
-    body = []
-    live = ["i", "seed"]
-    for k in range(n_pre):
-        op = draw(st.sampled_from(_OPS))
-        a = draw(st.sampled_from(live))
-        b = draw(st.sampled_from(live))
-        body.append(Assign(target=f"p{k}", fn=op, args=(a, b)))
-        live.append(f"p{k}")
-    keyvar = draw(st.sampled_from(live))
-    body.append(Assign(target="qkey", fn=lambda a: abs(a) % 1000, args=(keyvar,)))
-    q = Query(target="qres", query_name="part.lookup", params=("qkey",))
-    if use_if:
-        body.append(Assign(target="cond", fn=lambda a: a % 2 == 0, args=(keyvar,)))
-        body.append(If(pred="cond", then_body=[q]))
-        body.append(Assign(target="qres2", fn=lambda c, q_, s: q_ if c else s,
-                           args=("cond", "qres", "seed")))
-        live.append("qres2")
-    else:
-        body.append(q)
-        live.append("qres")
-    for k in range(n_post):
-        op = draw(st.sampled_from(_OPS))
-        a = draw(st.sampled_from(live + ["acc"]))
-        body.append(Assign(target="acc", fn=op, args=("acc", a)))
-    n_items = draw(st.integers(1, 20))
-    return Program(
-        inputs=("items", "acc", "seed", "qres"),
-        body=[Loop(item_var="i", iter_var="items", body=body)],
-    ), n_items
+    @st.composite
+    def random_loop_program(draw):
+        """Random loop with query + mix of producer/consumer statements."""
+        n_pre = draw(st.integers(0, 3))
+        n_post = draw(st.integers(1, 4))
+        use_if = draw(st.booleans())
+        body = []
+        live = ["i", "seed"]
+        for k in range(n_pre):
+            op = draw(st.sampled_from(_OPS))
+            a = draw(st.sampled_from(live))
+            b = draw(st.sampled_from(live))
+            body.append(Assign(target=f"p{k}", fn=op, args=(a, b)))
+            live.append(f"p{k}")
+        keyvar = draw(st.sampled_from(live))
+        body.append(Assign(target="qkey", fn=lambda a: abs(a) % 1000, args=(keyvar,)))
+        q = Query(target="qres", query_name="part.lookup", params=("qkey",))
+        if use_if:
+            body.append(Assign(target="cond", fn=lambda a: a % 2 == 0, args=(keyvar,)))
+            body.append(If(pred="cond", then_body=[q]))
+            body.append(Assign(target="qres2", fn=lambda c, q_, s: q_ if c else s,
+                               args=("cond", "qres", "seed")))
+            live.append("qres2")
+        else:
+            body.append(q)
+            live.append("qres")
+        for k in range(n_post):
+            op = draw(st.sampled_from(_OPS))
+            a = draw(st.sampled_from(live + ["acc"]))
+            body.append(Assign(target="acc", fn=op, args=("acc", a)))
+        n_items = draw(st.integers(1, 20))
+        return Program(
+            inputs=("items", "acc", "seed", "qres"),
+            body=[Loop(item_var="i", iter_var="items", body=body)],
+        ), n_items
 
 
-@settings(max_examples=40, deadline=None)
-@given(random_loop_program(), st.integers(0, 10_000))
-def test_property_transform_preserves_semantics(prog_items, seed):
-    prog, n_items = prog_items
-    inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
-    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
-    t = transform_program(prog)
-    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3, strategy=OneOrAll())
-    out = Interpreter(rt).run(t, dict(inputs))
-    rt.drain()
-    rt.shutdown()
-    assert base["acc"] == out["acc"]
+    @settings(max_examples=40, deadline=None)
+    @given(random_loop_program(), st.integers(0, 10_000))
+    def test_property_transform_preserves_semantics(prog_items, seed):
+        prog, n_items = prog_items
+        inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
+        base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+        t = transform_program(prog)
+        rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3, strategy=OneOrAll())
+        out = Interpreter(rt).run(t, dict(inputs))
+        rt.drain()
+        rt.shutdown()
+        assert base["acc"] == out["acc"]
 
 
-@settings(max_examples=15, deadline=None)
-@given(random_loop_program(), st.integers(0, 10_000))
-def test_property_overlap_preserves_semantics(prog_items, seed):
-    prog, n_items = prog_items
-    inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
-    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
-    t = transform_program(prog, overlap=True)
-    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
-    out = Interpreter(rt).run(t, dict(inputs))
-    rt.drain()
-    rt.shutdown()
-    assert base["acc"] == out["acc"]
+    @settings(max_examples=15, deadline=None)
+    @given(random_loop_program(), st.integers(0, 10_000))
+    def test_property_overlap_preserves_semantics(prog_items, seed):
+        prog, n_items = prog_items
+        inputs = {"items": list(range(n_items)), "acc": 1, "seed": seed, "qres": 0}
+        base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+        t = transform_program(prog, overlap=True)
+        rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
+        out = Interpreter(rt).run(t, dict(inputs))
+        rt.drain()
+        rt.shutdown()
+        assert base["acc"] == out["acc"]
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[dev])")
+    def test_property_suite_requires_hypothesis():
+        """Placeholder so the dropped property tests surface as a SKIP
+        instead of silently disappearing from collection."""

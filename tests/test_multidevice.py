@@ -72,6 +72,7 @@ print(json.dumps({
 """
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches():
     res = run_sub(SHARDED_TRAIN)
     assert res["n_devices"] == 8
@@ -88,6 +89,7 @@ from repro.models.registry import get_arch
 from repro.models.config import ShapeSpec
 from repro.distributed.sharding import param_shardings, mesh_context
 from repro.launch.dryrun import parse_collective_bytes, _input_shardings
+from repro.launch.hlo_cost import cost_analysis_dict
 
 arch = get_arch("deepseek-moe-16b")
 arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
@@ -106,7 +108,7 @@ with mesh_context(mesh):
     lowered = jax.jit(fwd, in_shardings=(p_sh, in_sh)).lower(params_sds, specs)
     compiled = lowered.compile()
 coll = parse_collective_bytes(compiled.as_text())
-cost = compiled.cost_analysis()
+cost = cost_analysis_dict(compiled)  # list vs dict varies by JAX version
 print(json.dumps({
     "collective_count": coll["total_count"],
     "collective_bytes": coll["total_bytes"],
@@ -115,6 +117,7 @@ print(json.dumps({
 """
 
 
+@pytest.mark.slow
 def test_small_mesh_moe_compiles_with_collectives():
     res = run_sub(SMALL_DRYRUN)
     # a TP+EP-sharded MoE forward must contain real collectives

@@ -1,0 +1,290 @@
+"""Sharded multi-lane runtime: per-template batching vs single-queue
+head-of-line blocking, in-flight request deduplication, the completed-result
+LRU cache, and the AdaptiveCost strategy's learned threshold."""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import TableService
+from repro.core.strategies import AdaptiveCost, PureBatch, from_name
+
+N_TEMPLATES = 4
+TABLES = {f"t{i}": {k: k * (i + 1) for k in range(1000)} for i in range(N_TEMPLATES)}
+
+
+def _interleaved(rt, n_per_template: int):
+    """Submit A,B,C,D,A,B,... — the single queue's worst case."""
+    handles = []
+    for k in range(n_per_template):
+        for i in range(N_TEMPLATES):
+            handles.append((rt.submit(f"t{i}.lookup", (k,)), k * (i + 1)))
+    return handles
+
+
+# ---------------------------------------------------------------------------
+# lanes vs single queue
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_lanes_batch_per_template():
+    """PureBatch + sharded: the whole backlog drains as ONE set-oriented
+    execution per template, despite strict interleaving."""
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=4, strategy=PureBatch(), sharded=True)
+    handles = _interleaved(rt, 50)
+    rt.drain()
+    for h, want in handles:
+        assert rt.fetch(h) == want
+    rt.shutdown()
+    assert svc.stats.batches == N_TEMPLATES
+    assert svc.stats.single_queries == 0
+    assert svc.stats.batched_items == 50 * N_TEMPLATES
+    # one homogeneous lane per template, each recording one batch of 50
+    assert sorted(rt.stats.lane_traces) == sorted(f"t{i}.lookup"
+                                                  for i in range(N_TEMPLATES))
+    for trace in rt.stats.lane_traces.values():
+        assert [sz for _, sz in trace] == [50]
+
+
+def test_single_queue_head_of_line_blocks():
+    """The paper's single queue on the same workload: every batch splits at
+    the first template boundary, degenerating to size 1."""
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=4, strategy=PureBatch(), sharded=False)
+    handles = _interleaved(rt, 25)
+    rt.drain()
+    for h, want in handles:
+        assert rt.fetch(h) == want
+    rt.shutdown()
+    assert svc.stats.batches == 0
+    assert svc.stats.single_queries == 25 * N_TEMPLATES
+    assert list(rt.stats.lane_traces) == ["__single__"]
+
+
+def test_sharded_mean_batch_size_dominates_single_queue():
+    """The bench_lanes acceptance bar, asserted deterministically: sharded
+    mean batch size >= 2x the single queue's on mixed-template traffic."""
+    stats = {}
+    for sharded in (True, False):
+        svc = TableService(TABLES)
+        rt = AsyncQueryRuntime(svc, n_threads=4, strategy=PureBatch(),
+                               sharded=sharded)
+        handles = _interleaved(rt, 40)
+        rt.drain()
+        for h, want in handles:
+            assert rt.fetch(h) == want
+        rt.shutdown()
+        stats[sharded] = rt.stats.mean_batch_size
+    assert stats[True] >= 2 * stats[False]
+    assert stats[False] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# request deduplication + result cache
+# ---------------------------------------------------------------------------
+
+
+def test_queued_duplicates_coalesce_to_one_call():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=4, strategy=PureBatch())
+    handles = [rt.submit("t0.lookup", (7,)) for _ in range(10)]
+    rt.drain()
+    assert [rt.fetch(h) for h in handles] == [7] * 10
+    rt.shutdown()
+    # exactly ONE service execution for the 10 identical submissions
+    assert svc.stats.single_queries + svc.stats.batched_items == 1
+    assert rt.stats.deduped == 9
+    assert rt.stats.completed == rt.stats.submitted == 10
+
+
+class _GatedService(TableService):
+    """execute() blocks until released; lets the test pin a call in flight."""
+
+    def __init__(self):
+        super().__init__(TABLES)
+        self.started = threading.Event()
+        self.release = threading.Event()
+
+    def execute(self, query_name, params):
+        self.started.set()
+        assert self.release.wait(timeout=5.0)
+        return super().execute(query_name, params)
+
+
+def test_inflight_duplicates_coalesce_to_one_call():
+    """Submissions arriving WHILE the identical request is executing attach
+    to the in-flight call and share its result (SharedDB-style)."""
+    svc = _GatedService()
+    rt = AsyncQueryRuntime(svc, n_threads=2)
+    h0 = rt.submit("t0.lookup", (3,))
+    assert svc.started.wait(timeout=5.0)  # first call now in flight
+    dupes = [rt.submit("t0.lookup", (3,)) for _ in range(5)]
+    svc.release.set()
+    assert rt.fetch(h0) == 3
+    assert [rt.fetch(h) for h in dupes] == [3] * 5
+    rt.drain()
+    rt.shutdown()
+    assert svc.stats.single_queries == 1
+    assert rt.stats.deduped == 5
+
+
+def test_bounded_queue_counts_deduped_outstanding():
+    """max_pending bounds OUTSTANDING requests, so coalesced duplicates
+    (which enqueue nothing) still trigger producer back-off."""
+    svc = _GatedService()
+    rt = AsyncQueryRuntime(svc, n_threads=1, max_pending=2)
+    rt.submit("t0.lookup", (3,))
+    assert svc.started.wait(timeout=5.0)   # outstanding=1, in flight
+    rt.submit("t0.lookup", (3,))           # coalesces; outstanding=2 = bound
+    entered = threading.Event()
+    passed = threading.Event()
+
+    def third():
+        entered.set()
+        rt.submit("t0.lookup", (3,))
+        passed.set()
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    assert entered.wait(timeout=5.0)
+    assert not passed.wait(timeout=0.3)    # blocked at the bound
+    svc.release.set()                      # first call completes → unblocks
+    assert passed.wait(timeout=5.0)
+    rt.drain()
+    rt.shutdown()
+
+
+def test_empty_lanes_are_garbage_collected():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=2, strategy=PureBatch())
+    handles = _interleaved(rt, 5)
+    rt.drain()
+    for h, want in handles:
+        assert rt.fetch(h) == want
+    rt.shutdown()
+    assert rt._lanes == {}  # drained lanes dropped from the scan set
+    # ...but their traces survive for analysis
+    assert set(rt.stats.lane_traces) == {f"t{i}.lookup" for i in range(N_TEMPLATES)}
+
+
+def test_dedup_disabled_executes_each():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=1, strategy=PureBatch(), dedup=False)
+    handles = [rt.submit("t0.lookup", (7,)) for _ in range(6)]
+    rt.drain()
+    assert [rt.fetch(h) for h in handles] == [7] * 6
+    rt.shutdown()
+    assert rt.stats.deduped == 0
+    assert svc.stats.batched_items == 6  # one batch, but all 6 executed
+
+
+def test_result_cache_lru():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=1, result_cache_size=2)
+    assert rt.fetch(rt.submit("t0.lookup", (1,))) == 1
+    assert rt.fetch(rt.submit("t0.lookup", (1,))) == 1  # cache hit
+    assert rt.fetch(rt.submit("t0.lookup", (2,))) == 2
+    assert rt.fetch(rt.submit("t0.lookup", (3,))) == 3  # evicts (1,)
+    assert rt.fetch(rt.submit("t0.lookup", (1,))) == 1  # miss again
+    rt.shutdown()
+    assert rt.stats.cache_hits == 1
+    assert svc.stats.single_queries == 4
+
+
+# ---------------------------------------------------------------------------
+# adaptive cost strategy
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_converges_on_synthetic_cost_model():
+    """Feed the textbook model s=1, T_batch(n)=3+0.1n: the learned threshold
+    must converge to F/(s-c) = 3/(0.9) ~ 3.33 and gate decide() there."""
+    s = AdaptiveCost(alpha=0.3)
+    assert s.threshold is None  # still exploring
+    for _ in range(8):
+        s.observe(1, 1.0)
+    for n in (4, 8, 16, 32, 6, 12):
+        s.observe(n, 3.0 + 0.1 * n)
+    assert s.threshold == pytest.approx(3.333, abs=0.3)
+    f, c, single = s.estimates()
+    assert f == pytest.approx(3.0, abs=0.3)
+    assert c == pytest.approx(0.1, abs=0.05)
+    assert single == pytest.approx(1.0, abs=0.05)
+    assert s.decide(3, False) == 1   # below threshold: individual
+    assert s.decide(5, False) == 5   # above: take all
+    assert s.decide(0, False) == 0
+
+
+def test_adaptive_degrades_to_async_when_batching_never_pays():
+    s = AdaptiveCost(alpha=0.5)
+    for _ in range(5):
+        s.observe(1, 0.1)            # singles are cheap
+    for n in (4, 8, 16, 24, 12):
+        s.observe(n, 1.0 + 0.5 * n)  # per-item batch cost >> single cost
+    assert s.threshold == float("inf")
+    assert s.decide(100, False) == 1
+
+
+def test_adaptive_explores_before_estimating():
+    s = AdaptiveCost(min_samples=2)
+    assert s.decide(1, False) == 1
+    # with >1 pending it alternates take-all / take-one to feed both sides
+    takes = {s.decide(10, False) for _ in range(4)}
+    assert takes == {1, 10}
+    s.reset()
+    assert s.threshold is None
+
+
+def test_adaptive_end_to_end_in_runtime():
+    """AdaptiveCost inside the runtime: completes a mixed workload correctly
+    and ends up with a usable cost model from real observations."""
+    svc = TableService(TABLES, latency=0.001,
+                       batch_latency=lambda n: 0.004 + 0.0001 * n)
+    rt = AsyncQueryRuntime(svc, n_threads=2, strategy=AdaptiveCost(alpha=0.3))
+    handles = _interleaved(rt, 30)
+    rt.drain()
+    for h, want in handles:
+        assert rt.fetch(h) == want
+    rt.shutdown()
+    assert rt.stats.completed == 30 * N_TEMPLATES
+    # exploration guarantees both execution kinds were observed
+    assert rt.stats.single_executions >= 1
+    assert rt.stats.batch_executions >= 1
+
+
+def test_from_name_adaptive():
+    assert isinstance(from_name("adaptive"), AdaptiveCost)
+
+
+def test_adaptive_ignores_failed_calls():
+    """Fast-failing service calls must not feed the cost model (they would
+    drag the learned latencies toward zero)."""
+    strat = AdaptiveCost()
+    svc = TableService(TABLES, queries={"boom": lambda tables, p: 1 / 0})
+    rt = AsyncQueryRuntime(svc, n_threads=1, strategy=strat)
+    h = rt.submit("boom", ())
+    with pytest.raises(ZeroDivisionError):
+        rt.fetch(h)
+    rt.shutdown()
+    assert strat._n_single == 0 and strat._n_batch == 0
+
+
+# ---------------------------------------------------------------------------
+# stats plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_includes_lane_traces_and_mean():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=2, strategy=PureBatch())
+    handles = _interleaved(rt, 10)
+    rt.drain()
+    for h, _ in handles:
+        rt.fetch(h)
+    rt.shutdown()
+    snap = rt.stats.snapshot()
+    assert snap["mean_batch_size"] == rt.stats.mean_batch_size > 1
+    assert set(snap["lane_traces"]) == {f"t{i}.lookup" for i in range(N_TEMPLATES)}

@@ -1,0 +1,95 @@
+"""Cross-run perf-regression diff for ``results/bench_lanes.json``.
+
+CI (main) uploads each run's ``results/bench*.json`` as a workflow
+artifact; the next run downloads the previous artifact and calls this
+script to compare the two.  Only *ratio* metrics are gated: both sides of
+a ratio are measured on the same runner in the same run, so the metric is
+self-normalized against machine speed — absolute req/s would false-alarm
+on every slow runner.
+
+Exit status is non-zero when any gated metric dropped more than
+``--max-drop`` (default 20%) relative to the baseline, unless
+``--warn-only`` is set, in which case regressions are printed as GitHub
+``::warning`` annotations but the step stays green.  Metrics missing from
+the baseline (added since) are reported and skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Higher-is-better ratio metrics gated across runs.  Dotted paths into
+# results/bench_lanes.json.
+GATED_METRICS = [
+    "batch_size_ratio",
+    "throughput_ratio",
+    "skewed_tenant.throughput_ratio",
+    "shared_projection.round_trip_gain",
+]
+
+
+def lookup(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def diff(baseline: dict, current: dict, max_drop: float) -> list[str]:
+    """Human-readable regression lines (empty → all gates pass)."""
+    regressions = []
+    for metric in GATED_METRICS:
+        base = lookup(baseline, metric)
+        cur = lookup(current, metric)
+        if base is None:
+            print(f"  {metric}: no baseline value (new metric?) — skipped")
+            continue
+        if cur is None:
+            regressions.append(f"{metric}: present in baseline ({base:.3f}) "
+                               "but MISSING from current results")
+            continue
+        drop = (base - cur) / base if base > 0 else 0.0
+        status = "REGRESSION" if drop > max_drop else "ok"
+        print(f"  {metric}: baseline {base:.3f} -> current {cur:.3f} "
+              f"({-drop:+.1%}) [{status}]")
+        if drop > max_drop:
+            regressions.append(
+                f"{metric} dropped {drop:.1%} (baseline {base:.3f} -> "
+                f"current {cur:.3f}, allowed drop {max_drop:.0%})")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="previous run's bench_lanes.json")
+    ap.add_argument("--current", required=True,
+                    help="this run's bench_lanes.json")
+    ap.add_argument("--max-drop", type=float, default=0.20,
+                    help="max allowed relative drop per metric (default 0.20)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="annotate regressions but exit 0")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    print(f"bench-diff: {args.baseline} vs {args.current} "
+          f"(max drop {args.max_drop:.0%})")
+    regressions = diff(baseline, current, args.max_drop)
+    if not regressions:
+        print("bench-diff: all gated metrics within bounds")
+        return 0
+    level = "warning" if args.warn_only else "error"
+    for r in regressions:
+        print(f"::{level}::bench-diff: {r}")
+    return 0 if args.warn_only else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,16 +12,36 @@ single queue: batches split at the first template boundary, so every batch
 degenerates to size 1.  Sharded lanes batch each template independently.
 Results (mean batch size, wall time, throughput, speedup) go to the CSV
 and to ``results/bench_lanes.json``.
+
+Part 3 (skewed tenants, LanePolicy) — one whale tenant floods a hot
+template whose service LOVES batching (tiny per-item cost) while small
+tenants trickle cold templates whose batched form pays a brutal fixed setup
+cost.  A single global AdaptiveCost fits one blended model over both cost
+structures and mis-schedules one side or the other; a LanePolicy gives the
+hot lane its own learned model and leaves cold lanes pure-async.  The
+report's ``skewed_tenant.throughput_ratio`` (per-lane / global) is the CI
+acceptance bar (>= 1.3x).
+
+Part 4 (shared projection, LanePolicy) — three templates that differ only
+in which columns they project.  Unshared, each template is its own lane:
+3 set-oriented executions, 9 round trips.  Shared via ``policy.share``,
+all three canonicalize onto one lane, identical keys coalesce across
+variants, and each handle projects its own columns at fan-out — the
+SharedDB "one stone" effect, measured in service round trips.
 """
 from __future__ import annotations
 
 import json
+import random
+import threading
 import time
 from pathlib import Path
 
 from benchmarks.common import CSV, make_service, run_variant
+from repro.core.lane_policy import LanePolicy
 from repro.core.runtime import AsyncQueryRuntime
-from repro.core.strategies import LowerThreshold
+from repro.core.services import TableService, _StatsMixin
+from repro.core.strategies import AdaptiveCost, LowerThreshold, PureAsync, PureBatch
 
 N_TEMPLATES = 4
 
@@ -53,6 +73,137 @@ def run_mixed(sharded: bool, n_requests: int, n_threads: int = 8) -> dict:
         "single_executions": st.single_executions,
         "lanes": {k: len(v) for k, v in st.lane_traces.items()},
         "service": svc.stats.snapshot(),
+    }
+
+
+class HeterogeneousService(_StatsMixin):
+    """Per-template cost profiles behind one bounded server.
+
+    ``profiles[template] = (single_s, batch_fixed_s, batch_per_item_s)`` —
+    the skew generator: a template can love batching (tiny per-item cost)
+    or hate it (huge fixed setup), which is exactly what one global cost
+    model cannot represent.
+    """
+
+    def __init__(self, profiles: dict, concurrency: int = 8):
+        super().__init__()
+        self.profiles = profiles
+        self._server = threading.Semaphore(concurrency)
+
+    def execute(self, query_name: str, params: tuple):
+        single_s, _, _ = self.profiles[query_name]
+        with self._server:
+            time.sleep(single_s)
+        self._count(round_trips=1, single=1)
+        return (query_name, params)
+
+    def execute_batch(self, query_name: str, params_list):
+        _, fixed_s, item_s = self.profiles[query_name]
+        with self._server:
+            time.sleep(fixed_s + item_s * len(params_list))
+        self._count(round_trips=3, batches=1, items=len(params_list))
+        return [(query_name, p) for p in params_list]
+
+
+def _skew_profiles() -> dict:
+    # hot: batching amortizes a small setup over a near-zero per-item cost.
+    # cold: the batched form pays a 25 ms fixed setup (think: temp-table
+    # creation on a cold path) while singles are cheap — batching is loss.
+    profiles = {"hot": (1e-3, 2e-3, 5e-5)}
+    for i in range(4):
+        profiles[f"cold{i}"] = (2e-4, 25e-3, 1e-3)
+    return profiles
+
+
+def _skew_workload(n_hot: int, n_cold: int, seed: int = 0) -> list:
+    """(tenant, template, params) tuples: one whale floods `hot`, four small
+    tenants trickle `cold0..3`, shuffled into one arrival order."""
+    work = [("whale", "hot", (i,)) for i in range(n_hot)]
+    for i in range(4):
+        work += [(f"tenant{i}", f"cold{i}", (k,)) for k in range(n_cold)]
+    random.Random(seed).shuffle(work)
+    return work
+
+
+def run_skewed(per_lane: bool, n_hot: int, n_cold: int, n_threads: int = 8) -> dict:
+    svc = HeterogeneousService(_skew_profiles())
+    if per_lane:
+        policy = LanePolicy(
+            cold_factory=PureAsync,
+            hot_factory=lambda: AdaptiveCost(alpha=0.3),
+            hot_threshold=64,
+            tenant_quotas={"whale": 512},  # generous; exercises the quota path
+        )
+        rt = AsyncQueryRuntime(svc, n_threads=n_threads, policy=policy)
+    else:
+        rt = AsyncQueryRuntime(svc, n_threads=n_threads,
+                               strategy=AdaptiveCost(alpha=0.3))
+    work = _skew_workload(n_hot, n_cold)
+    t0 = time.perf_counter()
+    handles = [rt.submit(tmpl, params, tenant=tenant)
+               for tenant, tmpl, params in work]
+    rt.drain()
+    results = [rt.fetch(h) for h in handles]
+    dt = time.perf_counter() - t0
+    rt.shutdown()
+    assert len(results) == len(work)
+    st = rt.stats
+    out = {
+        "per_lane_policy": per_lane,
+        "n_requests": len(work),
+        "wall_s": dt,
+        "throughput_rps": len(work) / dt,
+        "mean_batch_size": st.mean_batch_size,
+        "batch_executions": st.batch_executions,
+        "single_executions": st.single_executions,
+        "service": svc.stats.snapshot(),
+    }
+    if per_lane:
+        snap = policy.snapshot()
+        out["hot_lanes"] = sorted(k for k, v in snap["lanes"].items() if v["hot"])
+    return out
+
+
+def run_shared_projection(shared: bool, n_keys: int) -> dict:
+    """Three templates differing only in projection, over the same keys."""
+    rows = {k: {"name": f"u{k}", "email": f"u{k}@x", "age": k % 80}
+            for k in range(n_keys)}
+    # The unshared baseline executes each projection variant as its own
+    # (narrower) server-side query; the shared run never sends them.
+    svc = TableService({"users": rows}, queries={
+        f"users.sel_{col}": (lambda col: lambda tables, p: tables["users"][p[0]][col])(col)
+        for col in ("name", "email", "age")
+    })
+    policy = LanePolicy(hot_threshold=0, hot_factory=PureBatch)
+    if shared:
+        policy.share("users.lookup", {
+            "users.sel_name": lambda r: r["name"],
+            "users.sel_email": lambda r: r["email"],
+            "users.sel_age": lambda r: r["age"],
+        })
+    rt = AsyncQueryRuntime(svc, n_threads=4, policy=policy)
+    t0 = time.perf_counter()
+    handles = []
+    for k in range(n_keys):
+        handles.append((rt.submit("users.sel_name", (k,)), rows[k]["name"]))
+        handles.append((rt.submit("users.sel_email", (k,)), rows[k]["email"]))
+        handles.append((rt.submit("users.sel_age", (k,)), rows[k]["age"]))
+    rt.drain()
+    for h, want in handles:
+        got = rt.fetch(h)
+        assert got == want, (got, want)
+    dt = time.perf_counter() - t0
+    rt.shutdown()
+    st = svc.stats.snapshot()
+    return {
+        "shared": shared,
+        "n_submissions": 3 * n_keys,
+        "wall_s": dt,
+        "round_trips": st["round_trips"],
+        "batches": st["batches"],
+        "executed_items": st["single_queries"] + st["batched_items"],
+        "deduped": rt.stats.deduped,
+        "rerouted": rt.stats.shared,
     }
 
 
@@ -92,6 +243,43 @@ def main(csv: CSV | None = None, quick: bool = False):
             f"{lanes['throughput_rps']:.0f}", "req_per_s")
     csv.add("lanes.batch_size_ratio", f"{report['batch_size_ratio']:.2f}", "x")
     csv.add("lanes.throughput_ratio", f"{report['throughput_ratio']:.2f}", "x")
+
+    # -- skewed tenants: global AdaptiveCost vs per-lane LanePolicy -------
+    n_hot, n_cold = (200, 24) if quick else (400, 40)
+    glob = run_skewed(per_lane=False, n_hot=n_hot, n_cold=n_cold)
+    lane = run_skewed(per_lane=True, n_hot=n_hot, n_cold=n_cold)
+    report["skewed_tenant"] = {
+        "workload": f"hot={n_hot} (tenant=whale), 4 cold templates x "
+                    f"{n_cold}, threads=8, heterogeneous batch costs",
+        "global_strategy": glob,
+        "per_lane_policy": lane,
+        "throughput_ratio": (lane["throughput_rps"]
+                             / max(glob["throughput_rps"], 1e-9)),
+    }
+    csv.add("lanes.skewed.global.throughput",
+            f"{glob['throughput_rps']:.0f}", "req_per_s")
+    csv.add("lanes.skewed.per_lane.throughput",
+            f"{lane['throughput_rps']:.0f}", "req_per_s")
+    csv.add("lanes.skewed.throughput_ratio",
+            f"{report['skewed_tenant']['throughput_ratio']:.2f}", "x")
+
+    # -- cross-template projection sharing --------------------------------
+    n_keys = 60 if quick else 150
+    unshared = run_shared_projection(shared=False, n_keys=n_keys)
+    shared = run_shared_projection(shared=True, n_keys=n_keys)
+    report["shared_projection"] = {
+        "workload": f"3 projection variants over {n_keys} keys, PureBatch",
+        "unshared": unshared,
+        "shared": shared,
+        "round_trip_gain": (unshared["round_trips"]
+                            / max(shared["round_trips"], 1)),
+    }
+    csv.add("lanes.shared_projection.unshared_round_trips",
+            str(unshared["round_trips"]), "rt")
+    csv.add("lanes.shared_projection.shared_round_trips",
+            str(shared["round_trips"]), "rt")
+    csv.add("lanes.shared_projection.round_trip_gain",
+            f"{report['shared_projection']['round_trip_gain']:.2f}", "x")
 
     out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
     out.parent.mkdir(exist_ok=True)

@@ -12,7 +12,6 @@ Variant names follow the paper exactly:
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable, Optional
 

@@ -8,7 +8,6 @@ import dataclasses
 import tempfile
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import PrefetchLoader, SyntheticLMStream

@@ -26,10 +26,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 import time
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import numpy as np

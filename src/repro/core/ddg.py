@@ -23,7 +23,7 @@ queries it needs:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, Sequence
+from typing import Any, Iterable
 
 from jax.extend import core as jex_core
 

@@ -55,7 +55,6 @@ import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax, tree_util
 from jax.extend import core as jex_core
 
@@ -128,7 +127,6 @@ def fission_scan(
     flat_init, carry_tree = tree_util.tree_flatten(init)
     flat_xs, xs_tree = tree_util.tree_flatten(xs)
     n_carry = len(flat_init)
-    n_x = len(flat_xs)
 
     q_idxs = [i for i, e in enumerate(jaxpr.eqns) if e.primitive is async_query_p]
     if not q_idxs:
@@ -197,7 +195,6 @@ def fission_scan(
     consumer_eqn_list = [i for i in sorted(consumer_eqns) if i != qi]
     consumer_reads = ddg.side_reads(consumer_eqn_list)
     q_outvars = [v for v in q_eqn.outvars]
-    consumer_carry_in = {carry_in_vars[j] for j in consumer_pos}
 
     def _side_of_var(v) -> str:
         """Where is var v available? 'const' | 'x' | 'pcarry' | 'ccarry' |

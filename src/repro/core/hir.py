@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
+from typing import Any, Callable, Mapping, Optional, Sequence
 
 __all__ = [
     "Stmt",

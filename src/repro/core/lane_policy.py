@@ -1,0 +1,289 @@
+"""Per-lane policy engine: learned per-template batching, tenant quotas,
+weighted fairness, and cross-template (projection) sharing.
+
+PR 1's sharded :class:`~repro.core.runtime.AsyncQueryRuntime` gave every
+query template its own lane, but all lanes still shared ONE global
+:class:`~repro.core.strategies.BatchingStrategy` (so a single
+:class:`~repro.core.strategies.AdaptiveCost` fit one blended cost model for
+services whose templates have very different cost structures), one global
+``max_pending`` bound, and strict round-robin over lanes.  This module is
+the per-lane brain the runtime and the serving scheduler both consult:
+
+* **Per-lane strategies.**  Each lane owns its strategy *instance*.  Cold
+  lanes (few submissions) default to :class:`PureAsync` — a trickle never
+  benefits from waiting, and a batch's fixed overhead is pure loss.  A lane
+  crossing ``hot_threshold`` total submissions is promoted to a fresh
+  instance from ``hot_factory`` (default :class:`AdaptiveCost`), which then
+  learns THAT lane's fixed-vs-per-item cost model from that lane's own
+  ``observe`` feedback.  ``overrides`` pins a specific lane to a specific
+  strategy instance regardless of temperature.
+* **Admission quotas.**  Instead of one global ``max_pending``, submission
+  is bounded per tenant (``tenant_quotas`` / ``default_tenant_quota``) and
+  per lane (``lane_quota``): a whale tenant flooding one template backs off
+  at ITS bound while everyone else keeps submitting.
+* **Weighted fairness.**  Lane service order is weighted fair queueing via
+  per-lane virtual time: picking ``k`` requests from a lane advances its
+  vtime by ``k / weight``, and the next pick goes to the backlogged lane
+  with the smallest vtime.  A lane with weight 2 gets twice the service of
+  a weight-1 lane under contention; new lanes join at the current minimum
+  vtime so they neither starve nor monopolize.
+* **Cross-template sharing** (SharedDB, "one thousand queries with one
+  stone"): templates that differ only in *projection* are registered via
+  :meth:`share` and canonicalized onto one shared lane.  The runtime
+  executes the canonical (superset) query once; each handle applies its own
+  projection at fan-out, so ``users.sel_name`` and ``users.sel_email`` for
+  the same key cost ONE service round trip.
+
+The engine is deliberately runtime-agnostic: the
+:class:`~repro.core.runtime.AsyncQueryRuntime` consults it under its own
+lock, the :class:`~repro.serving.scheduler.ContinuousBatchingScheduler`
+from its single-threaded tick loop, so every method here takes the policy's
+own lock and strategy objects keep theirs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Iterable, Mapping, Optional
+
+from repro.core.strategies import AdaptiveCost, BatchingStrategy, PureAsync
+
+__all__ = ["LanePolicy"]
+
+
+class LanePolicy:
+    """Per-lane strategy selection + quotas + fairness + projection sharing.
+
+    Parameters
+    ----------
+    cold_factory / hot_factory:
+        Zero-arg callables producing a fresh strategy per lane.  Cold lanes
+        (fewer than ``hot_threshold`` submissions) use ``cold_factory``
+        (default ``PureAsync``); once promoted a lane gets its own
+        ``hot_factory`` instance (default ``AdaptiveCost``) fed only by that
+        lane's observations.
+    hot_threshold:
+        Total submissions after which a lane is considered hot.  ``0``
+        makes every lane hot from the first submission.
+    overrides:
+        ``{lane: strategy_instance}`` — pins a lane to a given strategy
+        regardless of temperature (e.g. force ``PureBatch`` for a
+        report-generation template).
+    lane_weights / default_weight:
+        Weighted-fair-queueing weights; higher weight → proportionally more
+        service under contention.
+    tenant_quotas / default_tenant_quota:
+        Max *outstanding* (submitted, unresolved) requests per tenant.
+        ``tenant_quotas`` maps specific tenants; ``default_tenant_quota``
+        applies to any other named tenant.  ``None`` disables the bound.
+    lane_quota:
+        Max outstanding requests per lane (any tenant), replacing the
+        single global ``max_pending`` with per-template back-pressure.
+    """
+
+    def __init__(
+        self,
+        cold_factory: Callable[[], BatchingStrategy] = PureAsync,
+        hot_factory: Callable[[], BatchingStrategy] = AdaptiveCost,
+        hot_threshold: int = 32,
+        overrides: Optional[Mapping[str, BatchingStrategy]] = None,
+        lane_weights: Optional[Mapping[str, float]] = None,
+        default_weight: float = 1.0,
+        tenant_quotas: Optional[Mapping[str, int]] = None,
+        default_tenant_quota: Optional[int] = None,
+        lane_quota: Optional[int] = None,
+        max_lanes: int = 4096,
+    ):
+        if hot_threshold < 0:
+            raise ValueError("hot_threshold must be >= 0")
+        if default_weight <= 0:
+            raise ValueError("default_weight must be > 0")
+        for lane, w in (lane_weights or {}).items():
+            if w <= 0:
+                raise ValueError(f"lane_weights[{lane!r}] must be > 0, got {w}")
+        if max_lanes < 1:
+            raise ValueError("max_lanes must be >= 1")
+        self.cold_factory = cold_factory
+        self.hot_factory = hot_factory
+        self.hot_threshold = hot_threshold
+        self.overrides = dict(overrides or {})
+        self.lane_weights = dict(lane_weights or {})
+        self.default_weight = default_weight
+        self.tenant_quotas = dict(tenant_quotas or {})
+        self.default_tenant_quota = default_tenant_quota
+        self.lane_quota = lane_quota
+        self.max_lanes = max_lanes
+
+        self._lock = threading.Lock()
+        self._strategies: dict[str, BatchingStrategy] = {}
+        self._hot: set[str] = set()
+        self._hot_inst: set[str] = set()  # lanes whose instance is hot_factory's
+        self._submits: dict[str, int] = {}
+        self._vtime: dict[str, float] = {}
+        self._join_seq: dict[str, int] = {}  # deterministic vtime tie-break
+        self._last_use: dict[str, int] = {}  # eviction order under max_lanes
+        self._next_seq = 0
+        self._use_seq = 0
+        # projection sharing: variant template -> (canonical, projector)
+        self._shared: dict[str, tuple[str, Callable[[Any], Any]]] = {}
+
+    # -------------------------------------------------------- lane strategy
+    def note_submit(self, lane: str) -> None:
+        """Record one submission on ``lane`` (drives hot/cold promotion and
+        the least-recently-used eviction order under ``max_lanes``)."""
+        with self._lock:
+            self._submits[lane] = self._submits.get(lane, 0) + 1
+            self._use_seq += 1
+            self._last_use[lane] = self._use_seq
+            if len(self._submits) > self.max_lanes:
+                self._evict_coldest_locked(keep=lane)
+
+    def _evict_coldest_locked(self, keep: str) -> None:
+        """Drop the least-recently-submitted lane's tracked state so
+        high-cardinality template churn cannot grow the policy without
+        bound (the runtime GCs its drained lanes for the same reason).
+        Pinned (override) lanes are never evicted."""
+        victims = sorted(
+            (lk for lk in self._submits
+             if lk != keep and lk not in self.overrides),
+            key=lambda lk: self._last_use.get(lk, 0),
+        )
+        for lk in victims[: len(self._submits) - self.max_lanes]:
+            for d in (self._submits, self._strategies, self._vtime,
+                      self._join_seq, self._last_use):
+                d.pop(lk, None)
+            self._hot.discard(lk)
+            self._hot_inst.discard(lk)
+
+    def is_hot(self, lane: str) -> bool:
+        with self._lock:
+            return self._is_hot_locked(lane)
+
+    def _is_hot_locked(self, lane: str) -> bool:
+        if lane in self._hot:
+            return True
+        if self._submits.get(lane, 0) >= self.hot_threshold:
+            self._hot.add(lane)  # promotion is one-way
+            return True
+        return False
+
+    def strategy_for(self, lane: str) -> BatchingStrategy:
+        """This lane's strategy instance (creating/promoting as needed).
+
+        Promotion swaps the shared cold default for a fresh ``hot_factory``
+        instance owned by this lane alone; the instance is stable from then
+        on, so its learned state accumulates lane-local evidence only.
+        """
+        with self._lock:
+            pinned = self.overrides.get(lane)
+            if pinned is not None:
+                return pinned
+            cur = self._strategies.get(lane)
+            if self._is_hot_locked(lane):
+                if cur is None or lane not in self._hot_inst:
+                    cur = self.hot_factory()
+                    cur.reset()
+                    self._strategies[lane] = cur
+                    self._hot_inst.add(lane)
+                return cur
+            if cur is None:
+                cur = self.cold_factory()
+                cur.reset()
+                self._strategies[lane] = cur
+            return cur
+
+    def observe(self, lane: str, batch_size: int, duration: float) -> None:
+        """Route one service call's ``(batch_size, duration)`` to the lane's
+        own model — evidence never crosses lanes."""
+        self.strategy_for(lane).observe(batch_size, duration)
+
+    def observe_decode(self, lane: str, duration: float) -> None:
+        """Route one decode-tick duration to the lane's model (serving
+        feedback: the steady-state per-token cost of this lane's class)."""
+        self.strategy_for(lane).observe_decode(duration)
+
+    # ----------------------------------------------------- weighted fairness
+    def weight(self, lane: str) -> float:
+        return self.lane_weights.get(lane, self.default_weight)
+
+    def lane_order(self, candidates: Iterable[str]) -> list[str]:
+        """Candidates sorted by weighted-fair virtual time (lowest first,
+        join order breaking ties).  New lanes join at the current minimum
+        vtime over ALL tracked lanes — not just today's candidates — so a
+        lane arriving while the busy lanes are momentarily drained cannot
+        join at 0 and monopolize the picker once they refill."""
+        with self._lock:
+            cand = list(candidates)
+            floor = min(self._vtime.values(), default=0.0)
+            for c in cand:
+                if c not in self._vtime:
+                    self._vtime[c] = floor
+                if c not in self._join_seq:
+                    self._join_seq[c] = self._next_seq
+                    self._next_seq += 1
+            return sorted(cand, key=lambda c: (self._vtime[c], self._join_seq[c]))
+
+    def charge(self, lane: str, n: int) -> None:
+        """Account ``n`` picked requests against ``lane``'s fair share."""
+        with self._lock:
+            base = self._vtime.get(lane)
+            if base is None:  # never ordered: join at the global floor
+                base = min(self._vtime.values(), default=0.0)
+            self._vtime[lane] = base + n / self.weight(lane)
+
+    # -------------------------------------------------------------- quotas
+    def tenant_quota(self, tenant: Optional[str]) -> Optional[int]:
+        if tenant is None:
+            return None
+        return self.tenant_quotas.get(tenant, self.default_tenant_quota)
+
+    # ------------------------------------------------- cross-template share
+    def share(self, canonical: str,
+              projections: Mapping[str, Callable[[Any], Any]]) -> None:
+        """Register templates that differ from ``canonical`` only in
+        projection.  ``projections[variant]`` maps the canonical query's
+        (superset) result to the variant's result.  Subsequent submissions
+        of a variant run on the canonical lane and project at fan-out."""
+        with self._lock:
+            for variant, proj in projections.items():
+                if variant == canonical:
+                    raise ValueError(f"variant {variant!r} equals its canonical")
+                existing = self._shared.get(variant)
+                if existing is not None and existing[0] != canonical:
+                    raise ValueError(
+                        f"{variant!r} already shared onto {existing[0]!r}")
+                self._shared[variant] = (canonical, proj)
+
+    def resolve(self, query_name: str) -> tuple[str, Optional[Callable]]:
+        """``(canonical_query, projector | None)`` for a submission."""
+        with self._lock:
+            hit = self._shared.get(query_name)
+        if hit is None:
+            return query_name, None
+        return hit
+
+    # ---------------------------------------------------------------- stats
+    def snapshot(self) -> dict:
+        """Introspection: per-lane temperature, submissions, vtime, strategy."""
+        with self._lock:
+            lanes = {}
+            for lane in set(self._submits) | set(self._strategies) | set(self._vtime):
+                strat = self.overrides.get(lane) or self._strategies.get(lane)
+                lanes[lane] = {
+                    "hot": lane in self._hot,
+                    "submits": self._submits.get(lane, 0),
+                    "vtime": self._vtime.get(lane, 0.0),
+                    "weight": self.weight(lane),
+                    "strategy": type(strat).__name__ if strat else None,
+                }
+            return {
+                "hot_threshold": self.hot_threshold,
+                "lane_quota": self.lane_quota,
+                "shared_templates": {v: c for v, (c, _) in self._shared.items()},
+                "lanes": lanes,
+            }
+
+    def __repr__(self) -> str:
+        return (f"LanePolicy(hot_threshold={self.hot_threshold}, "
+                f"lane_quota={self.lane_quota}, "
+                f"tenants={sorted(self.tenant_quotas) or None}, "
+                f"shared={len(self._shared)})")

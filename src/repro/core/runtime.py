@@ -31,6 +31,18 @@ win comes from batching *across* concurrent queries.  So:
     is reported to ``strategy.observe`` so cost-learning strategies
     (:class:`~repro.core.strategies.AdaptiveCost`) can fit the service's
     fixed-vs-per-item cost model online.
+  * **Per-lane policy** (``policy=``): a
+    :class:`~repro.core.lane_policy.LanePolicy` replaces the one global
+    strategy with per-lane instances (hot lanes learn their own
+    :class:`AdaptiveCost` model from their own feedback, cold lanes stay
+    pure-async), replaces the one global ``max_pending`` with per-tenant /
+    per-lane quotas (``submit(..., tenant=...)``), picks lanes by weighted
+    fair queueing instead of round-robin, and canonicalizes templates that
+    differ only in projection onto one shared lane whose result fans out
+    through per-handle projections (SharedDB-style operator sharing).
+  * **Cache TTL + invalidation.**  The opt-in result LRU takes a
+    ``result_cache_ttl`` (entries expire on the read path) and an explicit
+    :meth:`invalidate` hook for write-through services.
 
 The paper-facing API is unchanged:
 
@@ -59,6 +71,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Any, Optional
 
+from repro.core.lane_policy import LanePolicy
 from repro.core.services import QueryService
 from repro.core.strategies import BatchingStrategy, PureAsync
 
@@ -87,6 +100,9 @@ class RuntimeStats:
     resubmissions: int = 0
     deduped: int = 0      # submissions coalesced onto a pending/in-flight call
     cache_hits: int = 0   # submissions served from the completed-result LRU
+    cache_expired: int = 0  # LRU entries dropped because their TTL lapsed
+    shared: int = 0       # submissions rerouted onto a canonical lane (projection)
+    quota_waits: int = 0  # submissions that blocked on a quota / back-pressure bound
     batch_trace: list = dataclasses.field(default_factory=list)  # (seq, size)
     # per-lane (seq, size) traces; lane key == query template (or __single__)
     lane_traces: dict = dataclasses.field(default_factory=dict)
@@ -133,8 +149,15 @@ class AsyncQueryRuntime:
         sharded: bool = True,
         dedup: bool = True,
         result_cache_size: int = 0,
+        result_cache_ttl: Optional[float] = None,
+        policy: Optional[LanePolicy] = None,
     ):
+        if policy is not None and strategy is not None:
+            raise ValueError(
+                "pass either a global `strategy` or a per-lane `policy`, not both"
+            )
         self.service = service
+        self.policy = policy
         self.strategy = strategy or PureAsync()
         self.strategy.reset()
         self.n_threads = n_threads
@@ -160,8 +183,16 @@ class AsyncQueryRuntime:
         self._inflight_by_req: dict[tuple, _Entry] = {}
         # handle key -> (query_name, params) while unresolved (stragglers)
         self._inflight_params: dict[int, tuple] = {}
-        self._cache: "OrderedDict[tuple, Any]" = OrderedDict()
+        # LRU maps request identity -> (value, monotonic deadline | None)
+        self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._cache_size = result_cache_size
+        self._cache_ttl = result_cache_ttl
+        # per-handle projection (cross-template sharing fan-out)
+        self._projections: dict[int, Any] = {}
+        # quota accounting: handle key -> (lane key, tenant) while outstanding
+        self._accounting: dict[int, tuple] = {}
+        self._lane_out: dict[str, int] = {}
+        self._tenant_out: dict[str, int] = {}
         self.stats = RuntimeStats()
 
         self._threads = [
@@ -172,19 +203,46 @@ class AsyncQueryRuntime:
             t.start()
 
     # ------------------------------------------------------------------ API
-    def submit(self, query_name: str, params: tuple) -> Handle:
-        """Non-blocking query submission (``submitQuery``).  Blocks only when
-        the bounded queue is full (§8 producer back-off)."""
+    def submit(self, query_name: str, params: tuple,
+               tenant: Optional[str] = None) -> Handle:
+        """Non-blocking query submission (``submitQuery``).  Blocks only at an
+        admission bound: the global ``max_pending`` (§8 producer back-off), or
+        — with a :class:`LanePolicy` — this tenant's / this lane's quota.
+
+        With a policy, templates registered via ``policy.share`` are
+        canonicalized onto their shared lane here; the submission's own
+        projection is applied at result fan-out.
+        """
+        policy = self.policy
+        if policy is not None:
+            lane_query, projector = policy.resolve(query_name)
+        else:
+            lane_query, projector = query_name, None
         with self._lock:
-            # §8 back-off bounds OUTSTANDING requests (submitted, unresolved)
+            lk = self._lane_key(lane_query)
+            # Back-off bounds OUTSTANDING requests (submitted, unresolved)
             # rather than queued entries, so coalesced duplicates — which
             # enqueue nothing but still hold a handle, a registry slot and
             # eventually a result — cannot grow memory past the bound either.
-            while (
-                self.max_pending is not None
-                and self.stats.submitted - self.stats.completed >= self.max_pending
-                and not self._shutdown
-            ):
+            blocked = False
+            while not self._shutdown:
+                tq = policy.tenant_quota(tenant) if policy is not None else None
+                lq = policy.lane_quota if policy is not None else None
+                if (
+                    self.max_pending is not None
+                    and self.stats.submitted - self.stats.completed >= self.max_pending
+                ):
+                    pass
+                elif (tq is not None
+                        and self._tenant_out.get(tenant, 0) >= tq):
+                    pass
+                elif lq is not None and self._lane_out.get(lk, 0) >= lq:
+                    pass
+                else:
+                    break
+                if not blocked:
+                    blocked = True
+                    self.stats.quota_waits += 1
                 self._done_cv.wait(timeout=0.1)
             if self._shutdown:
                 raise RuntimeError("runtime is shut down")
@@ -192,30 +250,37 @@ class AsyncQueryRuntime:
             self._next_key += 1
             self.stats.submitted += 1
             self._producer_done = False
+            if projector is not None:
+                self.stats.shared += 1
+            if policy is not None:
+                policy.note_submit(lk)
 
-            req = self._req_key(query_name, params)
+            req = self._req_key(lane_query, params)
             # 1) completed-result cache (SharedDB-style reuse across time)
-            if req is not None and self._cache_size and req in self._cache:
-                self._cache.move_to_end(req)
-                self._results[handle.key] = self._cache[req]
-                self.stats.cache_hits += 1
-                self.stats.completed += 1
-                self._done_cv.notify_all()
-                return handle
+            if req is not None and self._cache_size:
+                value, fresh = self._cache_get_locked(req)
+                if fresh:
+                    self._deliver_locked(handle.key, value, projector)
+                    self.stats.cache_hits += 1
+                    self.stats.completed += 1
+                    self._done_cv.notify_all()
+                    return handle
             # 2) in-flight/pending dedup (sharing across concurrent users)
             if req is not None and self.dedup:
                 live = self._queued_by_req.get(req) or self._inflight_by_req.get(req)
                 if live is not None:
                     live.keys.append(handle.key)
-                    self._inflight_params[handle.key] = (query_name, params)
+                    self._inflight_params[handle.key] = (lane_query, params)
+                    self._register_outstanding_locked(handle.key, lk, tenant, projector)
                     self.stats.deduped += 1
                     return handle
             # 3) enqueue on this template's lane
-            entry = _Entry(handle.key, query_name, params)
+            entry = _Entry(handle.key, lane_query, params)
             if req is not None and self.dedup:
                 self._queued_by_req[req] = entry
-            self._inflight_params[handle.key] = (query_name, params)
-            self._lane_for(query_name).append(entry)
+            self._inflight_params[handle.key] = (lane_query, params)
+            self._register_outstanding_locked(handle.key, lk, tenant, projector)
+            self._lane_for(lane_query).append(entry)
             self._n_pending += 1
             self._work_cv.notify()
         return handle
@@ -292,6 +357,104 @@ class AsyncQueryRuntime:
     def _lane_key(self, query_name: str) -> str:
         return query_name if self.sharded else _SINGLE_LANE
 
+    # --------------------------------------------------- cache (TTL + hooks)
+    def _cache_get_locked(self, req: tuple) -> tuple:
+        """``(value, fresh)`` — expires TTL'd entries on the read path."""
+        hit = self._cache.get(req)
+        if hit is None:
+            return None, False
+        value, deadline = hit
+        if deadline is not None and time.monotonic() >= deadline:
+            del self._cache[req]
+            self.stats.cache_expired += 1
+            return None, False
+        self._cache.move_to_end(req)
+        return value, True
+
+    def _cache_put_locked(self, req: tuple, value: Any) -> None:
+        deadline = (
+            time.monotonic() + self._cache_ttl
+            if self._cache_ttl is not None else None
+        )
+        self._cache[req] = (value, deadline)
+        self._cache.move_to_end(req)
+        while len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+
+    def invalidate(self, query_name: Optional[str] = None,
+                   params: Optional[tuple] = None) -> int:
+        """Explicit result-cache invalidation hook (the complement of TTL
+        expiry, for services whose writes are visible to the caller).
+
+        ``invalidate()`` drops everything; ``invalidate(q)`` drops every
+        cached result of template ``q``; ``invalidate(q, params)`` drops one
+        entry.  Shared (projection) variants resolve to their canonical
+        template first.  Returns the number of entries dropped.
+        """
+        if query_name is not None and self.policy is not None:
+            query_name = self.policy.resolve(query_name)[0]
+        with self._lock:
+            if query_name is None:
+                n = len(self._cache)
+                self._cache.clear()
+                return n
+            if params is not None:
+                rk = self._req_key(query_name, params)
+                if rk is not None and rk in self._cache:
+                    del self._cache[rk]
+                    return 1
+                return 0
+            victims = [k for k in self._cache if k[0] == query_name]
+            for k in victims:
+                del self._cache[k]
+            return len(victims)
+
+    # ------------------------------------------------ quota + share plumbing
+    def _register_outstanding_locked(self, key: int, lane_key: str,
+                                     tenant: Optional[str],
+                                     projector: Optional[Any]) -> None:
+        self._accounting[key] = (lane_key, tenant)
+        self._lane_out[lane_key] = self._lane_out.get(lane_key, 0) + 1
+        if tenant is not None:
+            self._tenant_out[tenant] = self._tenant_out.get(tenant, 0) + 1
+        if projector is not None:
+            self._projections[key] = projector
+
+    def _release_outstanding_locked(self, key: int) -> None:
+        acct = self._accounting.pop(key, None)
+        if acct is None:
+            return
+        lane_key, tenant = acct
+        left = self._lane_out.get(lane_key, 0) - 1
+        if left > 0:
+            self._lane_out[lane_key] = left
+        else:
+            self._lane_out.pop(lane_key, None)
+        if tenant is not None:
+            left = self._tenant_out.get(tenant, 0) - 1
+            if left > 0:
+                self._tenant_out[tenant] = left
+            else:
+                self._tenant_out.pop(tenant, None)
+
+    def _deliver_locked(self, key: int, value: Any, projector) -> None:
+        """Resolve one handle, applying its projection (sharing fan-out)."""
+        if projector is None:
+            self._results[key] = value
+            return
+        try:
+            self._results[key] = projector(value)
+        except BaseException as e:  # noqa: BLE001 — surface via fetch
+            self._errors[key] = e
+
+    def _observe(self, lane_key: str, batch_size: int, duration: float) -> None:
+        """Route service-call feedback to the deciding model: the lane's own
+        (policy mode) or the global strategy."""
+        if self.policy is not None:
+            self.policy.observe(lane_key, batch_size, duration)
+        else:
+            self.strategy.observe(batch_size, duration)
+
     def _lane_for(self, query_name: str) -> deque:
         lk = self._lane_key(query_name)
         lane = self._lanes.get(lk)
@@ -316,21 +479,31 @@ class AsyncQueryRuntime:
         self._work_cv.notify()
 
     def _pick_locked(self) -> Optional[tuple]:
-        """Round-robin over lanes; first lane whose strategy grants a take
-        yields ``(query_name, [entries])``.  None → nothing to do."""
+        """Pick work from the lanes: weighted-fair order under a
+        :class:`LanePolicy` (lowest virtual time first, each lane asked its
+        OWN strategy), plain round-robin with the global strategy otherwise.
+        The first lane whose strategy grants a take yields
+        ``(lane_key, query_name, [entries])``.  None → nothing to do."""
         keys = list(self._lanes.keys())
         if not keys:
             return None
         n_lanes = len(keys)
-        for off in range(n_lanes):
-            lk = keys[(self._rr + off) % n_lanes]
-            lane = self._lanes[lk]
+        if self.policy is not None:
+            ordered = self.policy.lane_order(
+                [k for k in keys if self._lanes[k]])
+        else:
+            ordered = [keys[(self._rr + off) % n_lanes] for off in range(n_lanes)]
+        for pos, lk in enumerate(ordered):
+            lane = self._lanes.get(lk)
             if not lane:
                 continue
-            take = self.strategy.decide(len(lane), self._producer_done)
+            strategy = (self.policy.strategy_for(lk) if self.policy is not None
+                        else self.strategy)
+            take = strategy.decide(len(lane), self._producer_done)
             if take <= 0:
                 continue
-            self._rr = (self._rr + off + 1) % n_lanes
+            if self.policy is None:
+                self._rr = (self._rr + pos + 1) % n_lanes
             take = min(take, len(lane))
             # Batches must share a query template.  Sharded lanes are
             # homogeneous by construction; the single-queue compatibility
@@ -349,6 +522,8 @@ class AsyncQueryRuntime:
                     self._inflight_by_req[rk] = entry
                 picked.append(entry)
             self._n_pending -= len(picked)
+            if self.policy is not None:
+                self.policy.charge(lk, len(picked))
             if not lane:
                 # GC empty lanes so high-cardinality template churn doesn't
                 # grow the round-robin scan (traces keep the history).
@@ -360,7 +535,7 @@ class AsyncQueryRuntime:
                 self.stats.single_executions += 1
             else:
                 self.stats.batch_executions += 1
-            return first_q, picked
+            return lk, first_q, picked
         return None
 
     def _worker(self) -> None:
@@ -375,7 +550,7 @@ class AsyncQueryRuntime:
                     self._work_cv.wait(timeout=0.05)
                 if self._shutdown:
                     return
-            query_name, picked = work
+            lane_key, query_name, picked = work
 
             t0 = time.perf_counter()
             try:
@@ -390,8 +565,10 @@ class AsyncQueryRuntime:
                 out, err = None, e
             if err is None:
                 # Failed calls (often fast-failing) would corrupt a learned
-                # cost model — only successful durations are evidence.
-                self.strategy.observe(len(picked), time.perf_counter() - t0)
+                # cost model — only successful durations are evidence.  The
+                # observation goes to the model that made the decision: the
+                # lane's own under a policy, the global strategy otherwise.
+                self._observe(lane_key, len(picked), time.perf_counter() - t0)
 
             with self._lock:
                 for i, entry in enumerate(picked):
@@ -399,10 +576,7 @@ class AsyncQueryRuntime:
                     if rk is not None and self._inflight_by_req.get(rk) is entry:
                         del self._inflight_by_req[rk]
                     if err is None and rk is not None and self._cache_size:
-                        self._cache[rk] = out[i]
-                        self._cache.move_to_end(rk)
-                        while len(self._cache) > self._cache_size:
-                            self._cache.popitem(last=False)
+                        self._cache_put_locked(rk, out[i])
                     # Fan the result out to every coalesced handle; straggler
                     # duplicates may already be resolved — first result wins.
                     for key in entry.keys:
@@ -410,8 +584,12 @@ class AsyncQueryRuntime:
                             continue
                         if err is not None:
                             self._errors[key] = err
+                            self._projections.pop(key, None)
                         else:
-                            self._results[key] = out[i]
+                            self._deliver_locked(
+                                key, out[i], self._projections.pop(key, None)
+                            )
                         self.stats.completed += 1
                         self._inflight_params.pop(key, None)
+                        self._release_outstanding_locked(key)
                 self._done_cv.notify_all()

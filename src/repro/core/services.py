@@ -48,6 +48,7 @@ class ServiceStats:
     single_queries: int = 0
     batches: int = 0
     batched_items: int = 0
+    padded_items: int = 0  # filler rows added to reach a lane's fixed bucket
     busy_time: float = 0.0
 
     def snapshot(self) -> dict:
@@ -59,12 +60,14 @@ class _StatsMixin:
         self.stats = ServiceStats()
         self._stats_lock = threading.Lock()
 
-    def _count(self, *, round_trips=0, single=0, batches=0, items=0, busy=0.0):
+    def _count(self, *, round_trips=0, single=0, batches=0, items=0, padded=0,
+               busy=0.0):
         with self._stats_lock:
             self.stats.round_trips += round_trips
             self.stats.single_queries += single
             self.stats.batches += batches
             self.stats.batched_items += items
+            self.stats.padded_items += padded
             self.stats.busy_time += busy
 
 
@@ -176,9 +179,18 @@ class ModelService(_StatsMixin):
     runs ``batch_fn`` (default ``jax.vmap(single_fn)``) **once** — one device
     dispatch for the whole batch, the device analogue of the set-oriented
     query.  Results are split back per request.
+
+    With ``pad_batches=True`` the batch axis is padded to a per-lane fixed
+    bucket keyed by ``query_name``: a lane's bucket is the power of two of
+    the largest batch it has seen, so each lane settles on ONE compiled
+    shape instead of recompiling ``batch_fn`` for every distinct batch size
+    the strategy emits (the jit-cache analogue of the paper's prepared
+    statement).  ``lane_buckets`` exposes the current bucket per lane and
+    ``stats.padded_items`` counts the filler rows paid for shape stability.
     """
 
-    def __init__(self, single_fn: Callable, batch_fn: Optional[Callable] = None):
+    def __init__(self, single_fn: Callable, batch_fn: Optional[Callable] = None,
+                 pad_batches: bool = False):
         super().__init__()
         import jax
         import jax.numpy as jnp
@@ -188,6 +200,8 @@ class ModelService(_StatsMixin):
         self.batch_fn = jax.jit(batch_fn) if batch_fn is not None else jax.jit(
             jax.vmap(single_fn)
         )
+        self.pad_batches = pad_batches
+        self.lane_buckets: dict[str, int] = {}
 
     def execute(self, query_name: str, params: tuple) -> Any:
         self._count(round_trips=1, single=1)
@@ -197,10 +211,19 @@ class ModelService(_StatsMixin):
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
         jnp = self._jnp
         n = len(params_list)
+        n_pad = 0
+        if self.pad_batches:
+            bucket = max(self.lane_buckets.get(query_name, 1),
+                         1 << (n - 1).bit_length())
+            self.lane_buckets[query_name] = bucket
+            n_pad = bucket - n
+            # Repeat the last request as filler: same shapes/dtypes, results
+            # beyond n are sliced away below.
+            params_list = list(params_list) + [params_list[-1]] * n_pad
         stacked = tuple(
             jnp.stack([p[i] for p in params_list]) for i in range(len(params_list[0]))
         )
-        self._count(round_trips=3, batches=1, items=n)
+        self._count(round_trips=3, batches=1, items=n, padded=n_pad)
         out = jax_block(self.batch_fn(*stacked))
         import jax
 

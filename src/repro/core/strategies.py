@@ -61,6 +61,11 @@ class BatchingStrategy:
         """Feedback from the runtime after each service call.  Static
         strategies ignore it; adaptive ones learn from it."""
 
+    def observe_decode(self, duration: float) -> None:
+        """Serving-side feedback: one decode tick's duration while this
+        strategy's lane had requests running.  Static strategies ignore it;
+        adaptive ones track the lane's steady-state per-token cost."""
+
 
 @dataclasses.dataclass
 class PureAsync(BatchingStrategy):
@@ -181,6 +186,7 @@ class AdaptiveCost(BatchingStrategy):
     def reset(self) -> None:
         with getattr(self, "_lock", threading.Lock()):
             self._s: Optional[float] = None  # EWMA single latency
+            self._d: Optional[float] = None  # EWMA decode-tick latency (serving)
             self._n_single = 0
             self._n_batch = 0
             # decayed least-squares moments for T(n) = F + n*c
@@ -204,6 +210,21 @@ class AdaptiveCost(BatchingStrategy):
             self._st = self._st * d + duration
             self._snt = self._snt * d + batch_size * duration
             self._snn = self._snn * d + batch_size * batch_size
+
+    def observe_decode(self, duration: float) -> None:
+        with self._lock:
+            self._d = (
+                duration if self._d is None
+                else (1 - self.alpha) * self._d + self.alpha * duration
+            )
+
+    @property
+    def decode_latency(self) -> Optional[float]:
+        """EWMA of observed decode-tick durations for this lane (``None``
+        until the scheduler reports any) — the per-token side of the lane's
+        cost model, alongside the prefill ``F + n·c`` fit."""
+        with self._lock:
+            return self._d
 
     def estimates(self) -> Optional[tuple]:
         """``(F, c, s)`` once enough evidence exists, else ``None``."""

@@ -27,7 +27,6 @@ import threading
 from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [

@@ -19,7 +19,6 @@ block.  VMEM working set: 3 × P·N·4 B ≈ 200 KiB at P=128, N=128.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -43,7 +43,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -55,7 +54,7 @@ from repro.distributed.sharding import (
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models.config import SHAPES
 from repro.models.registry import ARCH_IDS, get_arch
-from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.optimizer import AdamWConfig
 from repro.train.step import TrainStepConfig, make_train_step
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
@@ -343,7 +342,6 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
         model_flops = 2 * n_active * shape.global_batch  # one token/request
     model_flops_per_chip = model_flops / n_chips
 
-    per_dev_bytes = getattr(mem, "bytes_per_device", None)
     # memory_analysis object fields vary; fall back to str parsing
     mem_str = str(mem)
 

@@ -14,7 +14,7 @@ Shapes:
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,6 @@ from repro.models.layers import (
     apply_rope,
     apply_rope_half,
     dense_init,
-    linear,
 )
 
 __all__ = ["attn_params", "attention", "decode_attention", "init_kv_cache"]

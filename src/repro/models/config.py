@@ -7,7 +7,6 @@ small smoke-test variant required by the brief (same family, tiny widths).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

@@ -166,11 +166,6 @@ def apply_mrope(q, k, positions3, theta: float, sections: Tuple[int, ...]):
     sec_id = jnp.concatenate(
         [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
     )  # (d/2,)
-    pos = jnp.take_along_axis(
-        positions3.astype(jnp.float32),  # (3, B, S)
-        jnp.zeros_like(positions3[:1]),  # dummy — replaced below
-        axis=0,
-    )
     # select positions3[sec_id[f]] per frequency f:
     # ang[b, s, f] = positions3[sec_id[f], b, s] * inv[f]
     p = positions3.astype(jnp.float32)  # (3, B, S)

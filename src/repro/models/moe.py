@@ -27,7 +27,6 @@ skipped) — one code path, two execution layouts.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -12,14 +12,14 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import encdec as _encdec
 from repro.models import transformer as _tf
-from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.config import ModelConfig, ShapeSpec
 
 __all__ = ["Arch", "get_arch", "list_archs", "ARCH_IDS"]
 

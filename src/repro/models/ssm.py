@@ -16,7 +16,6 @@ Layout (n_groups = 1):
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

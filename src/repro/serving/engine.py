@@ -12,7 +12,6 @@ Prefill batches are padded to power-of-two buckets (bounded jit cache).
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Optional, Sequence
 
@@ -38,7 +37,6 @@ class InferenceEngine:
     max_len: int = 128
 
     def __post_init__(self):
-        cfg = self.arch.cfg
         self.cache = self.arch.init_cache(self.n_lanes, self.max_len)
         self.lengths = jnp.zeros((self.n_lanes,), jnp.int32)
         self.active = np.zeros((self.n_lanes,), bool)
@@ -46,6 +44,10 @@ class InferenceEngine:
         self.free_lanes = list(range(self.n_lanes))
         self.decode_steps = 0
         self.prefill_calls = 0
+        # template -> pinned (batch, prompt) prefill bucket: each template
+        # converges on ONE compiled prefill shape (monotone max of what it
+        # has needed), so a template burst stops recompiling per batch size.
+        self.template_shapes: dict[str, tuple[int, int]] = {}
 
         @partial(jax.jit, static_argnums=())
         def _decode(params, token, cache, lengths):
@@ -72,12 +74,17 @@ class InferenceEngine:
         self._prefill = _prefill
 
     # ------------------------------------------------------------- admission
-    def admit(self, requests: Sequence) -> tuple[int, int]:
+    def admit(self, requests: Sequence, template: Optional[str] = None
+              ) -> tuple[int, int]:
         """Prefill ``requests`` as ONE padded batch and insert into lanes.
 
         One prefill call for k requests is the set-oriented execution: one
         device dispatch amortized over the batch (vs k single dispatches) —
         the serving analogue of the paper's batched query.
+
+        ``template`` keys the padding bucket to the lane: the batch/prompt
+        bucket is pinned per template (monotone max), so every admission of
+        a template after its first dispatches the SAME compiled shape.
         """
         if not requests:
             return (0, 0)
@@ -89,6 +96,11 @@ class InferenceEngine:
         # max_prompt_len — right-padding + causal mask keeps logits exact.
         prompts = [r.prompt[-self.max_prompt_len:] for r in requests]
         plen = min(self.max_prompt_len, _bucket(max(len(p) for p in prompts)))
+        if template is not None:
+            pinned = self.template_shapes.get(template, (1, 1))
+            bsz = max(bsz, pinned[0])
+            plen = max(plen, pinned[1])
+            self.template_shapes[template] = (bsz, plen)
         toks = np.zeros((bsz, plen), np.int32)
         plens = np.ones((bsz,), np.int32)
         for i, p in enumerate(prompts):

@@ -28,6 +28,14 @@ tighter in the padded prefill), and mixed traffic classes stop head-of-line
 blocking each other.  The strategy is consulted per lane; admission
 round-robins over lanes while engine slots remain free.
 
+With a :class:`~repro.core.lane_policy.LanePolicy` (``policy=``), each
+template lane is asked its OWN strategy (hot templates learn a per-lane
+AdaptiveCost model, cold ones stay pure-async), lanes are visited in
+weighted-fair order instead of round-robin, and both prefill (admit) and
+decode-tick durations feed back into that lane's cost model.  Admission
+also passes the template to :meth:`InferenceEngine.admit`, which pins one
+compiled prefill shape per template.
+
 The scheduler records the per-tick admission trace (= Fig. 10 batch sizes,
 also split per lane) and per-request ttft/latency (= Fig. 11
 time-to-k-th-response).
@@ -43,6 +51,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Optional
 
+from repro.core.lane_policy import LanePolicy
 from repro.core.strategies import BatchingStrategy, PureAsync
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
@@ -66,8 +75,14 @@ class ContinuousBatchingScheduler:
         engine: InferenceEngine,
         strategy: Optional[BatchingStrategy] = None,
         lane_timeout: Optional[int] = None,
+        policy: Optional[LanePolicy] = None,
     ):
+        if policy is not None and strategy is not None:
+            raise ValueError(
+                "pass either a global `strategy` or a per-lane `policy`, not both"
+            )
         self.engine = engine
+        self.policy = policy
         self.strategy = strategy or PureAsync()
         self.strategy.reset()
         # template -> pending requests; insertion-ordered for round-robin
@@ -86,6 +101,8 @@ class ContinuousBatchingScheduler:
         if q is None:
             q = self.queues[request.template] = deque()
         q.append(request)
+        if self.policy is not None:
+            self.policy.note_submit(request.template)
 
     @property
     def n_queued(self) -> int:
@@ -101,6 +118,21 @@ class ContinuousBatchingScheduler:
                 if self._producer_done:
                     break
             done.extend(self.tick())
+        else:
+            if self.n_queued or self.running:
+                stuck_queued = {t: len(q) for t, q in self.queues.items() if q}
+                stuck_running = {
+                    lane: r.template for lane, r in sorted(self.running.items())
+                }
+                raise RuntimeError(
+                    f"run_until_drained exhausted max_ticks={max_ticks} with "
+                    f"work still pending: queued per template {stuck_queued}, "
+                    f"running lanes {stuck_running} "
+                    f"({self.stats.completed} completed, "
+                    f"{self.stats.requeued} requeued). A lane that never "
+                    "finishes usually means the engine stopped emitting "
+                    "tokens for it or max_new_tokens exceeds the tick budget."
+                )
         return done
 
     # ----------------------------------------------------------------- tick
@@ -109,22 +141,33 @@ class ContinuousBatchingScheduler:
         step."""
         # 1) admission — the paper's "how many requests does a free worker
         # take from the queue" decision, asked once per template lane while
-        # engine slots remain free.
+        # engine slots remain free.  With a LanePolicy each lane is asked its
+        # OWN strategy and lanes are visited in weighted-fair order; with a
+        # global strategy the scan round-robins as before.
         templates = list(self.queues.keys())
         n_lanes = len(templates)
         rr0 = self._rr  # snapshot: each lane is consulted at most once a tick
-        for off in range(n_lanes):
+        if self.policy is not None:
+            ordered = self.policy.lane_order(
+                [t for t in templates if self.queues[t]])
+        else:
+            ordered = [templates[(rr0 + off) % n_lanes] for off in range(n_lanes)]
+        for pos, tmpl in enumerate(ordered):
             if self.engine.n_free == 0:
                 break
-            tmpl = templates[(rr0 + off) % n_lanes]
-            q = self.queues[tmpl]
+            q = self.queues.get(tmpl)
             if not q:
                 continue
-            want = self.strategy.decide(len(q), self._producer_done)
+            strat = (self.policy.strategy_for(tmpl) if self.policy is not None
+                     else self.strategy)
+            want = strat.decide(len(q), self._producer_done)
             take = min(want, self.engine.n_free, len(q))
             if take <= 0:
                 continue
-            self._rr = (rr0 + off + 1) % n_lanes  # next tick starts past us
+            if self.policy is not None:
+                self.policy.charge(tmpl, take)
+            else:
+                self._rr = (rr0 + pos + 1) % n_lanes  # next tick starts past us
             batch = [q.popleft() for _ in range(take)]
             if not q:
                 # GC drained lanes (mirrors the runtime): high-cardinality
@@ -134,14 +177,15 @@ class ContinuousBatchingScheduler:
             for r in batch:
                 r.metrics.admitted = now
             t0 = time.perf_counter()
-            shape = self.engine.admit(batch)
+            shape = self.engine.admit(batch, template=tmpl)
             dt = time.perf_counter() - t0
             # Adaptive feedback: the first admit of a bucket shape pays XLA
             # compilation — an outlier that would blow up a learned fixed
             # cost, so only steady-state admits are observed, sized by the
-            # padded bucket the device actually dispatched.
+            # padded bucket the device actually dispatched.  Feedback goes
+            # to the deciding model (the lane's own under a policy).
             if shape in self._warm_shapes:
-                self.strategy.observe(shape[0], dt)
+                strat.observe(shape[0], dt)
             else:
                 self._warm_shapes.add(shape)
             now = time.perf_counter()
@@ -156,8 +200,16 @@ class ContinuousBatchingScheduler:
 
         # 2) one batched decode step over all active lanes
         finished: list[Request] = []
+        t0 = time.perf_counter()
         tokens = self.engine.decode_tick()
+        decode_dt = time.perf_counter() - t0
         self.stats.decode_ticks += 1
+        if self.policy is not None and tokens:
+            # Per-lane decode feedback: every template with a request in this
+            # tick's batch gets the tick duration — the per-token side of its
+            # cost model, next to the prefill F + n·c fit.
+            for tmpl in {r.template for r in self.running.values()}:
+                self.policy.observe_decode(tmpl, decode_dt)
         for lane, tok in tokens.items():
             r = self.running.get(lane)
             if r is None:

@@ -13,8 +13,7 @@ Also here: global-norm clipping and the cosine/linear LR schedules.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,16 +18,12 @@ step state so the compression is unbiased over time (EF-SGD lineage,
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fission import scan_with_queries
 from repro.distributed.sharding import (
-    input_shardings,
-    mesh_context,
     param_shardings,
 )
 from repro.models.registry import Arch

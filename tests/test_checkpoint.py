@@ -7,14 +7,11 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
 
@@ -91,7 +88,6 @@ def test_restart_resumes_training(tmp_path):
 
     # run 5 steps, checkpoint at step 3
     mgr = CheckpointManager(tmp_path)
-    saved = None
     for i in range(5):
         params, state, _ = step(params, state, stream.batch_at(i))
         if i == 2:

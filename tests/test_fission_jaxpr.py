@@ -22,7 +22,7 @@ from repro.core.fission import (
     fission_scan,
     scan_with_queries,
 )
-from repro.core.query import QuerySpec, async_query, register_query, table_gather_spec
+from repro.core.query import async_query, table_gather_spec
 
 TABLE = jax.random.normal(jax.random.PRNGKey(7), (128, 8))
 IDS = (jnp.arange(24) * 5 + 3) % 128

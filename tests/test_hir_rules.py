@@ -4,7 +4,6 @@ transformed programs against the same deterministic service, plus
 hypothesis property tests over randomly generated programs."""
 from __future__ import annotations
 
-import dataclasses
 
 import pytest
 try:
@@ -35,7 +34,6 @@ from repro.core.strategies import (
     LowerThreshold,
     OneOrAll,
     PureAsync,
-    PureBatch,
 )
 
 TABLES = {"part": {i: i * 10 + 1 for i in range(1000)}}

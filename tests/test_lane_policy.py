@@ -1,0 +1,568 @@
+"""LanePolicy engine: per-lane strategy isolation (hot/cold promotion,
+no cross-lane state), tenant/lane quotas, weighted fairness, cross-template
+projection sharing, result-cache TTL + invalidation hooks, AdaptiveCost
+observe edge cases, and the scheduler's per-lane feedback / stuck-lane
+diagnostics."""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade gracefully: property tests skip, rest run
+    HAVE_HYPOTHESIS = False
+
+from repro.core.lane_policy import LanePolicy
+from repro.core.runtime import AsyncQueryRuntime
+from repro.core.services import TableService
+from repro.core.strategies import (
+    AdaptiveCost,
+    BatchingStrategy,
+    LowerThreshold,
+    PureAsync,
+    PureBatch,
+)
+
+TABLES = {"t": {k: k * 10 for k in range(100)}}
+USER_ROWS = {k: {"name": f"u{k}", "email": f"u{k}@x", "age": k % 80}
+             for k in range(50)}
+
+
+class Recording(BatchingStrategy):
+    """decide()=take-all, records every observe call."""
+
+    def __init__(self):
+        self.observed: list[tuple[int, float]] = []
+        self.decode_observed: list[float] = []
+
+    def decide(self, n_pending, producer_done):
+        return n_pending
+
+    def observe(self, batch_size, duration):
+        self.observed.append((batch_size, duration))
+
+    def observe_decode(self, duration):
+        self.decode_observed.append(duration)
+
+
+# ---------------------------------------------------------------------------
+# per-lane strategies: hot/cold promotion + isolation
+# ---------------------------------------------------------------------------
+
+
+def test_hot_cold_promotion_and_per_lane_instances():
+    p = LanePolicy(hot_threshold=3)
+    assert isinstance(p.strategy_for("a"), PureAsync)
+    assert not p.is_hot("a")
+    for _ in range(3):
+        p.note_submit("a")
+    assert p.is_hot("a")
+    hot_a = p.strategy_for("a")
+    assert isinstance(hot_a, AdaptiveCost)
+    assert p.strategy_for("a") is hot_a  # promotion is sticky, instance stable
+    # lane b is untouched: still cold, and a DIFFERENT instance
+    assert isinstance(p.strategy_for("b"), PureAsync)
+    assert p.strategy_for("b") is not p.strategy_for("a")
+    # two hot lanes get two independent models
+    for _ in range(3):
+        p.note_submit("b")
+    assert p.strategy_for("b") is not hot_a
+
+
+def test_override_pins_lane_regardless_of_temperature():
+    pinned = LowerThreshold(bt=3)
+    p = LanePolicy(hot_threshold=0, overrides={"reports": pinned})
+    for _ in range(10):
+        p.note_submit("reports")
+    assert p.strategy_for("reports") is pinned
+    assert isinstance(p.strategy_for("other"), AdaptiveCost)  # threshold 0: hot
+
+
+def test_observe_routes_to_the_lane_model_only():
+    p = LanePolicy(hot_threshold=0)  # every lane hot from the start
+    p.observe("a", 8, 1.0)
+    p.observe("a", 1, 0.5)
+    sa, sb = p.strategy_for("a"), p.strategy_for("b")
+    assert (sa._n_single, sa._n_batch) == (1, 1)
+    assert (sb._n_single, sb._n_batch) == (0, 0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        obs=st.lists(
+            st.tuples(
+                st.sampled_from(["lane_a", "lane_b", "lane_c"]),
+                st.integers(min_value=1, max_value=64),
+                st.floats(min_value=0.0, max_value=10.0,
+                          allow_nan=False, allow_infinity=False),
+            ),
+            max_size=60,
+        )
+    )
+    def test_property_lane_models_never_share_state(obs):
+        """Any interleaving of observations across lanes leaves each lane's
+        model with exactly the evidence IT was shown — nothing leaks."""
+        p = LanePolicy(hot_threshold=0)
+        per_lane: dict = {}
+        for lane, size, dur in obs:
+            p.observe(lane, size, dur)
+            kind = "single" if size <= 1 else "batch"
+            per_lane.setdefault(lane, {"single": 0, "batch": 0})[kind] += 1
+        for lane, want in per_lane.items():
+            s = p.strategy_for(lane)
+            assert s._n_single == want["single"]
+            assert s._n_batch == want["batch"]
+        # untouched lanes are pristine
+        for lane in {"lane_a", "lane_b", "lane_c"} - set(per_lane):
+            s = p.strategy_for(lane)
+            assert s._n_single == 0 and s._n_batch == 0
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[dev])")
+    def test_property_lane_models_never_share_state():
+        """Placeholder so the dropped property test surfaces as a SKIP
+        instead of silently disappearing from collection."""
+
+
+# ---------------------------------------------------------------------------
+# weighted fairness
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_fair_order_respects_weights():
+    p = LanePolicy(lane_weights={"a": 2.0, "b": 1.0})
+    picks = []
+    for _ in range(30):
+        lane = p.lane_order(["a", "b"])[0]
+        picks.append(lane)
+        p.charge(lane, 1)
+    assert picks.count("a") == 20 and picks.count("b") == 10
+
+
+def test_new_lane_joins_at_current_minimum_vtime():
+    p = LanePolicy()
+    for _ in range(10):
+        p.charge("old", 1)
+    # new joins AT old's vtime (10), not at 0 — it may not monopolize the
+    # picker to "catch up"; the tie breaks by join order (old first).
+    assert p.lane_order(["old", "new"]) == ["old", "new"]
+    p.charge("old", 1)
+    assert p.lane_order(["old", "new"])[0] == "new"
+
+
+def test_charge_scales_by_batch_size():
+    p = LanePolicy()
+    p.lane_order(["a", "b"])  # both join at vtime 0
+    p.charge("a", 10)  # one big batch
+    p.charge("b", 1)
+    assert p.lane_order(["a", "b"]) == ["b", "a"]
+
+
+def test_vtime_floor_spans_momentarily_drained_lanes():
+    """A lane first seen while the busy lanes' queues happen to be empty
+    must join at the GLOBAL vtime floor, not at 0 — otherwise it would
+    monopolize the picker until it 'caught up' with the established lane."""
+    p = LanePolicy()
+    p.lane_order(["heavy"])
+    for _ in range(100):
+        p.charge("heavy", 1)           # heavy at vtime 100...
+    assert p.lane_order(["light"]) == ["light"]  # ...and momentarily drained
+    p.charge("light", 1)
+    # heavy refills: alternation, not 100 picks of light first
+    assert p.lane_order(["heavy", "light"])[0] == "heavy"
+    p.charge("heavy", 1)   # 101 == light's 101: join order favors heavy
+    assert p.lane_order(["heavy", "light"])[0] == "heavy"
+    p.charge("heavy", 1)
+    assert p.lane_order(["heavy", "light"])[0] == "light"
+
+
+def test_invalid_lane_weight_rejected_at_construction():
+    with pytest.raises(ValueError):
+        LanePolicy(lane_weights={"t": 0.0})
+    with pytest.raises(ValueError):
+        LanePolicy(lane_weights={"t": -1.0})
+    with pytest.raises(ValueError):
+        LanePolicy(max_lanes=0)
+
+
+def test_lane_state_bounded_by_max_lanes():
+    p = LanePolicy(hot_threshold=1, max_lanes=4,
+                   overrides={"pinned": PureAsync()})
+    for i in range(50):
+        lane = f"lane{i}"
+        p.note_submit(lane)
+        p.strategy_for(lane)
+        p.charge(lane, 1)
+        p.note_submit("pinned")
+    assert len(p._submits) <= 4 + 1      # transient +1 before eviction settles
+    assert len(p._strategies) <= 4
+    assert "pinned" in p._submits        # overrides are never evicted
+    assert "lane49" in p._submits        # most recent lane survives
+    assert "lane0" not in p._submits     # coldest lanes were dropped
+
+
+# ---------------------------------------------------------------------------
+# quotas
+# ---------------------------------------------------------------------------
+
+
+class _GatedService(TableService):
+    """execute() blocks until released; lets a test pin a call in flight."""
+
+    def __init__(self, tables=None):
+        super().__init__(tables or TABLES)
+        self.started = threading.Event()
+        self.release = threading.Event()
+
+    def execute(self, query_name, params):
+        self.started.set()
+        assert self.release.wait(timeout=5.0)
+        return super().execute(query_name, params)
+
+
+def test_tenant_quota_blocks_only_that_tenant():
+    svc = _GatedService()
+    policy = LanePolicy(tenant_quotas={"whale": 2})
+    rt = AsyncQueryRuntime(svc, n_threads=1, policy=policy)
+    rt.submit("t.lookup", (1,), tenant="whale")
+    assert svc.started.wait(timeout=5.0)
+    rt.submit("t.lookup", (2,), tenant="whale")  # outstanding=2 = quota
+    entered, passed = threading.Event(), threading.Event()
+
+    def third():
+        entered.set()
+        rt.submit("t.lookup", (3,), tenant="whale")
+        passed.set()
+
+    t = threading.Thread(target=third, daemon=True)
+    t.start()
+    assert entered.wait(timeout=5.0)
+    assert not passed.wait(timeout=0.3)          # whale is at its bound...
+    h_other = rt.submit("t.lookup", (4,), tenant="minnow")  # ...others aren't
+    svc.release.set()
+    assert passed.wait(timeout=5.0)
+    rt.drain()
+    assert rt.fetch(h_other) == 40
+    rt.shutdown()
+    assert rt.stats.quota_waits >= 1
+
+
+def test_lane_quota_bounds_one_lane_not_others():
+    svc = _GatedService(tables={"a": {1: 1}, "b": {1: 2}})
+    policy = LanePolicy(lane_quota=1)
+    rt = AsyncQueryRuntime(svc, n_threads=1, policy=policy, dedup=False)
+    rt.submit("a.lookup", (1,))
+    assert svc.started.wait(timeout=5.0)  # a.lookup outstanding=1 = quota
+    entered, passed = threading.Event(), threading.Event()
+
+    def second_a():
+        entered.set()
+        rt.submit("a.lookup", (1,))
+        passed.set()
+
+    t = threading.Thread(target=second_a, daemon=True)
+    t.start()
+    assert entered.wait(timeout=5.0)
+    assert not passed.wait(timeout=0.3)   # lane a is full...
+    rt.submit("b.lookup", (1,))           # ...lane b admits immediately
+    svc.release.set()
+    assert passed.wait(timeout=5.0)
+    rt.drain()
+    rt.shutdown()
+
+
+def test_default_tenant_quota_applies_to_unlisted_tenants():
+    p = LanePolicy(tenant_quotas={"vip": 100}, default_tenant_quota=5)
+    assert p.tenant_quota("vip") == 100
+    assert p.tenant_quota("anyone") == 5
+    assert p.tenant_quota(None) is None  # anonymous submissions unbounded
+
+
+# ---------------------------------------------------------------------------
+# cross-template projection sharing
+# ---------------------------------------------------------------------------
+
+
+def _shared_policy(batch: bool = True):
+    # batch=True: PureBatch lanes (drain() before fetch).  batch=False: the
+    # cold PureAsync default executes immediately (fetch without drain).
+    if batch:
+        policy = LanePolicy(hot_threshold=0, hot_factory=PureBatch)
+    else:
+        policy = LanePolicy(hot_threshold=10**9)
+    policy.share("users.lookup", {
+        "users.sel_name": lambda r: r["name"],
+        "users.sel_email": lambda r: r["email"],
+    })
+    return policy
+
+
+def test_projection_variants_share_one_lane_and_one_call():
+    svc = TableService({"users": USER_ROWS})
+    rt = AsyncQueryRuntime(svc, n_threads=2, policy=_shared_policy())
+    h_name = rt.submit("users.sel_name", (7,))
+    h_email = rt.submit("users.sel_email", (7,))
+    h_full = rt.submit("users.lookup", (7,))
+    rt.drain()
+    assert rt.fetch(h_name) == "u7"
+    assert rt.fetch(h_email) == "u7@x"
+    assert rt.fetch(h_full) == USER_ROWS[7]
+    rt.shutdown()
+    # ONE execution served all three: variants coalesced onto the canonical
+    assert svc.stats.single_queries + svc.stats.batched_items == 1
+    assert rt.stats.deduped == 2
+    assert rt.stats.shared == 2
+    assert list(rt.stats.lane_traces) == ["users.lookup"]
+
+
+def test_projection_share_rejects_conflicts():
+    p = LanePolicy()
+    p.share("users.lookup", {"users.sel_name": lambda r: r["name"]})
+    with pytest.raises(ValueError):
+        p.share("other.lookup", {"users.sel_name": lambda r: r})
+    with pytest.raises(ValueError):
+        p.share("users.lookup", {"users.lookup": lambda r: r})
+
+
+def test_projection_applies_on_cache_hit():
+    svc = TableService({"users": USER_ROWS})
+    rt = AsyncQueryRuntime(svc, n_threads=1, policy=_shared_policy(batch=False),
+                           result_cache_size=8)
+    assert rt.fetch(rt.submit("users.lookup", (3,))) == USER_ROWS[3]
+    # cache now holds the canonical row; variant must hit AND project
+    assert rt.fetch(rt.submit("users.sel_name", (3,))) == "u3"
+    rt.shutdown()
+    assert rt.stats.cache_hits == 1
+    assert svc.stats.single_queries + svc.stats.batched_items == 1
+
+
+def test_projection_error_surfaces_via_fetch():
+    svc = TableService({"users": USER_ROWS})
+    policy = LanePolicy()
+    policy.share("users.lookup", {"users.bad": lambda r: r["nope"]})
+    rt = AsyncQueryRuntime(svc, n_threads=1, policy=policy)
+    h = rt.submit("users.bad", (1,))
+    with pytest.raises(KeyError):
+        rt.fetch(h)
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# result-cache TTL + invalidation hooks
+# ---------------------------------------------------------------------------
+
+
+def test_cache_ttl_expires_entries():
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=1, result_cache_size=4,
+                           result_cache_ttl=0.03)
+    assert rt.fetch(rt.submit("t.lookup", (1,))) == 10
+    assert rt.fetch(rt.submit("t.lookup", (1,))) == 10  # fresh: cache hit
+    assert rt.stats.cache_hits == 1
+    time.sleep(0.06)
+    assert rt.fetch(rt.submit("t.lookup", (1,))) == 10  # expired: re-executed
+    rt.shutdown()
+    assert rt.stats.cache_expired == 1
+    assert svc.stats.single_queries == 2
+
+
+def test_invalidate_one_entry_template_and_all():
+    svc = TableService({"a": {1: 1, 2: 2}, "b": {1: 3}})
+    rt = AsyncQueryRuntime(svc, n_threads=1, result_cache_size=8)
+    for q, k in (("a.lookup", 1), ("a.lookup", 2), ("b.lookup", 1)):
+        rt.fetch(rt.submit(q, (k,)))
+    assert rt.invalidate("a.lookup", (1,)) == 1
+    assert rt.invalidate("a.lookup") == 1          # the remaining a entry
+    assert rt.invalidate() == 1                    # drops b's entry
+    assert rt.invalidate("a.lookup", (9,)) == 0    # absent key: no-op
+    rt.fetch(rt.submit("b.lookup", (1,)))          # re-executed after clear
+    rt.shutdown()
+    assert svc.stats.single_queries == 4
+    assert rt.stats.cache_hits == 0
+
+
+def test_invalidate_resolves_shared_variants():
+    svc = TableService({"users": USER_ROWS})
+    rt = AsyncQueryRuntime(svc, n_threads=1, policy=_shared_policy(batch=False),
+                           result_cache_size=8)
+    rt.fetch(rt.submit("users.sel_name", (2,)))
+    # invalidating the VARIANT must drop the canonical cache entry
+    assert rt.invalidate("users.sel_name", (2,)) == 1
+    rt.fetch(rt.submit("users.lookup", (2,)))
+    rt.shutdown()
+    assert svc.stats.single_queries == 2  # no cache reuse after invalidation
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveCost.observe edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_observe_sees_entry_count_not_handle_count_for_deduped_batches():
+    """10 coalesced submissions are ONE service call: the strategy must see
+    batch_size 1 (what the service executed), not 10 (what fanned out)."""
+    rec = Recording()
+    svc = TableService(TABLES)
+    rt = AsyncQueryRuntime(svc, n_threads=1,
+                           policy=LanePolicy(hot_threshold=0,
+                                             hot_factory=lambda: rec))
+    handles = [rt.submit("t.lookup", (5,)) for _ in range(10)]
+    rt.drain()
+    assert [rt.fetch(h) for h in handles] == [50] * 10
+    rt.shutdown()
+    assert rt.stats.deduped == 9
+    assert [size for size, _ in rec.observed] == [1]
+
+
+def test_adaptive_zero_duration_observations_are_safe():
+    s = AdaptiveCost(min_samples=2)
+    for _ in range(3):
+        s.observe(1, 0.0)           # zero-duration clock reads
+    for n in (4, 8, 16):
+        s.observe(n, 0.0)
+    # s == 0 <= c: batching "never pays"; decide degrades to async, no crash
+    assert s.threshold in (None, float("inf"))
+    assert s.decide(100, False) in (1, 100)
+    f, c, single = s.estimates() or (0.0, 0.0, 0.0)
+    assert f >= 0.0 and c >= 0.0 and single == 0.0
+
+
+def test_adaptive_reset_midstream_returns_to_exploration():
+    s = AdaptiveCost(alpha=0.3)
+    for _ in range(5):
+        s.observe(1, 1.0)
+    for n in (4, 8, 16, 32):
+        s.observe(n, 3.0 + 0.1 * n)
+    assert s.threshold is not None
+    s.reset()
+    assert s.threshold is None
+    assert s._n_single == 0 and s._n_batch == 0 and s._w == 0.0
+    assert s._s is None and s.decode_latency is None
+    # exploration alternates again after reset
+    takes = {s.decide(10, False) for _ in range(4)}
+    assert takes == {1, 10}
+    # and the model can re-converge on fresh evidence
+    for _ in range(5):
+        s.observe(1, 1.0)
+    for n in (4, 8, 16, 32):
+        s.observe(n, 3.0 + 0.1 * n)
+    assert s.threshold == pytest.approx(3.333, abs=0.4)
+
+
+def test_adaptive_decode_latency_ewma():
+    s = AdaptiveCost(alpha=0.5)
+    assert s.decode_latency is None
+    s.observe_decode(1.0)
+    assert s.decode_latency == pytest.approx(1.0)
+    s.observe_decode(0.0)
+    assert s.decode_latency == pytest.approx(0.5)
+    # decode feedback must not disturb the submit-side cost model
+    assert s._n_single == 0 and s._n_batch == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: per-lane feedback + stuck-lane diagnostics
+# ---------------------------------------------------------------------------
+
+
+class StubEngine:
+    """Minimal engine contract for scheduler tests: no model, no JAX."""
+
+    def __init__(self, n_lanes=2, emit=True):
+        self.free_lanes = list(range(n_lanes))
+        self.active: dict = {}
+        self.emit = emit
+
+    @property
+    def n_free(self):
+        return len(self.free_lanes)
+
+    def admit(self, requests, template=None):
+        for r in requests:
+            r.lane = self.free_lanes.pop(0)
+            r.generated.append(0)  # prefill emits token 0
+            self.active[r.lane] = r
+        return (len(requests), 8)
+
+    def decode_tick(self):
+        if not self.emit:
+            return {}
+        return {lane: 1 for lane in self.active}
+
+    def retire(self, lane):
+        self.active.pop(lane, None)
+        self.free_lanes.append(lane)
+
+
+def _mk_requests(n, template, max_new=2):
+    import numpy as np
+
+    from repro.serving.request import Request
+
+    return [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=max_new, template=template)
+            for i in range(n)]
+
+
+def test_scheduler_routes_feedback_to_each_lanes_strategy():
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    rec_chat, rec_embed = Recording(), Recording()
+    policy = LanePolicy(overrides={"chat": rec_chat, "embed": rec_embed})
+    sched = ContinuousBatchingScheduler(StubEngine(n_lanes=2), policy=policy)
+    for r in _mk_requests(4, "chat") + _mk_requests(4, "embed"):
+        sched.submit(r)
+    sched.producer_done()
+    done = sched.run_until_drained(max_ticks=50)
+    assert len(done) == 8
+    # every admission was homogeneous and each lane saw only its own admits:
+    # the global warm-shape set skips the very first admit of shape (2, 8),
+    # which was chat's, so chat logs one steady-state admit and embed two.
+    assert [s for s, _ in rec_chat.observed] == [2]
+    assert [s for s, _ in rec_embed.observed] == [2, 2]
+    # decode-tick durations flowed to the lanes that were running
+    assert rec_chat.decode_observed and rec_embed.decode_observed
+
+
+def test_scheduler_admission_follows_weighted_fairness():
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    policy = LanePolicy(cold_factory=PureAsync, hot_threshold=10**9,
+                        lane_weights={"heavy": 3.0, "light": 1.0})
+    sched = ContinuousBatchingScheduler(StubEngine(n_lanes=1), policy=policy)
+    for r in _mk_requests(12, "heavy") + _mk_requests(12, "light"):
+        sched.submit(r)
+    sched.producer_done()
+    for _ in range(16):  # partial drain: observe the admission mix under load
+        sched.tick()
+    heavy = sum(n for _, n in sched.stats.lane_admissions.get("heavy", []))
+    light = sum(n for _, n in sched.stats.lane_admissions.get("light", []))
+    assert heavy == 3 * light  # 3:1 service ratio from the vtime weights
+
+
+def test_run_until_drained_names_stuck_lanes():
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    sched = ContinuousBatchingScheduler(StubEngine(n_lanes=1, emit=False))
+    for r in _mk_requests(2, "chat"):
+        sched.submit(r)
+    sched.producer_done()
+    with pytest.raises(RuntimeError) as exc:
+        sched.run_until_drained(max_ticks=5)
+    msg = str(exc.value)
+    assert "max_ticks=5" in msg
+    assert "chat" in msg  # both the queued template and the running lane
+
+
+def test_run_until_drained_without_work_still_returns():
+    from repro.serving.scheduler import ContinuousBatchingScheduler
+
+    sched = ContinuousBatchingScheduler(StubEngine(n_lanes=1))
+    # producer never signals done, but nothing is pending either: ticking out
+    # the budget is idle waiting, not a stuck lane — no error.
+    assert sched.run_until_drained(max_ticks=3) == []

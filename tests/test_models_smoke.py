@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.config import SHAPES
 from repro.models.registry import ARCH_IDS, get_arch
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import TrainStepConfig, make_train_step

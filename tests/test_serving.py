@@ -160,3 +160,24 @@ def test_prefetch_loader_order_and_bound():
     batches = list(loader)
     assert len(batches) == 10
     np.testing.assert_array_equal(batches[4]["tokens"], stream.batch_at(4)["tokens"])
+
+
+def test_engine_pins_one_prefill_shape_per_template(setup):
+    """template= admission pins the padding bucket: after a template's
+    largest batch, every later admit dispatches the SAME compiled shape."""
+    arch, params = setup
+    eng = InferenceEngine(arch, params, n_lanes=8, max_prompt_len=16, max_len=48)
+    rng = np.random.default_rng(7)
+    reqs = _requests(6, rng, max_new=2)
+    shape_a = eng.admit(reqs[:3], template="chat")     # bucket (4, plen)
+    assert shape_a[0] == 4
+    for r in reqs[:3]:
+        eng.retire(r.lane)
+    shape_b = eng.admit(reqs[3:4], template="chat")    # 1 request, pinned shape
+    assert shape_b == shape_a
+    assert eng.template_shapes["chat"] == shape_a
+    for r in reqs[3:4]:
+        eng.retire(r.lane)
+    # an unrelated template sizes its own bucket from scratch
+    shape_c = eng.admit(reqs[4:5], template="embed")
+    assert shape_c[0] == 1

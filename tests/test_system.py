@@ -4,7 +4,6 @@ runtime with adaptive batching — against a *JAX model* as the backing
 service (the ML instantiation), with observable semantics preserved."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
@@ -90,3 +89,32 @@ def test_async_faster_than_sync_on_latency_bound_service():
 
     assert out["acc"] == base["acc"] == 60
     assert t_async < t_sync / 2, (t_sync, t_async)
+
+
+def test_model_service_lane_keyed_padding_buckets():
+    """pad_batches=True: each lane (query template) converges on ONE
+    power-of-two batch shape, so jit recompiles stop after the lane's
+    largest batch — the device analogue of a prepared statement."""
+    W = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+
+    def score(x):
+        return jnp.tanh(x @ W).sum()
+
+    svc = ModelService(score, pad_batches=True)
+    items = [jax.random.normal(jax.random.PRNGKey(i), (8,)) for i in range(16)]
+
+    out3 = svc.execute_batch("score", [(x,) for x in items[:3]])
+    assert len(out3) == 3
+    assert svc.lane_buckets["score"] == 4          # 3 -> bucket 4
+    out2 = svc.execute_batch("score", [(x,) for x in items[3:5]])
+    assert len(out2) == 2                          # padded to 4, sliced to 2
+    assert svc.lane_buckets["score"] == 4
+    svc.execute_batch("score", [(x,) for x in items[:6]])
+    assert svc.lane_buckets["score"] == 8          # grows monotonically
+    # a different lane gets its own bucket
+    svc.execute_batch("embed", [(x,) for x in items[:2]])
+    assert svc.lane_buckets["embed"] == 2
+    assert svc.stats.padded_items == 1 + 2 + 2 + 0
+    # padded results equal unpadded execution
+    ref = ModelService(score).execute_batch("score", [(x,) for x in items[3:5]])
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref), rtol=1e-6)

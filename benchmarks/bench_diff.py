@@ -1,17 +1,19 @@
 """Cross-run perf-regression diff for ``results/bench_lanes.json``.
 
-CI (main) uploads each run's ``results/bench*.json`` as a workflow
-artifact; the next run downloads the previous artifact and calls this
-script to compare the two.  Only *ratio* metrics are gated: both sides of
-a ratio are measured on the same runner in the same run, so the metric is
-self-normalized against machine speed — absolute req/s would false-alarm
-on every slow runner.
+CI uploads each main run's ``results/bench*.json`` as a workflow artifact;
+both the next main run AND every PR run download main's latest baseline
+artifact and call this script to compare against it — a PR cannot land a
+silent perf regression and only discover it after merge.  Only *ratio*
+metrics are gated: both sides of a ratio are measured on the same runner
+in the same run, so the metric is self-normalized against machine speed —
+absolute req/s would false-alarm on every slow runner.
 
-Exit status is non-zero when any gated metric dropped more than
-``--max-drop`` (default 20%) relative to the baseline, unless
-``--warn-only`` is set, in which case regressions are printed as GitHub
-``::warning`` annotations but the step stays green.  Metrics missing from
-the baseline (added since) are reported and skipped.
+Exit status is non-zero when any gated metric dropped more than its
+allowance (``--max-drop``, default 20%, widened per-metric for the noisier
+ratios) relative to the baseline, unless ``--warn-only`` is set, in which
+case regressions are printed as GitHub ``::warning`` annotations but the
+step stays green.  Metrics missing from the baseline (added since) are
+reported and skipped.
 """
 from __future__ import annotations
 
@@ -19,14 +21,18 @@ import argparse
 import json
 import sys
 
-# Higher-is-better ratio metrics gated across runs.  Dotted paths into
-# results/bench_lanes.json.
-GATED_METRICS = [
-    "batch_size_ratio",
-    "throughput_ratio",
-    "skewed_tenant.throughput_ratio",
-    "shared_projection.round_trip_gain",
-]
+# Higher-is-better ratio metrics gated across runs: dotted path into
+# results/bench_lanes.json -> max-drop override (None = the CLI default).
+# The contention ratio is gated loosely here because thread-scheduling
+# noise swings it run to run; its hard floor (>= 2x) is asserted
+# absolutely by the CI bench step itself.
+GATED_METRICS = {
+    "batch_size_ratio": None,
+    "throughput_ratio": None,
+    "skewed_tenant.throughput_ratio": None,
+    "shared_projection.round_trip_gain": None,
+    "contention.submit_throughput_ratio": 0.5,
+}
 
 
 def lookup(doc: dict, dotted: str):
@@ -41,7 +47,8 @@ def lookup(doc: dict, dotted: str):
 def diff(baseline: dict, current: dict, max_drop: float) -> list[str]:
     """Human-readable regression lines (empty → all gates pass)."""
     regressions = []
-    for metric in GATED_METRICS:
+    for metric, override in GATED_METRICS.items():
+        allowed = override if override is not None else max_drop
         base = lookup(baseline, metric)
         cur = lookup(current, metric)
         if base is None:
@@ -52,13 +59,13 @@ def diff(baseline: dict, current: dict, max_drop: float) -> list[str]:
                                "but MISSING from current results")
             continue
         drop = (base - cur) / base if base > 0 else 0.0
-        status = "REGRESSION" if drop > max_drop else "ok"
+        status = "REGRESSION" if drop > allowed else "ok"
         print(f"  {metric}: baseline {base:.3f} -> current {cur:.3f} "
-              f"({-drop:+.1%}) [{status}]")
-        if drop > max_drop:
+              f"({-drop:+.1%}) [{status}, allowed {allowed:.0%}]")
+        if drop > allowed:
             regressions.append(
                 f"{metric} dropped {drop:.1%} (baseline {base:.3f} -> "
-                f"current {cur:.3f}, allowed drop {max_drop:.0%})")
+                f"current {cur:.3f}, allowed drop {allowed:.0%})")
     return regressions
 
 

@@ -28,6 +28,15 @@ in which columns they project.  Unshared, each template is its own lane:
 all three canonicalize onto one lane, identical keys coalesce across
 variants, and each handle projects its own columns at fan-out — the
 SharedDB "one stone" effect, measured in service round trips.
+
+Part 5 (lock contention) — the premise check: asynchronous submission only
+wins when submission itself is cheap.  32 closed-loop producers and 8
+workers hammer a near-zero-latency service through (a) the frozen PR 2
+``GlobalLockRuntime`` (one lock for submit/fetch/pick, 100 ms-polled
+quotas, global notify_all per delivery) and (b) the lock-sharded
+``AsyncQueryRuntime`` (per-lane locks, striped handle/dedup state,
+ready-lane queue, CV-gated quotas).  Reported: submissions/s and fetch
+p99; CI gates ``contention.submit_throughput_ratio`` at >= 2x.
 """
 from __future__ import annotations
 
@@ -35,11 +44,13 @@ import json
 import random
 import threading
 import time
+from collections import deque
 from pathlib import Path
 
 from benchmarks.common import CSV, make_service, run_variant
 from repro.core.lane_policy import LanePolicy
 from repro.core.runtime import AsyncQueryRuntime
+from repro.core.runtime_baseline import GlobalLockRuntime
 from repro.core.services import TableService, _StatsMixin
 from repro.core.strategies import AdaptiveCost, LowerThreshold, PureAsync, PureBatch
 
@@ -69,8 +80,8 @@ def run_mixed(sharded: bool, n_requests: int, n_threads: int = 8) -> dict:
         "wall_s": dt,
         "throughput_rps": n_requests / dt,
         "mean_batch_size": st.mean_batch_size,
-        "batch_executions": st.batch_executions,
-        "single_executions": st.single_executions,
+        "batch_executions": int(st.batch_executions),
+        "single_executions": int(st.single_executions),
         "lanes": {k: len(v) for k, v in st.lane_traces.items()},
         "service": svc.stats.snapshot(),
     }
@@ -154,8 +165,8 @@ def run_skewed(per_lane: bool, n_hot: int, n_cold: int, n_threads: int = 8) -> d
         "wall_s": dt,
         "throughput_rps": len(work) / dt,
         "mean_batch_size": st.mean_batch_size,
-        "batch_executions": st.batch_executions,
-        "single_executions": st.single_executions,
+        "batch_executions": int(st.batch_executions),
+        "single_executions": int(st.single_executions),
         "service": svc.stats.snapshot(),
     }
     if per_lane:
@@ -202,8 +213,89 @@ def run_shared_projection(shared: bool, n_keys: int) -> dict:
         "round_trips": st["round_trips"],
         "batches": st["batches"],
         "executed_items": st["single_queries"] + st["batched_items"],
-        "deduped": rt.stats.deduped,
-        "rerouted": rt.stats.shared,
+        "deduped": int(rt.stats.deduped),
+        "rerouted": int(rt.stats.shared),
+    }
+
+
+def run_contention(sharded_locks: bool, n_producers: int = 32,
+                   n_workers: int = 8, n_per_producer: int = 150,
+                   window: int = 32, n_templates: int = 256) -> dict:
+    """Closed-loop contention driver: each producer keeps up to ``window``
+    requests outstanding, fetching the oldest before submitting more.  The
+    service is near-zero latency (in-memory dict misses), so wall time is
+    dominated by the runtime's own synchronization — exactly the cost the
+    lock-sharding refactor attacks.
+
+    Producers cycle over ``n_templates`` (high template cardinality, all
+    lanes backlogged, PureAsync picks): the global-lock baseline re-scans /
+    re-orders EVERY lane under its one lock for EVERY pick, and its every
+    delivery ``notify_all`` wakes every blocked fetcher in the process; the
+    lock-sharded runtime pops one ready lane in O(1) and wakes only the
+    delivered handle's stripe.  Eight tenants with generous quotas keep the
+    quota-accounting path on (it never blocks here; CV-vs-polling wakeup
+    latency is asserted by the regression tests instead)."""
+    svc = TableService({f"t{j}": {} for j in range(n_templates)})
+    policy = LanePolicy(
+        hot_threshold=10**9,           # stay PureAsync: per-request picks,
+                                       # the submission-cost worst case
+        default_tenant_quota=1 << 20,  # generous: exercises the quota
+                                       # accounting path, never blocks
+    )
+    cls = AsyncQueryRuntime if sharded_locks else GlobalLockRuntime
+    rt = cls(svc, n_threads=n_workers, policy=policy)
+
+    lat: list[list[float]] = [[] for _ in range(n_producers)]
+    submit_done = [0.0] * n_producers
+    barrier = threading.Barrier(n_producers + 1)
+
+    def producer(pid: int) -> None:
+        tenant = f"tenant{pid % 8}"
+        my_lat = lat[pid]
+        win: deque = deque()
+        barrier.wait()
+        for i in range(n_per_producer):
+            tmpl = f"t{(pid + i * n_producers) % n_templates}.lookup"
+            win.append(rt.submit(tmpl, (pid * n_per_producer + i,),
+                                 tenant=tenant))
+            if len(win) >= window:
+                t0 = time.perf_counter()
+                rt.fetch(win.popleft())
+                my_lat.append(time.perf_counter() - t0)
+        submit_done[pid] = time.perf_counter()
+        while win:
+            t0 = time.perf_counter()
+            rt.fetch(win.popleft())
+            my_lat.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=producer, args=(pid,), daemon=True)
+               for pid in range(n_producers)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t_start = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t_start
+    rt.drain()
+    rt.shutdown()
+
+    n_total = n_producers * n_per_producer
+    assert int(rt.stats.completed) == int(rt.stats.submitted) == n_total
+    submit_wall = max(submit_done) - t_start
+    all_lat = sorted(x for per in lat for x in per)
+    p99 = all_lat[max(0, int(0.99 * len(all_lat)) - 1)]
+    return {
+        "lock_sharded": sharded_locks,
+        "n_producers": n_producers,
+        "n_workers": n_workers,
+        "n_requests": n_total,
+        "wall_s": wall,
+        "submit_rps": n_total / max(submit_wall, 1e-9),
+        "fetch_p99_ms": p99 * 1e3,
+        "fetch_p50_ms": all_lat[len(all_lat) // 2] * 1e3,
+        "quota_waits": int(rt.stats.quota_waits),
+        "service": svc.stats.snapshot(),
     }
 
 
@@ -280,6 +372,43 @@ def main(csv: CSV | None = None, quick: bool = False):
             str(shared["round_trips"]), "rt")
     csv.add("lanes.shared_projection.round_trip_gain",
             f"{report['shared_projection']['round_trip_gain']:.2f}", "x")
+
+    # -- lock contention: global-lock baseline vs lock-sharded runtime ----
+    # Best-of-3 per side (min-time-over-reps capability measurement):
+    # thread-scheduling noise on small runners only ever LOWERS a rep's
+    # throughput (40 runnable threads occasionally convoy on the GIL and
+    # everything — including raw submit cost — inflates ~6x uniformly),
+    # so the best rep is the honest synchronization cost.
+    n_per = 100 if quick else 250
+
+    def best_contention(sharded_locks: bool) -> dict:
+        reps = [run_contention(sharded_locks=sharded_locks,
+                               n_per_producer=n_per) for _ in range(3)]
+        return max(reps, key=lambda r: r["submit_rps"])
+
+    glob_lock = best_contention(sharded_locks=False)
+    shard_lock = best_contention(sharded_locks=True)
+    report["contention"] = {
+        "workload": f"32 producers x 8 workers, 256 templates / 8 tenants, "
+                    f"window 32, n={32 * n_per}, near-zero-latency service, "
+                    "best of 3 reps per side",
+        "global_lock": glob_lock,
+        "lock_sharded": shard_lock,
+        "submit_throughput_ratio": (shard_lock["submit_rps"]
+                                    / max(glob_lock["submit_rps"], 1e-9)),
+        "fetch_p99_gain": (glob_lock["fetch_p99_ms"]
+                           / max(shard_lock["fetch_p99_ms"], 1e-9)),
+    }
+    csv.add("lanes.contention.global.submit_rps",
+            f"{glob_lock['submit_rps']:.0f}", "req_per_s")
+    csv.add("lanes.contention.sharded.submit_rps",
+            f"{shard_lock['submit_rps']:.0f}", "req_per_s")
+    csv.add("lanes.contention.submit_throughput_ratio",
+            f"{report['contention']['submit_throughput_ratio']:.2f}", "x")
+    csv.add("lanes.contention.global.fetch_p99",
+            f"{glob_lock['fetch_p99_ms']:.2f}", "ms")
+    csv.add("lanes.contention.sharded.fetch_p99",
+            f"{shard_lock['fetch_p99_ms']:.2f}", "ms")
 
     out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
     out.parent.mkdir(exist_ok=True)

@@ -1,0 +1,78 @@
+"""Absolute floor assertions over ``results/bench_lanes.json``.
+
+Single source for the hard thresholds both CI jobs gate on — the PR
+``bench-gate`` job and the main ``bench-smoke`` job invoke this same
+script, so the floors cannot drift between them.  Floors are absolute
+(unlike ``bench_diff.py``'s relative cross-run gates) because each is a
+same-machine ratio with a physically-motivated minimum:
+
+* Part 2 — sharded lanes must beat the single queue on interleaved
+  traffic (2x mean batch or 1.5x throughput);
+* Part 3 — the per-lane policy must beat one global model on skewed
+  heterogeneous tenants by >= 1.3x;
+* Part 4 — projection sharing must cost strictly fewer round trips;
+* Part 5 — the lock-sharded runtime must sustain >= 2x the global-lock
+  baseline's submissions/s at 32 producers / 8 workers.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str = "results/bench_lanes.json") -> list[str]:
+    with open(path) as f:
+        d = json.load(f)
+    failures = []
+
+    print("batch_size_ratio", d["batch_size_ratio"])
+    print("throughput_ratio", d["throughput_ratio"])
+    if not (d["batch_size_ratio"] >= 2.0 or d["throughput_ratio"] >= 1.5):
+        failures.append(
+            "sharded lanes must beat the single queue: batch_size_ratio "
+            f"{d['batch_size_ratio']:.2f} < 2.0 and throughput_ratio "
+            f"{d['throughput_ratio']:.2f} < 1.5")
+
+    st = d["skewed_tenant"]
+    print("skewed_tenant.throughput_ratio", st["throughput_ratio"])
+    if st["throughput_ratio"] < 1.3:
+        failures.append(
+            "per-lane policy must beat the global strategy by >= 1.3x, got "
+            f"{st['throughput_ratio']:.2f}")
+
+    sp = d["shared_projection"]
+    print("shared rt", sp["shared"]["round_trips"],
+          "unshared rt", sp["unshared"]["round_trips"])
+    if not sp["shared"]["round_trips"] < sp["unshared"]["round_trips"]:
+        failures.append(
+            "projection sharing must cost fewer service round trips "
+            f"({sp['shared']['round_trips']} vs "
+            f"{sp['unshared']['round_trips']})")
+
+    ct = d["contention"]
+    print("contention.submit_throughput_ratio", ct["submit_throughput_ratio"])
+    print("contention fetch p99 (ms): global",
+          ct["global_lock"]["fetch_p99_ms"],
+          "sharded", ct["lock_sharded"]["fetch_p99_ms"])
+    if ct["submit_throughput_ratio"] < 2.0:
+        failures.append(
+            "lock-sharded runtime must sustain >= 2x the global-lock "
+            "baseline's submissions/s at 32 producers / 8 workers, got "
+            f"{ct['submit_throughput_ratio']:.2f}")
+
+    return failures
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["results/bench_lanes.json"])[0]
+    failures = check(path)
+    if not failures:
+        print("check_floors: all absolute floors hold")
+        return 0
+    for f in failures:
+        print(f"::error::check_floors: {f}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Download the latest successful main run's bench-results artifact into
+# baseline-results/ and, if present, diff the gated ratio metrics against
+# it.  Single source for the baseline-fetch + diff logic shared by the
+# bench-gate (PR) and bench-smoke (main) CI jobs — like check_floors.py,
+# so the two jobs cannot drift.  Requires GH_TOKEN; never fails the fetch
+# itself (a missing baseline is reported and the diff is skipped).
+set -u
+
+run_id=$(gh run list --repo "$GITHUB_REPOSITORY" --workflow ci \
+  --branch main --status success --limit 1 \
+  --json databaseId --jq '.[0].databaseId')
+if [ -n "$run_id" ]; then
+  echo "latest successful main run: $run_id"
+  gh run download "$run_id" --repo "$GITHUB_REPOSITORY" \
+    --name bench-results --dir baseline-results \
+    || echo "::warning::run $run_id has no bench-results artifact; diff will be skipped"
+else
+  echo "::warning::no successful main run; bench diff will be skipped"
+fi
+
+if [ -f baseline-results/bench_lanes.json ]; then
+  PYTHONPATH=src python benchmarks/bench_diff.py \
+    --baseline baseline-results/bench_lanes.json \
+    --current results/bench_lanes.json \
+    --max-drop 0.20
+else
+  echo "no baseline artifact; skipping bench diff"
+fi

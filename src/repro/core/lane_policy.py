@@ -33,6 +33,11 @@ the per-lane brain the runtime and the serving scheduler both consult:
   executes the canonical (superset) query once; each handle applies its own
   projection at fan-out, so ``users.sel_name`` and ``users.sel_email`` for
   the same key cost ONE service round trip.
+* **Auto-detected sharing** from query metadata: :meth:`describe` records
+  which relation a template reads (``base``) and which ``columns`` it
+  projects; :meth:`resolve` then derives the canonical template and the
+  projector itself, so explicit :meth:`share` registration becomes
+  optional.  An explicit ``share`` always wins over an auto-derived one.
 
 The engine is deliberately runtime-agnostic: the
 :class:`~repro.core.runtime.AsyncQueryRuntime` consults it under its own
@@ -125,6 +130,10 @@ class LanePolicy:
         self._use_seq = 0
         # projection sharing: variant template -> (canonical, projector)
         self._shared: dict[str, tuple[str, Callable[[Any], Any]]] = {}
+        self._auto_shared: set[str] = set()  # derived (not explicit) entries
+        self._auto_miss: set[str] = set()    # memoized "no superset" results
+        # query metadata: template -> (base relation, columns | None=full row)
+        self._meta: dict[str, tuple[str, Optional[tuple[str, ...]]]] = {}
 
     # -------------------------------------------------------- lane strategy
     def note_submit(self, lane: str) -> None:
@@ -222,6 +231,27 @@ class LanePolicy:
                     self._next_seq += 1
             return sorted(cand, key=lambda c: (self._vtime[c], self._join_seq[c]))
 
+    def lane_min(self, candidates: Iterable[str]) -> str:
+        """The weighted-fair pick alone: the candidate with the smallest
+        ``(vtime, join_seq)`` in ONE O(n) pass — what a ready-queue pop
+        actually needs, without :meth:`lane_order`'s full sort.  New lanes
+        join at the global vtime floor exactly as in ``lane_order``."""
+        with self._lock:
+            floor = min(self._vtime.values(), default=0.0)
+            best_key = best = None
+            for c in candidates:
+                if c not in self._vtime:
+                    self._vtime[c] = floor
+                if c not in self._join_seq:
+                    self._join_seq[c] = self._next_seq
+                    self._next_seq += 1
+                k = (self._vtime[c], self._join_seq[c])
+                if best_key is None or k < best_key:
+                    best_key, best = k, c
+            if best is None:
+                raise ValueError("lane_min needs at least one candidate")
+            return best
+
     def charge(self, lane: str, n: int) -> None:
         """Account ``n`` picked requests against ``lane``'s fair share."""
         with self._lock:
@@ -242,21 +272,102 @@ class LanePolicy:
         """Register templates that differ from ``canonical`` only in
         projection.  ``projections[variant]`` maps the canonical query's
         (superset) result to the variant's result.  Subsequent submissions
-        of a variant run on the canonical lane and project at fan-out."""
+        of a variant run on the canonical lane and project at fan-out.
+
+        Explicit registration always wins: it silently replaces an
+        auto-derived share (see :meth:`describe`), and only conflicts with
+        a *different* explicit canonical raise."""
         with self._lock:
             for variant, proj in projections.items():
                 if variant == canonical:
                     raise ValueError(f"variant {variant!r} equals its canonical")
                 existing = self._shared.get(variant)
-                if existing is not None and existing[0] != canonical:
+                if (existing is not None and existing[0] != canonical
+                        and variant not in self._auto_shared):
                     raise ValueError(
                         f"{variant!r} already shared onto {existing[0]!r}")
                 self._shared[variant] = (canonical, proj)
+                self._auto_shared.discard(variant)
+
+    def describe(self, template: str, *, base: str,
+                 columns: Optional[Iterable[str]] = None) -> None:
+        """Record query metadata for auto-detected projection sharing.
+
+        ``base`` names the relation/predicate signature the template reads
+        (templates are projection-compatible only within one ``base``);
+        ``columns`` lists the projected columns, ``None`` meaning the full
+        row (the superset query).  By convention a single-column template
+        returns the bare column value and a multi-column (or full-row)
+        template returns a mapping — the projectors :meth:`resolve` derives
+        follow that convention, so ``policy.share`` registration becomes
+        optional for described templates.  Explicit ``share`` still wins.
+        """
+        with self._lock:
+            cols = None if columns is None else tuple(columns)
+            self._meta[template] = (base, cols)
+            # Metadata changed: previously derived routings (and memoized
+            # misses) may now be stale (e.g. a fuller superset appeared) —
+            # rederive lazily.
+            for variant in list(self._auto_shared):
+                del self._shared[variant]
+            self._auto_shared.clear()
+            self._auto_miss.clear()
+
+    def _auto_resolve_locked(self, template: str) -> Optional[tuple]:
+        """Derive ``(canonical, projector)`` for a described template, or
+        None.  The canonical is the described template over the same base
+        with the WIDEST covering column set (full row — ``columns=None`` —
+        widest of all), so every variant of a base converges on the same
+        shared lane; name breaks ties deterministically."""
+        meta = self._meta.get(template)
+        if meta is None:
+            return None
+        base, cols = meta
+        if cols is None:
+            return None  # already the superset query: nothing to derive
+        want = set(cols)
+        best = None  # (width, name) — width: #columns, inf for full row
+        for other, (obase, ocols) in self._meta.items():
+            if other == template or obase != base:
+                continue
+            if ocols is None:
+                width = float("inf")
+            elif want <= set(ocols) and len(ocols) > len(cols):
+                width = len(ocols)
+            else:
+                continue
+            if (best is None or width > best[0]
+                    or (width == best[0] and other < best[1])):
+                best = (width, other)
+        if best is None:
+            return None
+        canonical = best[1]
+        if len(cols) == 1:
+            col = cols[0]
+            projector = lambda row, _c=col: row[_c]  # noqa: E731
+        else:
+            projector = lambda row, _cs=cols: {c: row[c] for c in _cs}  # noqa: E731
+        self._shared[template] = (canonical, projector)
+        self._auto_shared.add(template)
+        return canonical, projector
 
     def resolve(self, query_name: str) -> tuple[str, Optional[Callable]]:
-        """``(canonical_query, projector | None)`` for a submission."""
+        """``(canonical_query, projector | None)`` for a submission —
+        explicit ``share`` registrations first, then auto-derived routings
+        from :meth:`describe` metadata.  Both hits and "no superset"
+        misses are memoized (invalidated by :meth:`describe`), so this
+        stays O(1) under the policy lock on the submit hot path."""
         with self._lock:
             hit = self._shared.get(query_name)
+            if (hit is None and self._meta
+                    and query_name not in self._auto_miss):
+                hit = self._auto_resolve_locked(query_name)
+                if hit is None and query_name in self._meta:
+                    # Memoize "described but no covering superset" so the
+                    # O(|meta|) scan runs once, not per submit.  Undescribed
+                    # templates are O(1) rejects and need no entry, which
+                    # keeps this set bounded by len(_meta).
+                    self._auto_miss.add(query_name)
         if hit is None:
             return query_name, None
         return hit

@@ -12,10 +12,8 @@ issue many templates at once, and SharedDB-style shared execution says the
 win comes from batching *across* concurrent queries.  So:
 
   * **Lanes.**  Pending requests are sharded into one lane per query
-    template (``query_name``).  A free worker round-robins over lanes and
-    asks the :class:`BatchingStrategy` how many of THAT lane's pending
-    requests to take — each lane batches independently, so mixed traffic
-    batches per-template instead of serializing.  ``sharded=False``
+    template (``query_name``).  Each lane batches independently, so mixed
+    traffic batches per-template instead of serializing.  ``sharded=False``
     restores the paper's single-queue behaviour (one lane, batches split at
     template boundaries) for A/B comparison — see
     ``benchmarks/bench_lanes.py``.
@@ -26,23 +24,47 @@ win comes from batching *across* concurrent queries.  So:
     disable with ``dedup=False`` for effectful services.
   * **Result cache.**  Opt-in LRU (``result_cache_size``) serving repeat
     submissions of already-completed requests without a service call
-    (``stats.cache_hits``).
+    (``stats.cache_hits``), with TTL expiry (``result_cache_ttl``) and an
+    explicit :meth:`invalidate` hook for write-through services.
   * **Adaptive feedback.**  Every service call's ``(batch_size, duration)``
     is reported to ``strategy.observe`` so cost-learning strategies
     (:class:`~repro.core.strategies.AdaptiveCost`) can fit the service's
     fixed-vs-per-item cost model online.
   * **Per-lane policy** (``policy=``): a
     :class:`~repro.core.lane_policy.LanePolicy` replaces the one global
-    strategy with per-lane instances (hot lanes learn their own
-    :class:`AdaptiveCost` model from their own feedback, cold lanes stay
-    pure-async), replaces the one global ``max_pending`` with per-tenant /
-    per-lane quotas (``submit(..., tenant=...)``), picks lanes by weighted
-    fair queueing instead of round-robin, and canonicalizes templates that
-    differ only in projection onto one shared lane whose result fans out
-    through per-handle projections (SharedDB-style operator sharing).
-  * **Cache TTL + invalidation.**  The opt-in result LRU takes a
-    ``result_cache_ttl`` (entries expire on the read path) and an explicit
-    :meth:`invalidate` hook for write-through services.
+    strategy with per-lane instances, the one global ``max_pending`` with
+    per-tenant / per-lane quotas (``submit(..., tenant=...)``), picks lanes
+    by weighted fair queueing, and canonicalizes projection-only template
+    variants onto one shared lane (explicitly via ``policy.share`` or
+    auto-detected from ``policy.describe`` metadata).
+
+**Lock-sharded hot path.**  Asynchronous submission only wins when
+submission itself is cheap (the paper's whole premise), so since the
+lock-sharding refactor NO global lock exists on the submit/fetch/worker
+path.  Synchronization is sharded to match the sharded data:
+
+  * each **lane** has its own lock guarding only its pending deque;
+  * the **dedup registries** (queued/in-flight request identity) are
+    striped across ``n_stripes`` locks keyed by request hash;
+  * **handle state** (results, errors, pending metadata) is striped the
+    same way, each stripe with its own condition variable — a delivery
+    wakes only fetchers hashed to that stripe, not every blocked thread;
+  * workers block on a :class:`~repro.core.concurrency.ReadyLanes` queue
+    of lanes that have pending work (weighted-fair pop under a policy)
+    instead of polling a global CV and scanning idle lanes;
+  * **quota waits** sleep on per-tenant / per-lane
+    :class:`~repro.core.concurrency.QuotaGate` condition variables and are
+    woken by the release that frees a slot — no fixed-interval polling
+    anywhere in the quota path;
+  * batch deliveries are fanned out per stripe after the service call,
+    outside any lane lock;
+  * stats counters are :class:`~repro.core.concurrency.ShardedCounter`
+    stripes, so producers do not convoy on bookkeeping.
+
+Lock-ordering rules live in ROADMAP.md ("Locking model"); the frozen
+global-lock PR 2 implementation survives as
+:class:`~repro.core.runtime_baseline.GlobalLockRuntime` for the Part 5
+contention benchmark's A/B.
 
 The paper-facing API is unchanged:
 
@@ -53,24 +75,28 @@ The paper-facing API is unchanged:
     ``service.execute_batch`` (the runtime query rewrite), splitting the
     result set back per request.
 
-Production extras carried over from the single-queue version:
+Production extras carried over:
 
   * **straggler mitigation**: ``fetch`` past ``straggler_timeout``
     re-submits the request so another lane/connection retries; first
-    result wins, duplicates are dropped idempotently.
+    result wins, duplicates are dropped idempotently.  The deadline is
+    recomputed against the handle's own (canonical) lane after each
+    resubmit, measured from when the duplicate is actually enqueued.
   * **bounded queue** (§8 memory overheads): ``submit`` blocks when more
     than ``max_pending`` requests are outstanding (producer back-off).
-  * **batch-size traces**, now also per lane (``stats.lane_traces``) for
+  * **batch-size traces**, also per lane (``stats.lane_traces``) for
     Fig. 10-style analysis of each template's ramp.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 from collections import OrderedDict, deque
 from typing import Any, Optional
 
+from repro.core.concurrency import QuotaGate, ReadyLanes, ShardedCounter
 from repro.core.lane_policy import LanePolicy
 from repro.core.services import QueryService
 from repro.core.strategies import BatchingStrategy, PureAsync
@@ -91,38 +117,58 @@ class Handle:
         return f"<handle #{self.key} {self.query_name}>"
 
 
-@dataclasses.dataclass
 class RuntimeStats:
-    submitted: int = 0
-    completed: int = 0
-    single_executions: int = 0
-    batch_executions: int = 0
-    resubmissions: int = 0
-    deduped: int = 0      # submissions coalesced onto a pending/in-flight call
-    cache_hits: int = 0   # submissions served from the completed-result LRU
-    cache_expired: int = 0  # LRU entries dropped because their TTL lapsed
-    shared: int = 0       # submissions rerouted onto a canonical lane (projection)
-    quota_waits: int = 0  # submissions that blocked on a quota / back-pressure bound
-    batch_trace: list = dataclasses.field(default_factory=list)  # (seq, size)
-    # per-lane (seq, size) traces; lane key == query template (or __single__)
-    lane_traces: dict = dataclasses.field(default_factory=dict)
+    """Runtime counters, striped across locks so the hot path never convoys
+    on bookkeeping.  Fields compare/convert like numbers
+    (:class:`~repro.core.concurrency.ShardedCounter`); ``snapshot`` returns
+    plain JSON-safe values.  Trace lists rely on the GIL's atomic
+    ``list.append``; per-lane trace lists are only appended under that
+    lane's own lock."""
+
+    _COUNTERS = (
+        "submitted",
+        "completed",
+        "single_executions",
+        "batch_executions",
+        "resubmissions",
+        "deduped",      # submissions coalesced onto a pending/in-flight call
+        "cache_hits",   # submissions served from the completed-result LRU
+        "cache_expired",  # LRU entries dropped because their TTL lapsed
+        "shared",       # submissions rerouted onto a canonical lane (projection)
+        "quota_waits",  # submissions that blocked on a quota / back-pressure bound
+    )
+
+    def __init__(self):
+        for name in self._COUNTERS:
+            setattr(self, name, ShardedCounter())
+        self.batch_trace: list = []  # (seq, size)
+        # per-lane (seq, size) traces; lane key == query template (or __single__)
+        self.lane_traces: dict = {}
 
     def snapshot(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["batch_sizes"] = [s for _, s in self.batch_trace if s > 1]
+        d = {name: int(getattr(self, name)) for name in self._COUNTERS}
+        # dict()/list() copies are single C-level ops (no GIL release), so
+        # snapshotting while workers insert new lanes cannot hit
+        # "dictionary changed size during iteration".
+        d["batch_trace"] = list(self.batch_trace)
+        d["lane_traces"] = {k: list(v) for k, v in dict(self.lane_traces).items()}
+        d["batch_sizes"] = [s for _, s in d["batch_trace"] if s > 1]
         d["mean_batch_size"] = self.mean_batch_size
         return d
 
     @property
     def mean_batch_size(self) -> float:
-        if not self.batch_trace:
+        trace = self.batch_trace
+        if not trace:
             return 0.0
-        return sum(s for _, s in self.batch_trace) / len(self.batch_trace)
+        return sum(s for _, s in trace) / len(trace)
 
 
 class _Entry:
     """One service call's worth of work: a params tuple plus every handle
-    key whose submission coalesced onto it (dedup fan-out)."""
+    key whose submission coalesced onto it (dedup fan-out).  ``keys`` is
+    mutated/snapshotted only under the request's req-stripe lock (or never
+    shared, for unhashable params)."""
 
     __slots__ = ("keys", "query_name", "params")
 
@@ -132,8 +178,134 @@ class _Entry:
         self.params = params
 
 
+class _Lane:
+    """One query template's pending deque behind its own lock."""
+
+    __slots__ = ("key", "lock", "entries", "dead", "parked")
+
+    def __init__(self, key: str):
+        self.key = key
+        self.lock = threading.Lock()
+        self.entries: deque[_Entry] = deque()
+        self.dead = False  # set (under lock) when GC'd out of the registry
+        # parked: a worker consulted the strategy and was told to wait
+        # (decide() <= 0 with work queued) — the next submit must re-queue
+        # the lane so the strategy is re-asked with the larger backlog.
+        self.parked = False
+
+
+class _HandleStripe:
+    """One stripe of handle-keyed state: results/errors plus pending
+    metadata, with a condition variable that only this stripe's fetchers
+    sleep on."""
+
+    __slots__ = ("lock", "cv", "results", "errors", "pending")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.cv = threading.Condition(self.lock)
+        self.results: dict[int, Any] = {}
+        self.errors: dict[int, BaseException] = {}
+        self.pending: dict[int, _Pending] = {}
+
+
+class _Pending:
+    """Per-handle metadata while unresolved: where it runs, how to project
+    its result, and which quota slots to release on delivery."""
+
+    __slots__ = ("lane_query", "params", "projector", "slots")
+
+    def __init__(self, lane_query, params, projector, slots):
+        self.lane_query = lane_query
+        self.params = params
+        self.projector = projector
+        self.slots = slots
+
+
+class _ReqStripe:
+    """One stripe of request-identity state (dedup registries)."""
+
+    __slots__ = ("lock", "queued", "inflight")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.queued: dict[tuple, _Entry] = {}
+        self.inflight: dict[tuple, _Entry] = {}
+
+
+class _ResultCache:
+    """Sharded LRU + TTL result cache.  ``n_stripes=1`` (the default)
+    preserves exact global LRU order; more stripes trade LRU exactness for
+    lock spread (each stripe keeps its own LRU over ~size/n entries)."""
+
+    def __init__(self, size: int, ttl: Optional[float], n_stripes: int = 1):
+        n_stripes = max(1, min(n_stripes, size))
+        self._locks = [threading.Lock() for _ in range(n_stripes)]
+        self._maps: list[OrderedDict] = [OrderedDict() for _ in range(n_stripes)]
+        self._cap = -(-size // n_stripes)  # ceil: total capacity >= size
+        self._ttl = ttl
+
+    def _idx(self, req: tuple) -> int:
+        return hash(req) % len(self._maps)
+
+    def get(self, req: tuple) -> tuple:
+        """``(value, fresh, n_expired)`` — expires TTL'd entries on read."""
+        i = self._idx(req)
+        with self._locks[i]:
+            m = self._maps[i]
+            hit = m.get(req)
+            if hit is None:
+                return None, False, 0
+            value, deadline = hit
+            if deadline is not None and time.monotonic() >= deadline:
+                del m[req]
+                return None, False, 1
+            m.move_to_end(req)
+            return value, True, 0
+
+    def put(self, req: tuple, value: Any) -> None:
+        deadline = (time.monotonic() + self._ttl
+                    if self._ttl is not None else None)
+        i = self._idx(req)
+        with self._locks[i]:
+            m = self._maps[i]
+            m[req] = (value, deadline)
+            m.move_to_end(req)
+            while len(m) > self._cap:
+                m.popitem(last=False)
+
+    def invalidate(self, query_name: Optional[str],
+                   params: Optional[tuple], req_key_fn) -> int:
+        if query_name is None:
+            n = 0
+            for lock, m in zip(self._locks, self._maps):
+                with lock:
+                    n += len(m)
+                    m.clear()
+            return n
+        if params is not None:
+            rk = req_key_fn(query_name, params)
+            if rk is None:
+                return 0
+            i = self._idx(rk)
+            with self._locks[i]:
+                if rk in self._maps[i]:
+                    del self._maps[i][rk]
+                    return 1
+            return 0
+        n = 0
+        for lock, m in zip(self._locks, self._maps):
+            with lock:
+                victims = [k for k in m if k[0] == query_name]
+                for k in victims:
+                    del m[k]
+                n += len(victims)
+        return n
+
+
 class AsyncQueryRuntime:
-    """The runtime library of §4.2 + §5.2, sharded into per-template lanes.
+    """The runtime library of §4.2 + §5.2, sharded into per-template lanes
+    with lock-sharded synchronization (see module docstring).
 
     May be used directly (``submit``/``fetch``) or as the service behind the
     HIR :class:`~repro.core.hir.Interpreter` for transformed programs.
@@ -151,11 +323,15 @@ class AsyncQueryRuntime:
         result_cache_size: int = 0,
         result_cache_ttl: Optional[float] = None,
         policy: Optional[LanePolicy] = None,
+        n_stripes: int = 16,
+        result_cache_stripes: int = 1,
     ):
         if policy is not None and strategy is not None:
             raise ValueError(
                 "pass either a global `strategy` or a per-lane `policy`, not both"
             )
+        if n_stripes < 1:
+            raise ValueError("n_stripes must be >= 1")
         self.service = service
         self.policy = policy
         self.strategy = strategy or PureAsync()
@@ -166,33 +342,37 @@ class AsyncQueryRuntime:
         self.sharded = sharded
         self.dedup = dedup
 
-        # lane key -> deque[_Entry]; insertion-ordered for round-robin
-        self._lanes: "OrderedDict[str, deque[_Entry]]" = OrderedDict()
-        self._rr = 0  # round-robin cursor over lanes
-        self._n_pending = 0  # total queued entries across lanes
-        self._results: dict[int, Any] = {}
-        self._errors: dict[int, BaseException] = {}
-        self._lock = threading.Lock()
-        self._work_cv = threading.Condition(self._lock)  # queue state changed
-        self._done_cv = threading.Condition(self._lock)  # a result arrived
-        self._next_key = 0
+        # lane registry: lane key -> _Lane; lookups are lock-free dict reads,
+        # creation/GC go through _lanes_lock (GC also takes the lane's lock).
+        self._lanes: dict[str, _Lane] = {}
+        self._lanes_lock = threading.Lock()
+        self._ready = ReadyLanes()
+
+        # striped handle/request state (power-of-two mask for cheap hashing)
+        n_stripes = 1 << (n_stripes - 1).bit_length()
+        self._stripe_mask = n_stripes - 1
+        self._stripes = [_HandleStripe() for _ in range(n_stripes)]
+        self._req_stripes = [_ReqStripe() for _ in range(n_stripes)]
+
+        self._cache = (
+            _ResultCache(result_cache_size, result_cache_ttl,
+                         result_cache_stripes)
+            if result_cache_size else None
+        )
+
+        # admission gates: created on demand per tenant / lane, plus one
+        # global gate when max_pending bounds total outstanding requests.
+        self._gates_lock = threading.Lock()
+        self._tenant_gates: dict[str, QuotaGate] = {}
+        self._lane_gates: dict[str, QuotaGate] = {}
+        self._global_gate = QuotaGate() if max_pending is not None else None
+
+        self._key_seq = itertools.count()   # handle keys (atomic under GIL)
+        self._exec_seq = itertools.count()  # execution sequence for traces
         self._producer_done = False
         self._shutdown = False
-        # dedup registries: request identity -> live entry
-        self._queued_by_req: dict[tuple, _Entry] = {}
-        self._inflight_by_req: dict[tuple, _Entry] = {}
-        # handle key -> (query_name, params) while unresolved (stragglers)
-        self._inflight_params: dict[int, tuple] = {}
-        # LRU maps request identity -> (value, monotonic deadline | None)
-        self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
-        self._cache_size = result_cache_size
-        self._cache_ttl = result_cache_ttl
-        # per-handle projection (cross-template sharing fan-out)
-        self._projections: dict[int, Any] = {}
-        # quota accounting: handle key -> (lane key, tenant) while outstanding
-        self._accounting: dict[int, tuple] = {}
-        self._lane_out: dict[str, int] = {}
-        self._tenant_out: dict[str, int] = {}
+        self._drain_cv = threading.Condition()
+        self._drain_waiters = 0
         self.stats = RuntimeStats()
 
         self._threads = [
@@ -208,115 +388,135 @@ class AsyncQueryRuntime:
         """Non-blocking query submission (``submitQuery``).  Blocks only at an
         admission bound: the global ``max_pending`` (§8 producer back-off), or
         — with a :class:`LanePolicy` — this tenant's / this lane's quota.
+        Blocked submissions sleep on that bound's own condition variable and
+        are woken by the release that frees a slot (never by a timer).
 
-        With a policy, templates registered via ``policy.share`` are
-        canonicalized onto their shared lane here; the submission's own
-        projection is applied at result fan-out.
+        With a policy, templates registered via ``policy.share`` (or
+        auto-detected from ``policy.describe`` metadata) are canonicalized
+        onto their shared lane here; the submission's own projection is
+        applied at result fan-out.
         """
         policy = self.policy
         if policy is not None:
             lane_query, projector = policy.resolve(query_name)
         else:
             lane_query, projector = query_name, None
-        with self._lock:
-            lk = self._lane_key(lane_query)
-            # Back-off bounds OUTSTANDING requests (submitted, unresolved)
-            # rather than queued entries, so coalesced duplicates — which
-            # enqueue nothing but still hold a handle, a registry slot and
-            # eventually a result — cannot grow memory past the bound either.
-            blocked = False
-            while not self._shutdown:
-                tq = policy.tenant_quota(tenant) if policy is not None else None
-                lq = policy.lane_quota if policy is not None else None
-                if (
-                    self.max_pending is not None
-                    and self.stats.submitted - self.stats.completed >= self.max_pending
-                ):
-                    pass
-                elif (tq is not None
-                        and self._tenant_out.get(tenant, 0) >= tq):
-                    pass
-                elif lq is not None and self._lane_out.get(lk, 0) >= lq:
-                    pass
-                else:
-                    break
-                if not blocked:
-                    blocked = True
-                    self.stats.quota_waits += 1
-                self._done_cv.wait(timeout=0.1)
-            if self._shutdown:
-                raise RuntimeError("runtime is shut down")
-            handle = Handle(self._next_key, query_name)
-            self._next_key += 1
-            self.stats.submitted += 1
-            self._producer_done = False
-            if projector is not None:
-                self.stats.shared += 1
-            if policy is not None:
-                policy.note_submit(lk)
+        lk = self._lane_key(lane_query)
 
-            req = self._req_key(lane_query, params)
-            # 1) completed-result cache (SharedDB-style reuse across time)
-            if req is not None and self._cache_size:
-                value, fresh = self._cache_get_locked(req)
-                if fresh:
-                    self._deliver_locked(handle.key, value, projector)
-                    self.stats.cache_hits += 1
-                    self.stats.completed += 1
-                    self._done_cv.notify_all()
-                    return handle
-            # 2) in-flight/pending dedup (sharing across concurrent users)
-            if req is not None and self.dedup:
-                live = self._queued_by_req.get(req) or self._inflight_by_req.get(req)
+        slots = self._acquire_slots(lk, tenant)  # may block; raises on shutdown
+
+        key = next(self._key_seq)
+        handle = Handle(key, query_name)
+        self.stats.submitted.add()
+        self._producer_done = False
+        if projector is not None:
+            self.stats.shared.add()
+        if policy is not None:
+            policy.note_submit(lk)
+
+        req = self._req_key(lane_query, params)
+        stripe = self._handle_stripe(key)
+
+        # 1) completed-result cache (SharedDB-style reuse across time)
+        if req is not None and self._cache is not None:
+            value, fresh, expired = self._cache.get(req)
+            if expired:
+                self.stats.cache_expired.add(expired)
+            if fresh:
+                self._deliver_cached(stripe, key, value, projector, slots)
+                return handle
+
+        # Register pending metadata BEFORE the key can become discoverable
+        # through an entry, so a racing delivery always finds the projector
+        # and the quota slots to release.
+        meta = _Pending(lane_query, params, projector, slots)
+        with stripe.lock:
+            stripe.pending[key] = meta
+
+        # 2) in-flight/pending dedup (sharing across concurrent users)
+        if req is not None and self.dedup:
+            rs = self._req_stripe(req)
+            value = None
+            with rs.lock:
+                live = rs.queued.get(req) or rs.inflight.get(req)
                 if live is not None:
-                    live.keys.append(handle.key)
-                    self._inflight_params[handle.key] = (lane_query, params)
-                    self._register_outstanding_locked(handle.key, lk, tenant, projector)
-                    self.stats.deduped += 1
+                    live.keys.append(key)
+                    self.stats.deduped.add()
                     return handle
-            # 3) enqueue on this template's lane
-            entry = _Entry(handle.key, lane_query, params)
-            if req is not None and self.dedup:
-                self._queued_by_req[req] = entry
-            self._inflight_params[handle.key] = (lane_query, params)
-            self._register_outstanding_locked(handle.key, lk, tenant, projector)
-            self._lane_for(lane_query).append(entry)
-            self._n_pending += 1
-            self._work_cv.notify()
+                # Re-probe the cache under the registry lock: _complete
+                # caches BEFORE it unregisters, so an identical request
+                # that just completed (after the optimistic probe above
+                # missed) is guaranteed visible here — no gap in which a
+                # twin re-executes.  Cache locks are leaves; ordering
+                # req-stripe → cache is one-way.
+                if self._cache is not None:
+                    value, fresh, expired = self._cache.get(req)
+                else:
+                    fresh, expired = False, 0
+                if not fresh:
+                    entry = _Entry(key, lane_query, params)
+                    # registered before the lane append: a worker cannot
+                    # pick (and complete) the entry until it is in the
+                    # lane, so the registry can never outlive a completed
+                    # entry.
+                    rs.queued[req] = entry
+            if expired:
+                self.stats.cache_expired.add(expired)
+            if fresh:
+                self._deliver_cached(stripe, key, value, projector, slots)
+                return handle
+        else:
+            entry = _Entry(key, lane_query, params)
+
+        # 3) enqueue on this template's lane
+        self._append_entry(lk, entry)
         return handle
 
     def producer_done(self) -> None:
         """Signal that no more requests are coming (enables PureBatch and
         lets adaptive strategies drain the tail)."""
-        with self._lock:
-            self._producer_done = True
-            self._work_cv.notify_all()
+        self._producer_done = True
+        # Wake parked lanes: a strategy that answered "wait" is re-asked now.
+        self._ready.push_all(
+            lk for lk, lane in list(self._lanes.items()) if lane.entries
+        )
 
     def fetch(self, handle: Optional[Handle]) -> Any:
         """Blocking result fetch (``fetchResult`` / ``getResultSet(ctx)``).
         ``None`` handles (guarded-away submissions, Rule B) return ``None``.
+        Waits only on the handle's own stripe CV — a delivery wakes this
+        stripe's fetchers, not every blocked thread in the process.
         """
         if handle is None:
             return None
+        key = handle.key
+        stripe = self._handle_stripe(key)
         deadline = (
             time.monotonic() + self.straggler_timeout
             if self.straggler_timeout is not None
             else None
         )
-        with self._lock:
-            while handle.key not in self._results and handle.key not in self._errors:
-                timeout = None
-                if deadline is not None:
-                    timeout = max(0.0, deadline - time.monotonic())
-                    if timeout == 0.0:
-                        # Straggler: re-enqueue so another lane retries.
-                        self._resubmit_locked(handle)
-                        deadline = time.monotonic() + self.straggler_timeout
-                        timeout = self.straggler_timeout
-                self._done_cv.wait(timeout=timeout)
-            if handle.key in self._errors:
-                raise self._errors[handle.key]
-            return self._results[handle.key]
+        while True:
+            with stripe.lock:
+                if key in stripe.errors:
+                    raise stripe.errors[key]
+                if key in stripe.results:
+                    return stripe.results[key]
+                if self._shutdown:
+                    raise RuntimeError("runtime is shut down")
+                if deadline is None:
+                    stripe.cv.wait()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining > 0:
+                    stripe.cv.wait(timeout=remaining)
+                    continue
+            # Straggler: re-enqueue OUTSIDE the stripe lock so the duplicate
+            # goes through the normal lane path, then restart the clock
+            # against the handle's own (canonical) lane from the moment the
+            # duplicate is actually queued — not from when the timeout fired.
+            self._resubmit(handle)
+            deadline = time.monotonic() + self.straggler_timeout
 
     # The HIR interpreter's synchronous path delegates to the service.
     def execute(self, query_name: str, params: tuple) -> Any:
@@ -325,15 +525,32 @@ class AsyncQueryRuntime:
     def drain(self) -> None:
         """Block until every submitted request has a result."""
         self.producer_done()
-        with self._lock:
-            while self.stats.completed < self.stats.submitted:
-                self._done_cv.wait(timeout=0.1)
+        with self._drain_cv:
+            self._drain_waiters += 1
+            try:
+                while int(self.stats.completed) < int(self.stats.submitted):
+                    # Completions signal this CV whenever a drainer is
+                    # registered; the timeout is a crash-safety net, not the
+                    # wakeup mechanism.
+                    self._drain_cv.wait(timeout=0.5)
+            finally:
+                self._drain_waiters -= 1
 
     def shutdown(self) -> None:
-        with self._lock:
-            self._shutdown = True
-            self._work_cv.notify_all()
-            self._done_cv.notify_all()
+        self._shutdown = True
+        self._ready.close()
+        with self._gates_lock:
+            gates = list(self._tenant_gates.values())
+            gates += list(self._lane_gates.values())
+        if self._global_gate is not None:
+            gates.append(self._global_gate)
+        for g in gates:
+            g.notify_all()
+        for stripe in self._stripes:
+            with stripe.lock:
+                stripe.cv.notify_all()
+        with self._drain_cv:
+            self._drain_cv.notify_all()
         for t in self._threads:
             t.join(timeout=5.0)
 
@@ -357,30 +574,13 @@ class AsyncQueryRuntime:
     def _lane_key(self, query_name: str) -> str:
         return query_name if self.sharded else _SINGLE_LANE
 
-    # --------------------------------------------------- cache (TTL + hooks)
-    def _cache_get_locked(self, req: tuple) -> tuple:
-        """``(value, fresh)`` — expires TTL'd entries on the read path."""
-        hit = self._cache.get(req)
-        if hit is None:
-            return None, False
-        value, deadline = hit
-        if deadline is not None and time.monotonic() >= deadline:
-            del self._cache[req]
-            self.stats.cache_expired += 1
-            return None, False
-        self._cache.move_to_end(req)
-        return value, True
+    def _handle_stripe(self, key: int) -> _HandleStripe:
+        return self._stripes[key & self._stripe_mask]
 
-    def _cache_put_locked(self, req: tuple, value: Any) -> None:
-        deadline = (
-            time.monotonic() + self._cache_ttl
-            if self._cache_ttl is not None else None
-        )
-        self._cache[req] = (value, deadline)
-        self._cache.move_to_end(req)
-        while len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
+    def _req_stripe(self, req: tuple) -> _ReqStripe:
+        return self._req_stripes[hash(req) & self._stripe_mask]
 
+    # ------------------------------------------------------------ cache API
     def invalidate(self, query_name: Optional[str] = None,
                    params: Optional[tuple] = None) -> int:
         """Explicit result-cache invalidation hook (the complement of TTL
@@ -391,61 +591,236 @@ class AsyncQueryRuntime:
         entry.  Shared (projection) variants resolve to their canonical
         template first.  Returns the number of entries dropped.
         """
+        if self._cache is None:
+            return 0
         if query_name is not None and self.policy is not None:
             query_name = self.policy.resolve(query_name)[0]
-        with self._lock:
-            if query_name is None:
-                n = len(self._cache)
-                self._cache.clear()
-                return n
-            if params is not None:
-                rk = self._req_key(query_name, params)
-                if rk is not None and rk in self._cache:
-                    del self._cache[rk]
-                    return 1
-                return 0
-            victims = [k for k in self._cache if k[0] == query_name]
-            for k in victims:
-                del self._cache[k]
-            return len(victims)
+        return self._cache.invalidate(query_name, params, self._req_key)
 
-    # ------------------------------------------------ quota + share plumbing
-    def _register_outstanding_locked(self, key: int, lane_key: str,
-                                     tenant: Optional[str],
-                                     projector: Optional[Any]) -> None:
-        self._accounting[key] = (lane_key, tenant)
-        self._lane_out[lane_key] = self._lane_out.get(lane_key, 0) + 1
-        if tenant is not None:
-            self._tenant_out[tenant] = self._tenant_out.get(tenant, 0) + 1
-        if projector is not None:
-            self._projections[key] = projector
+    # ------------------------------------------------------- quota plumbing
+    _GATE_SWEEP_AT = 1024  # registry size that triggers an idle-gate sweep
 
-    def _release_outstanding_locked(self, key: int) -> None:
-        acct = self._accounting.pop(key, None)
-        if acct is None:
-            return
-        lane_key, tenant = acct
-        left = self._lane_out.get(lane_key, 0) - 1
-        if left > 0:
-            self._lane_out[lane_key] = left
+    def _gate(self, registry: dict, key: str) -> QuotaGate:
+        gate = registry.get(key)
+        if gate is None:
+            with self._gates_lock:
+                gate = registry.get(key)
+                if gate is None:
+                    if len(registry) >= self._GATE_SWEEP_AT:
+                        # High-cardinality churn (per-entity lanes, one-shot
+                        # tenants) must not grow the registries without
+                        # bound: drop idle gates, amortized over creations.
+                        for k, g in list(registry.items()):
+                            if g.try_gc():
+                                del registry[k]
+                    gate = registry[key] = QuotaGate()
+        return gate
+
+    def _acquire_slots(self, lane_key: str, tenant: Optional[str]) -> tuple:
+        """Reserve one slot at every admission bound that applies, blocking
+        on the *full* bound's own CV.  Returns the gates holding a slot (to
+        release at delivery).  To stay deadlock-free across bounds, slots
+        already held are given back before sleeping, then the whole set is
+        re-acquired — a blocked whale never pins a lane slot it cannot use.
+
+        Registry-backed gates are re-validated after each acquire: a gate
+        swept out of its registry between lookup and acquire no longer
+        bounds anything, so the slot is given back and the live gate is
+        re-resolved.
+        """
+        policy = self.policy
+        if policy is not None:
+            tq = policy.tenant_quota(tenant)
+            lq = policy.lane_quota
         else:
-            self._lane_out.pop(lane_key, None)
-        if tenant is not None:
-            left = self._tenant_out.get(tenant, 0) - 1
-            if left > 0:
-                self._tenant_out[tenant] = left
-            else:
-                self._tenant_out.pop(tenant, None)
+            tq = lq = None
+        if self._global_gate is None and tq is None and lq is None:
+            if self._shutdown:
+                raise RuntimeError("runtime is shut down")
+            return ()
 
-    def _deliver_locked(self, key: int, value: Any, projector) -> None:
-        """Resolve one handle, applying its projection (sharing fan-out)."""
-        if projector is None:
-            self._results[key] = value
-            return
+        acquired: list = []
+        blocked = False
         try:
-            self._results[key] = projector(value)
-        except BaseException as e:  # noqa: BLE001 — surface via fetch
-            self._errors[key] = e
+            while True:
+                if self._shutdown:
+                    raise RuntimeError("runtime is shut down")
+                # (gate, limit, registry, key); registry None = never swept
+                need: list = []
+                if self._global_gate is not None:
+                    need.append((self._global_gate, self.max_pending,
+                                 None, None))
+                if tq is not None:
+                    need.append((self._gate(self._tenant_gates, tenant), tq,
+                                 self._tenant_gates, tenant))
+                if lq is not None:
+                    need.append((self._gate(self._lane_gates, lane_key), lq,
+                                 self._lane_gates, lane_key))
+                full = None
+                stale = False
+                for gate, limit, registry, key in need:
+                    if not gate.try_acquire(limit):
+                        full = (gate, limit)
+                        break
+                    if registry is not None and registry.get(key) is not gate:
+                        gate.release()  # swept while we acquired: re-resolve
+                        stale = True
+                        break
+                    acquired.append(gate)
+                if full is None and not stale:
+                    slots = tuple(acquired)
+                    acquired = []
+                    return slots
+                for g in acquired:
+                    g.release()
+                acquired = []
+                if stale:
+                    continue
+                if not blocked:
+                    blocked = True
+                    self.stats.quota_waits.add()
+                gate, limit = full
+                gate.wait_below(limit, lambda: self._shutdown)
+        finally:
+            for g in acquired:  # only on exception paths
+                g.release()
+
+    def _release_slots(self, slots: tuple) -> None:
+        for g in slots:
+            g.release()
+
+    # ------------------------------------------------------- lane plumbing
+    def _append_entry(self, lane_key: str, entry: _Entry,
+                      skip_if=None) -> bool:
+        """Append under the lane lock and schedule the lane if needed.
+
+        The ready push happens only on the empty→nonempty transition (or
+        when the lane is parked): a nonempty lane is already covered — by
+        its pending ready entry, or by the worker that left it nonempty
+        and re-pushes it after releasing the lane lock.  This keeps the
+        shared ready queue off the per-submission hot path once lanes are
+        flowing.
+
+        ``skip_if(lane)`` (checked under the lane lock) aborts the append
+        — the straggler path uses it to avoid piling up duplicates of a
+        handle that is already queued again.  Returns whether the entry
+        was appended.
+        """
+        while True:
+            lane = self._lanes.get(lane_key)
+            if lane is None:
+                with self._lanes_lock:
+                    lane = self._lanes.get(lane_key)
+                    if lane is None:
+                        lane = self._lanes[lane_key] = _Lane(lane_key)
+                        self.stats.lane_traces.setdefault(lane_key, [])
+            with lane.lock:
+                if lane.dead:
+                    continue  # lost a race with GC: re-resolve the registry
+                if skip_if is not None and skip_if(lane):
+                    return False
+                wake = not lane.entries or lane.parked
+                lane.parked = False
+                lane.entries.append(entry)
+                break
+        if wake:
+            self._ready.push(lane_key)
+        return True
+
+    def _maybe_gc_lane(self, lane_key: str, lane: _Lane) -> None:
+        """GC drained lanes so high-cardinality template churn doesn't grow
+        the registry (traces keep the history).  ``dead`` closes the race
+        with a submitter holding a stale reference: it re-resolves."""
+        with self._lanes_lock:
+            with lane.lock:
+                if not lane.entries and self._lanes.get(lane_key) is lane:
+                    lane.dead = True
+                    del self._lanes[lane_key]
+
+    def _resubmit(self, handle: Handle) -> bool:
+        """Duplicate a straggler onto its own lane (dedup bypassed on
+        purpose: the point is a racing duplicate call)."""
+        key = handle.key
+        stripe = self._handle_stripe(key)
+        with stripe.lock:
+            if key in stripe.results or key in stripe.errors:
+                return False  # resolved while we were timing out
+            meta = stripe.pending.get(key)
+            if meta is None:
+                return False
+            lane_query, params = meta.lane_query, meta.params
+        lk = self._lane_key(lane_query)
+        appended = self._append_entry(
+            lk, _Entry(key, lane_query, params),
+            # already queued again (an earlier timeout's duplicate): skip
+            skip_if=lambda lane: any(key in e.keys for e in lane.entries),
+        )
+        if appended:
+            self.stats.resubmissions.add()
+        return appended
+
+    # ------------------------------------------------------- worker internals
+    def _take(self, lane_key: str) -> Optional[tuple]:
+        """Pop a batch from one ready lane under ITS lock only.  Returns
+        ``(query_name, entries)`` or None (stale pop / strategy says wait —
+        the next submit or ``producer_done`` re-queues the lane)."""
+        lane = self._lanes.get(lane_key)
+        if lane is None:
+            return None
+        first_q: Optional[str] = None
+        picked: list[_Entry] = []
+        with lane.lock:
+            if not lane.dead and lane.entries:
+                strategy = (self.policy.strategy_for(lane_key)
+                            if self.policy is not None else self.strategy)
+                take = strategy.decide(len(lane.entries), self._producer_done)
+                if take <= 0:
+                    # Strategy says wait.  Park: the next submit (or
+                    # producer_done) re-queues the lane so the strategy is
+                    # re-asked with the larger backlog.
+                    lane.parked = True
+                    return None
+                lane.parked = False
+                take = min(take, len(lane.entries))
+                # Batches must share a query template.  Sharded lanes are
+                # homogeneous by construction; the single-queue compatibility
+                # mode splits at the first boundary (the paper's behaviour).
+                first_q = lane.entries[0].query_name
+                while lane.entries and len(picked) < take:
+                    if lane.entries[0].query_name != first_q:
+                        break
+                    entry = lane.entries.popleft()
+                    rk = self._req_key(entry.query_name, entry.params)
+                    if rk is not None and self.dedup:
+                        rs = self._req_stripe(rk)
+                        with rs.lock:
+                            if rs.queued.get(rk) is entry:
+                                del rs.queued[rk]
+                            if rk not in rs.inflight:
+                                rs.inflight[rk] = entry
+                    picked.append(entry)
+                if self.policy is not None and self.policy.lane_weights:
+                    self.policy.charge(lane_key, len(picked))
+                seq = next(self._exec_seq)
+                self.stats.batch_trace.append((seq, len(picked)))
+                self.stats.lane_traces.setdefault(lane_key, []).append(
+                    (seq, len(picked)))
+                if len(picked) == 1:
+                    self.stats.single_executions.add()
+                else:
+                    self.stats.batch_executions.add()
+            more = bool(lane.entries) and not lane.dead
+        if more:
+            # Leftover backlog: stay scheduled so another worker (or this
+            # one, next round) keeps draining the lane.
+            self._ready.push(lane_key)
+        elif not lane.dead:
+            # A submit racing this GC re-resolves the registry and pushes
+            # the lane ready itself, so no pick is ever stranded.
+            self._maybe_gc_lane(lane_key, lane)
+        if picked:
+            return first_q, picked
+        return None
 
     def _observe(self, lane_key: str, batch_size: int, duration: float) -> None:
         """Route service-call feedback to the deciding model: the lane's own
@@ -455,102 +830,118 @@ class AsyncQueryRuntime:
         else:
             self.strategy.observe(batch_size, duration)
 
-    def _lane_for(self, query_name: str) -> deque:
-        lk = self._lane_key(query_name)
-        lane = self._lanes.get(lk)
-        if lane is None:
-            lane = self._lanes[lk] = deque()
-            self.stats.lane_traces.setdefault(lk, [])
-        return lane
+    def _deliver_into(self, stripe: _HandleStripe, key: int, value: Any,
+                      projector) -> None:
+        """Resolve one handle (stripe lock held), applying its projection."""
+        if projector is None:
+            stripe.results[key] = value
+            return
+        try:
+            stripe.results[key] = projector(value)
+        except BaseException as e:  # noqa: BLE001 — surface via fetch
+            stripe.errors[key] = e
 
-    def _resubmit_locked(self, handle: Handle) -> None:
-        qp = self._inflight_params.get(handle.key)
-        if qp is None:
-            return  # already resolved
-        query_name, params = qp
-        lane = self._lane_for(query_name)
-        for e in lane:
-            if handle.key in e.keys:
-                return  # already pending again
-        # Bypass dedup on purpose: the point is a racing duplicate call.
-        lane.append(_Entry(handle.key, query_name, params))
-        self._n_pending += 1
-        self.stats.resubmissions += 1
-        self._work_cv.notify()
+    def _deliver_cached(self, stripe: _HandleStripe, key: int, value: Any,
+                        projector, slots: tuple) -> None:
+        """Resolve a submission from the result cache: deliver + wake the
+        stripe, give back the admission slots, count the completion.  Any
+        pending metadata registered for the key is discarded — the handle
+        resolves here, not through a service call."""
+        with stripe.lock:
+            stripe.pending.pop(key, None)
+            self._deliver_into(stripe, key, value, projector)
+            stripe.cv.notify_all()
+        self._release_slots(slots)
+        self.stats.cache_hits.add()
+        self.stats.completed.add()
+        self._notify_drain()
 
-    def _pick_locked(self) -> Optional[tuple]:
-        """Pick work from the lanes: weighted-fair order under a
-        :class:`LanePolicy` (lowest virtual time first, each lane asked its
-        OWN strategy), plain round-robin with the global strategy otherwise.
-        The first lane whose strategy grants a take yields
-        ``(lane_key, query_name, [entries])``.  None → nothing to do."""
-        keys = list(self._lanes.keys())
-        if not keys:
-            return None
-        n_lanes = len(keys)
-        if self.policy is not None:
-            ordered = self.policy.lane_order(
-                [k for k in keys if self._lanes[k]])
-        else:
-            ordered = [keys[(self._rr + off) % n_lanes] for off in range(n_lanes)]
-        for pos, lk in enumerate(ordered):
-            lane = self._lanes.get(lk)
-            if not lane:
-                continue
-            strategy = (self.policy.strategy_for(lk) if self.policy is not None
-                        else self.strategy)
-            take = strategy.decide(len(lane), self._producer_done)
-            if take <= 0:
-                continue
-            if self.policy is None:
-                self._rr = (self._rr + pos + 1) % n_lanes
-            take = min(take, len(lane))
-            # Batches must share a query template.  Sharded lanes are
-            # homogeneous by construction; the single-queue compatibility
-            # mode splits at the first boundary (the paper's behaviour).
-            first_q = lane[0].query_name
-            picked: list[_Entry] = []
-            while lane and len(picked) < take:
-                if lane[0].query_name != first_q:
-                    break
-                entry = lane.popleft()
-                rk = self._req_key(entry.query_name, entry.params)
-                if rk is not None and self._queued_by_req.get(rk) is entry:
-                    del self._queued_by_req[rk]
-                if self.dedup and rk is not None \
-                        and rk not in self._inflight_by_req:
-                    self._inflight_by_req[rk] = entry
-                picked.append(entry)
-            self._n_pending -= len(picked)
-            if self.policy is not None:
-                self.policy.charge(lk, len(picked))
-            if not lane:
-                # GC empty lanes so high-cardinality template churn doesn't
-                # grow the round-robin scan (traces keep the history).
-                del self._lanes[lk]
-            seq = self.stats.single_executions + self.stats.batch_executions
-            self.stats.batch_trace.append((seq, len(picked)))
-            self.stats.lane_traces.setdefault(lk, []).append((seq, len(picked)))
-            if len(picked) == 1:
-                self.stats.single_executions += 1
+    def _complete(self, picked: list, out, err) -> None:
+        """Fan one service call's results out to every attached handle —
+        per handle stripe, outside any lane lock.  Straggler duplicates may
+        already be resolved: first result wins, idempotently."""
+        per_stripe: dict[int, list] = {}
+        for i, entry in enumerate(picked):
+            value = out[i] if err is None else None
+            rk = self._req_key(entry.query_name, entry.params)
+            if err is None and rk is not None and self._cache is not None:
+                # Cache before unregistering from the dedup registry: paired
+                # with submit's cache re-probe under the req-stripe lock, a
+                # racing identical submission sees either the live entry or
+                # the cached value — never a gap that re-executes.
+                self._cache.put(rk, value)
+            if rk is not None and self.dedup:
+                rs = self._req_stripe(rk)
+                with rs.lock:
+                    if rs.inflight.get(rk) is entry:
+                        del rs.inflight[rk]
+                    keys = list(entry.keys)  # snapshot closes the attach race
             else:
-                self.stats.batch_executions += 1
-            return lk, first_q, picked
-        return None
+                keys = list(entry.keys)
+            for key in keys:
+                per_stripe.setdefault(key & self._stripe_mask, []).append(
+                    (key, value))
+        released: list = []
+        n_done = 0
+        for idx, items in per_stripe.items():
+            stripe = self._stripes[idx]
+            with stripe.lock:
+                for key, value in items:
+                    if key in stripe.results or key in stripe.errors:
+                        continue  # straggler duplicate: first result won
+                    meta = stripe.pending.pop(key, None)
+                    projector = meta.projector if meta is not None else None
+                    if err is not None:
+                        stripe.errors[key] = err
+                    else:
+                        self._deliver_into(stripe, key, value, projector)
+                    n_done += 1
+                    if meta is not None:
+                        released.append(meta)
+                stripe.cv.notify_all()
+        for meta in released:
+            self._release_slots(meta.slots)
+        if n_done:
+            self.stats.completed.add(n_done)
+            self._notify_drain()
+
+    def _notify_drain(self) -> None:
+        if self._drain_waiters:
+            with self._drain_cv:
+                self._drain_cv.notify_all()
+
+    # consecutive takes a worker may spend on one lane before it must go
+    # back to the ready queue: bounds how long any other ready lane can
+    # wait behind sticky workers (liveness), while still amortizing the
+    # ready-queue round trip over bursts on a busy lane.
+    _STICKY_TAKES = 8
 
     def _worker(self) -> None:
+        lane_key = None  # sticky lane: drain it (boundedly) before re-pop
+        sticky_left = 0
         while True:
-            with self._lock:
-                work = None
-                while not self._shutdown:
-                    if self._n_pending:
-                        work = self._pick_locked()
-                        if work is not None:
-                            break
-                    self._work_cv.wait(timeout=0.05)
-                if self._shutdown:
-                    return
-            lane_key, query_name, picked = work
+            if self._shutdown:
+                return  # abandon pending work, as the global-lock loop did
+            if lane_key is None:
+                # Weighted-fair selection costs a policy-lock + O(n) scan
+                # per pick, and with uniform weights FIFO pop + tail
+                # re-push IS fair round-robin — so consult the policy's
+                # weights afresh each pop (weights may be set at any time)
+                # and select only when some lane is actually weighted.
+                policy = self.policy
+                select = (policy.lane_min
+                          if policy is not None and policy.lane_weights
+                          else None)
+                lane_key = self._ready.pop(select=select)
+                if lane_key is None:
+                    return  # queue closed: shutdown
+                sticky_left = self._STICKY_TAKES
+            work = self._take(lane_key)
+            if work is None:
+                # Lane dry (or parked): go back to the ready queue.
+                lane_key = None
+                continue
+            query_name, picked = work
 
             t0 = time.perf_counter()
             try:
@@ -570,26 +961,14 @@ class AsyncQueryRuntime:
                 # lane's own under a policy, the global strategy otherwise.
                 self._observe(lane_key, len(picked), time.perf_counter() - t0)
 
-            with self._lock:
-                for i, entry in enumerate(picked):
-                    rk = self._req_key(entry.query_name, entry.params)
-                    if rk is not None and self._inflight_by_req.get(rk) is entry:
-                        del self._inflight_by_req[rk]
-                    if err is None and rk is not None and self._cache_size:
-                        self._cache_put_locked(rk, out[i])
-                    # Fan the result out to every coalesced handle; straggler
-                    # duplicates may already be resolved — first result wins.
-                    for key in entry.keys:
-                        if key in self._results or key in self._errors:
-                            continue
-                        if err is not None:
-                            self._errors[key] = err
-                            self._projections.pop(key, None)
-                        else:
-                            self._deliver_locked(
-                                key, out[i], self._projections.pop(key, None)
-                            )
-                        self.stats.completed += 1
-                        self._inflight_params.pop(key, None)
-                        self._release_outstanding_locked(key)
-                self._done_cv.notify_all()
+            self._complete(picked, out, err)
+            # Sticky: keep draining this lane while it has work — the next
+            # _take re-checks under the lane lock, so no ready-queue round
+            # trip (lock + wakeup) is paid per batch on a busy lane.  The
+            # stick is BOUNDED: after _STICKY_TAKES batches the worker
+            # rotates through the ready queue (the lane was re-pushed by
+            # _take if it kept a backlog), so ready lanes can never starve
+            # behind stuck-in-a-groove workers.
+            sticky_left -= 1
+            if sticky_left <= 0:
+                lane_key = None

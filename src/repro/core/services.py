@@ -22,10 +22,11 @@ so tests and benchmarks can assert the *mechanism*, not just timing.
 """
 from __future__ import annotations
 
-import dataclasses
 import threading
 import time
 from typing import Any, Callable, Mapping, Optional, Protocol, Sequence
+
+from repro.core.concurrency import ShardedCounter
 
 __all__ = [
     "QueryService",
@@ -42,33 +43,45 @@ class QueryService(Protocol):
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list: ...
 
 
-@dataclasses.dataclass
 class ServiceStats:
-    round_trips: int = 0
-    single_queries: int = 0
-    batches: int = 0
-    batched_items: int = 0
-    padded_items: int = 0  # filler rows added to reach a lane's fixed bucket
-    busy_time: float = 0.0
+    """Service-side counters, striped across locks
+    (:class:`~repro.core.concurrency.ShardedCounter`) so concurrent worker
+    threads counting calls never convoy on one stats lock.  Fields
+    compare/convert like numbers; ``snapshot`` returns plain values."""
+
+    _COUNTERS = ("round_trips", "single_queries", "batches", "batched_items",
+                 "padded_items")
+
+    def __init__(self):
+        for name in self._COUNTERS:
+            setattr(self, name, ShardedCounter())
+        self.busy_time = ShardedCounter()
 
     def snapshot(self) -> dict:
-        return dataclasses.asdict(self)
+        d = {name: int(getattr(self, name)) for name in self._COUNTERS}
+        d["busy_time"] = float(self.busy_time)
+        return d
 
 
 class _StatsMixin:
     def __init__(self):
         self.stats = ServiceStats()
-        self._stats_lock = threading.Lock()
 
     def _count(self, *, round_trips=0, single=0, batches=0, items=0, padded=0,
                busy=0.0):
-        with self._stats_lock:
-            self.stats.round_trips += round_trips
-            self.stats.single_queries += single
-            self.stats.batches += batches
-            self.stats.batched_items += items
-            self.stats.padded_items += padded
-            self.stats.busy_time += busy
+        st = self.stats
+        if round_trips:
+            st.round_trips.add(round_trips)
+        if single:
+            st.single_queries.add(single)
+        if batches:
+            st.batches.add(batches)
+        if items:
+            st.batched_items.add(items)
+        if padded:
+            st.padded_items.add(padded)
+        if busy:
+            st.busy_time.add(busy)
 
 
 class TableService(_StatsMixin):

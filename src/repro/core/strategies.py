@@ -26,9 +26,18 @@ Beyond the paper's static strategies:
   :meth:`observe`; the strategy fits ``T_batch(n) = F + n·c`` by
   exponentially-weighted least squares and keeps an EWMA of ``s``, then
   batches exactly when predicted batch time beats individual submission:
-  ``F + n·c < n·s  ⇔  n > F/(s − c)`` — a *learned* lower threshold.
+  ``F + n·c < n·s  ⇔  n > F/(s − c)`` — a *learned* lower threshold.  When
+  the serving scheduler also reports decode-tick durations, their EWMA
+  ``d`` enters the comparison as a per-call occupancy amortized by the
+  batch (``n > (F + d)/(s + d − c)``), so decode-heavy lanes batch sooner.
 
 ``decide`` receives the full queue state; returning ``0`` means "wait".
+Since the lock-sharded runtime, "wait" is event-driven, not polled: a
+lane whose strategy answered ``0`` is parked and re-asked when that
+lane's queue state changes (a new submission, a straggler re-enqueue) or
+when ``producer_done`` fires — never on a timer.  A custom strategy's
+``0`` must therefore be a function of the observed backlog/producer
+state, not of wall-clock time alone, or its lane can park indefinitely.
 """
 from __future__ import annotations
 
@@ -49,7 +58,13 @@ __all__ = [
 
 
 class BatchingStrategy:
-    """Decide how many pending requests a free worker should take."""
+    """Decide how many pending requests a free worker should take.
+
+    ``decide`` returning ``0`` parks the lane until its queue state
+    changes (new submission / straggler re-enqueue / ``producer_done``) —
+    the runtime does not re-poll on a timer, so ``0`` must follow from
+    the arguments, not from wall-clock time (see module docstring).
+    """
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
         raise NotImplementedError
@@ -159,12 +174,25 @@ class AdaptiveCost(BatchingStrategy):
 
       * ``s``  — EWMA latency of single-request executions;
       * ``F, c`` — intercept/slope of ``T_batch(n) = F + n·c``, fit by
-        exponentially-decayed least squares over batched executions.
+        exponentially-decayed least squares over batched executions;
+      * ``d``  — EWMA decode-tick latency from :meth:`observe_decode`
+        (serving feedback; 0 until the scheduler reports any).
 
     Draining ``n`` pending requests costs ``n·s`` submitted individually
     (one connection, serialized) vs ``F + n·c`` as one set-oriented call, so
     batching wins iff ``n > F/(s − c)``.  ``decide`` takes everything when
     the backlog clears that learned threshold, else one.
+
+    **Decode occupancy.**  In continuous batching one decode tick serves the
+    whole admitted batch at once, so a batch pays the expected decode
+    occupancy ``d`` ONCE per service call — exactly like the fixed prefill
+    cost ``F`` — while ``n`` individually-submitted requests each pay their
+    own ``d``.  With decode evidence the comparison becomes
+    ``F + n·c + d  <  n·(s + d)``, i.e. a *learned* threshold
+    ``(F + d)/(s + d − c)``: a decode-heavy lane (large ``d``) batches
+    sooner, because its per-request cost is dominated by decode ticks that
+    batching amortizes.  Without decode evidence (``d`` unobserved) the
+    threshold reduces to the paper-style ``F/(s − c)``.
 
     Until ``min_samples`` observations of each kind exist the strategy
     *explores*: it alternates single executions and take-all batches so both
@@ -244,15 +272,19 @@ class AdaptiveCost(BatchingStrategy):
 
     @property
     def threshold(self) -> Optional[float]:
-        """The learned batching threshold ``F/(s − c)`` (``inf`` when
-        batching never pays; ``None`` while still exploring)."""
+        """The learned batching threshold ``(F + d)/(s + d − c)`` — decode
+        occupancy ``d`` amortized by the batch like the fixed cost, each
+        individual submission paying its own (``F/(s − c)`` while no decode
+        ticks have been observed).  ``inf`` when batching never pays;
+        ``None`` while still exploring."""
         est = self.estimates()
         if est is None:
             return None
         f, c, s = est
-        if s <= c:
+        d = self.decode_latency or 0.0
+        if s + d <= c:
             return float("inf")
-        return f / (s - c)
+        return (f + d) / (s + d - c)
 
     # ------------------------------------------------------------- decision
     def decide(self, n_pending: int, producer_done: bool) -> int:

@@ -36,6 +36,13 @@ decode-tick durations feed back into that lane's cost model.  Admission
 also passes the template to :meth:`InferenceEngine.admit`, which pins one
 compiled prefill shape per template.
 
+Admission consumes the same :class:`~repro.core.concurrency.ReadyLanes`
+structure the lock-sharded runtime's workers drain: lanes with queued
+requests sit in a duplicate-suppressed ready queue, each tick pops lanes
+(weighted-fair under a policy, FIFO/round-robin otherwise) only while
+engine slots remain free, and lanes with leftover backlog are re-queued —
+a tick never scans lanes that have nothing to admit.
+
 The scheduler records the per-tick admission trace (= Fig. 10 batch sizes,
 also split per lane) and per-request ttft/latency (= Fig. 11
 time-to-k-th-response).
@@ -51,6 +58,7 @@ import time
 from collections import OrderedDict, deque
 from typing import Optional
 
+from repro.core.concurrency import ReadyLanes
 from repro.core.lane_policy import LanePolicy
 from repro.core.strategies import BatchingStrategy, PureAsync
 from repro.serving.engine import InferenceEngine
@@ -91,7 +99,11 @@ class ContinuousBatchingScheduler:
         self.stats = SchedulerStats()
         self.lane_timeout = lane_timeout
         self._lane_age: dict[int, int] = {}
-        self._rr = 0  # round-robin cursor over template lanes
+        # Lanes with queued requests (same structure the runtime's workers
+        # drain): FIFO pop + tail re-push is round-robin over busy lanes;
+        # with a policy the pop is weighted-fair.  Single-threaded here, so
+        # its lock is never contended.
+        self._ready = ReadyLanes()
         self._warm_shapes: set = set()  # prefill buckets already compiled
         self._producer_done = False
 
@@ -101,6 +113,7 @@ class ContinuousBatchingScheduler:
         if q is None:
             q = self.queues[request.template] = deque()
         q.append(request)
+        self._ready.push(request.template)
         if self.policy is not None:
             self.policy.note_submit(request.template)
 
@@ -140,39 +153,46 @@ class ContinuousBatchingScheduler:
         """One scheduling round: admit per strategy (per lane), one decode
         step."""
         # 1) admission — the paper's "how many requests does a free worker
-        # take from the queue" decision, asked once per template lane while
-        # engine slots remain free.  With a LanePolicy each lane is asked its
-        # OWN strategy and lanes are visited in weighted-fair order; with a
-        # global strategy the scan round-robins as before.
-        templates = list(self.queues.keys())
-        n_lanes = len(templates)
-        rr0 = self._rr  # snapshot: each lane is consulted at most once a tick
-        if self.policy is not None:
-            ordered = self.policy.lane_order(
-                [t for t in templates if self.queues[t]])
-        else:
-            ordered = [templates[(rr0 + off) % n_lanes] for off in range(n_lanes)]
-        for pos, tmpl in enumerate(ordered):
-            if self.engine.n_free == 0:
+        # take from the queue" decision.  Ready lanes are popped (weighted-
+        # fair under a LanePolicy, round-robin otherwise) only while engine
+        # slots remain free; each lane is consulted at most once per tick
+        # and re-queued if it keeps a backlog, so a tick never scans lanes
+        # with nothing to admit.
+        # Weighted-fair selection costs a policy lock + O(n) scan per pop;
+        # with uniform weights FIFO pop + tail re-push is equally fair
+        # round-robin (same guard as the runtime worker's pop).
+        select = (self.policy.lane_min
+                  if self.policy is not None and self.policy.lane_weights
+                  else None)
+        consulted: set = set()
+        repush: list = []
+        while self.engine.n_free > 0:
+            tmpl = self._ready.pop(select=select, block=False)
+            if tmpl is None:
                 break
+            if tmpl in consulted:
+                repush.append(tmpl)
+                break
+            consulted.add(tmpl)
             q = self.queues.get(tmpl)
             if not q:
-                continue
+                continue  # stale push: lane drained since
             strat = (self.policy.strategy_for(tmpl) if self.policy is not None
                      else self.strategy)
             want = strat.decide(len(q), self._producer_done)
             take = min(want, self.engine.n_free, len(q))
             if take <= 0:
+                repush.append(tmpl)  # strategy says wait: stay scheduled
                 continue
             if self.policy is not None:
                 self.policy.charge(tmpl, take)
-            else:
-                self._rr = (rr0 + pos + 1) % n_lanes  # next tick starts past us
             batch = [q.popleft() for _ in range(take)]
             if not q:
                 # GC drained lanes (mirrors the runtime): high-cardinality
-                # template churn must not grow the per-tick scan.
+                # template churn must not grow the bookkeeping.
                 del self.queues[tmpl]
+            else:
+                repush.append(tmpl)
             now = time.perf_counter()
             for r in batch:
                 r.metrics.admitted = now
@@ -197,6 +217,8 @@ class ContinuousBatchingScheduler:
             self.stats.lane_admissions.setdefault(tmpl, []).append(
                 (self.stats.decode_ticks, take)
             )
+        for tmpl in repush:
+            self._ready.push(tmpl)
 
         # 2) one batched decode step over all active lanes
         finished: list[Request] = []
@@ -232,5 +254,6 @@ class ContinuousBatchingScheduler:
                 if rq is None:  # lane may have been GC'd since admission
                     rq = self.queues[r.template] = deque()
                 rq.appendleft(r)
+                self._ready.push(r.template)
                 self.stats.requeued += 1
         return finished

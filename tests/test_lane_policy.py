@@ -155,6 +155,18 @@ def test_new_lane_joins_at_current_minimum_vtime():
     assert p.lane_order(["old", "new"])[0] == "new"
 
 
+def test_lane_min_matches_lane_order_head():
+    """lane_min is the O(n) single-selection twin of lane_order[0] — the
+    ready-queue pop uses it so a weighted pick never sorts."""
+    p = LanePolicy(lane_weights={"a": 2.0, "b": 1.0})
+    for _ in range(20):
+        cand = ["a", "b", "c"]
+        assert p.lane_min(cand) == p.lane_order(cand)[0]
+        p.charge(p.lane_min(cand), 1)
+    with pytest.raises(ValueError):
+        p.lane_min([])
+
+
 def test_charge_scales_by_batch_size():
     p = LanePolicy()
     p.lane_order(["a", "b"])  # both join at vtime 0
@@ -353,6 +365,84 @@ def test_projection_error_surfaces_via_fetch():
 
 
 # ---------------------------------------------------------------------------
+# auto-detected projection sharing (describe metadata)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_share_from_metadata_coalesces_variants():
+    """With describe() metadata, projection-compatible templates share one
+    lane and one service call WITHOUT any explicit share() registration."""
+    policy = LanePolicy(hot_threshold=0, hot_factory=PureBatch)
+    policy.describe("users.lookup", base="users")  # full row: the superset
+    policy.describe("users.sel_name", base="users", columns=("name",))
+    policy.describe("users.sel_email", base="users", columns=("email",))
+    svc = TableService({"users": USER_ROWS})
+    rt = AsyncQueryRuntime(svc, n_threads=2, policy=policy)
+    h_name = rt.submit("users.sel_name", (7,))
+    h_email = rt.submit("users.sel_email", (7,))
+    h_full = rt.submit("users.lookup", (7,))
+    rt.drain()
+    assert rt.fetch(h_name) == "u7"
+    assert rt.fetch(h_email) == "u7@x"
+    assert rt.fetch(h_full) == USER_ROWS[7]
+    rt.shutdown()
+    assert svc.stats.single_queries + svc.stats.batched_items == 1
+    assert rt.stats.deduped == 2
+    assert rt.stats.shared == 2
+    assert list(rt.stats.lane_traces) == ["users.lookup"]
+
+
+def test_auto_share_picks_widest_superset_and_multi_column_projector():
+    p = LanePolicy()
+    p.describe("u.a", base="u", columns=("a",))
+    p.describe("u.ab", base="u", columns=("a", "b"))
+    p.describe("u.abc", base="u", columns=("a", "b", "c"))
+    row = {"a": 1, "b": 2, "c": 3}
+    canon, proj = p.resolve("u.a")
+    assert canon == "u.abc"  # widest covering superset, shared lane converges
+    assert proj(row) == 1    # single column: bare value
+    canon2, proj2 = p.resolve("u.ab")
+    assert canon2 == "u.abc"
+    assert proj2(row) == {"a": 1, "b": 2}  # multi column: mapping
+    # the widest template itself stays unshared (it IS the canonical)
+    assert p.resolve("u.abc") == ("u.abc", None)
+
+
+def test_auto_share_requires_same_base_and_a_superset():
+    p = LanePolicy()
+    p.describe("u.a", base="u", columns=("a",))
+    p.describe("v.lookup", base="v")  # different base: not compatible
+    assert p.resolve("u.a") == ("u.a", None)
+    assert p.resolve("v.lookup") == ("v.lookup", None)
+    assert p.resolve("never.described") == ("never.described", None)
+
+
+def test_explicit_share_wins_over_auto_detection():
+    p = LanePolicy()
+    p.describe("users.lookup", base="users")
+    p.describe("users.sel_name", base="users", columns=("name",))
+    assert p.resolve("users.sel_name")[0] == "users.lookup"  # auto-derived
+    # an explicit registration silently replaces the auto route...
+    p.share("users.wide", {"users.sel_name": lambda r: r["name"].upper()})
+    canon, proj = p.resolve("users.sel_name")
+    assert canon == "users.wide"
+    assert proj({"name": "u1"}) == "U1"
+    # ...and conflicting EXPLICIT registrations still raise
+    with pytest.raises(ValueError):
+        p.share("users.other", {"users.sel_name": lambda r: r})
+
+
+def test_describe_after_auto_resolution_rederives_routes():
+    p = LanePolicy()
+    p.describe("u.a", base="u", columns=("a",))
+    p.describe("u.ab", base="u", columns=("a", "b"))
+    assert p.resolve("u.a")[0] == "u.ab"
+    p.describe("u.lookup", base="u")  # a fuller superset appears
+    assert p.resolve("u.a")[0] == "u.lookup"
+    assert p.resolve("u.ab")[0] == "u.lookup"
+
+
+# ---------------------------------------------------------------------------
 # result-cache TTL + invalidation hooks
 # ---------------------------------------------------------------------------
 
@@ -463,6 +553,37 @@ def test_adaptive_decode_latency_ewma():
     assert s.decode_latency == pytest.approx(0.5)
     # decode feedback must not disturb the submit-side cost model
     assert s._n_single == 0 and s._n_batch == 0
+
+
+def test_decode_occupancy_flips_batching_decision():
+    """A decode-heavy lane batches sooner: one decode tick serves the whole
+    batch (continuous batching), so the decode EWMA ``d`` is amortized by
+    the batch like the fixed cost F, while each individual submission pays
+    its own — the threshold drops from F/(s−c) to (F+d)/(s+d−c)."""
+    s = AdaptiveCost(alpha=0.3)
+    for _ in range(8):
+        s.observe(1, 1.0)
+    for n in (4, 8, 16, 32, 6, 12):
+        s.observe(n, 3.0 + 0.1 * n)
+    # no decode evidence: the paper-style threshold, a backlog of 3 waits
+    assert s.threshold == pytest.approx(3.333, abs=0.3)
+    assert s.decide(3, False) == 1
+    for _ in range(6):
+        s.observe_decode(1.0)
+    # d≈1: threshold (3+1)/(1+1−0.1) ≈ 2.1 — the same backlog now batches
+    assert s.threshold == pytest.approx(2.1, abs=0.3)
+    assert s.decide(3, False) == 3
+    # decode evidence must never make a losing batch look like a win when
+    # singles are already cheaper than the per-item batch cost
+    cheap = AdaptiveCost(alpha=0.5)
+    for _ in range(5):
+        cheap.observe(1, 0.1)
+    for n in (4, 8, 16, 24, 12):
+        cheap.observe(n, 1.0 + 0.5 * n)
+    assert cheap.threshold == float("inf")
+    cheap.observe_decode(0.2)  # s+d=0.3 still <= c=0.5: batching never pays
+    assert cheap.threshold == float("inf")
+    assert cheap.decide(100, False) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,10 @@ GATED_METRICS = {
     "skewed_tenant.throughput_ratio": None,
     "shared_projection.round_trip_gain": None,
     "contention.submit_throughput_ratio": 0.5,
+    # Sleep-based latency model: stabler than the contention ratio, but a
+    # loaded runner can still stall one side — loosen to 30%; the hard
+    # floor is the absolute >= 1.3x in check_floors.py.
+    "overlap.tokens_per_s_ratio": 0.3,
 }
 
 

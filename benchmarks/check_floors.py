@@ -12,7 +12,10 @@ same-machine ratio with a physically-motivated minimum:
   heterogeneous tenants by >= 1.3x;
 * Part 4 — projection sharing must cost strictly fewer round trips;
 * Part 5 — the lock-sharded runtime must sustain >= 2x the global-lock
-  baseline's submissions/s at 32 producers / 8 workers.
+  baseline's submissions/s at 32 producers / 8 workers;
+* Part 6 — the speculative prefill/decode overlap must deliver >= 1.3x
+  end-to-end tokens/s over the synchronous pipeline on mixed
+  prefill-heavy + decode-heavy traffic.
 """
 from __future__ import annotations
 
@@ -59,6 +62,22 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
             "lock-sharded runtime must sustain >= 2x the global-lock "
             "baseline's submissions/s at 32 producers / 8 workers, got "
             f"{ct['submit_throughput_ratio']:.2f}")
+
+    ov = d["overlap"]
+    print("overlap.tokens_per_s_ratio", ov["tokens_per_s_ratio"])
+    print("overlap spec dispatched/committed/aborted",
+          ov["overlap_on"]["spec_dispatched"],
+          ov["overlap_on"]["spec_committed"],
+          ov["overlap_on"]["spec_aborted"])
+    if ov["tokens_per_s_ratio"] < 1.3:
+        failures.append(
+            "speculative prefill/decode overlap must deliver >= 1.3x "
+            "tokens/s over the synchronous pipeline on mixed traffic, got "
+            f"{ov['tokens_per_s_ratio']:.2f}")
+    if ov["overlap_on"]["spec_committed"] < 1:
+        failures.append(
+            "overlap run never committed a speculative prefill — the "
+            "pipeline is not actually engaging")
 
     return failures
 

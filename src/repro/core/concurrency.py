@@ -192,6 +192,26 @@ class ReadyLanes:
             if added and self._waiters:
                 self._cv.notify(added)
 
+    def peek(self, select: Optional[Callable[[list], Any]] = None):
+        """The key :meth:`pop` would return next, WITHOUT removing it (or
+        ``None`` when no lane is ready).  Never blocks.
+
+        This is the speculation primitive: the serving scheduler peeks the
+        next ready lane while a decode tick runs and dispatches its prefill
+        early, but the lane stays queued — so if the speculative take turns
+        out to be 0 (strategy says wait, no KV capacity) nothing has to be
+        re-pushed and the lane keeps its FIFO position.  A later ``pop``
+        with the same ``select`` returns the same key as long as no push /
+        pop / weight change intervened (single-threaded schedulers get this
+        for free; concurrent users must treat the peek as a hint).
+        """
+        with self._lock:
+            if not self._queue:
+                return None
+            if select is None or len(self._queue) == 1:
+                return self._queue[0]
+            return select(list(self._queue))
+
     def pop(self, select: Optional[Callable[[list], Any]] = None,
             block: bool = True):
         """Next ready lane key, or ``None`` when closed (or empty with

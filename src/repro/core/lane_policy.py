@@ -140,11 +140,33 @@ class LanePolicy:
         """Record one submission on ``lane`` (drives hot/cold promotion and
         the least-recently-used eviction order under ``max_lanes``)."""
         with self._lock:
-            self._submits[lane] = self._submits.get(lane, 0) + 1
-            self._use_seq += 1
-            self._last_use[lane] = self._use_seq
-            if len(self._submits) > self.max_lanes:
-                self._evict_coldest_locked(keep=lane)
+            self._note_submit_locked(lane)
+
+    def _note_submit_locked(self, lane: str) -> None:
+        self._submits[lane] = self._submits.get(lane, 0) + 1
+        self._use_seq += 1
+        self._last_use[lane] = self._use_seq
+        if len(self._submits) > self.max_lanes:
+            self._evict_coldest_locked(keep=lane)
+
+    def resolve_submit(self, query_name: str) -> tuple[str, Optional[Callable]]:
+        """:meth:`resolve` + :meth:`note_submit` on the canonical lane in
+        ONE lock acquisition — the policy-mode submit hot path.
+
+        The two-call form took ``_lock`` twice per submit (resolve, then
+        note); at 32 producers that is a second contended acquire for pure
+        bookkeeping.  The fold notes the submission on the *canonical*
+        lane (the lane the request actually runs on), which is also what
+        the two-call form did.  Callers that shard lanes differently from
+        the query name (``sharded=False`` compatibility mode) must keep
+        using the two separate calls with their own lane key."""
+        with self._lock:
+            hit = self._resolve_locked(query_name)
+            lane = query_name if hit is None else hit[0]
+            self._note_submit_locked(lane)
+        if hit is None:
+            return query_name, None
+        return hit
 
     def _evict_coldest_locked(self, keep: str) -> None:
         """Drop the least-recently-submitted lane's tracked state so
@@ -164,6 +186,9 @@ class LanePolicy:
             self._hot_inst.discard(lk)
 
     def is_hot(self, lane: str) -> bool:
+        """Whether ``lane`` has crossed ``hot_threshold`` submissions (and
+        therefore owns — or is about to own — a ``hot_factory`` strategy
+        instance).  Promotion is one-way."""
         with self._lock:
             return self._is_hot_locked(lane)
 
@@ -210,8 +235,18 @@ class LanePolicy:
         feedback: the steady-state per-token cost of this lane's class)."""
         self.strategy_for(lane).observe_decode(duration)
 
+    def observe_abort(self, lane: str, duration: float) -> None:
+        """Route one wasted speculative prefill (serving feedback: the
+        scheduler dispatched ``duration`` seconds of prefill for this lane
+        and aborted it before commit) to the lane's own model, so a lane
+        whose speculations keep missing batches later instead of
+        speculating harder."""
+        self.strategy_for(lane).observe_abort(duration)
+
     # ----------------------------------------------------- weighted fairness
     def weight(self, lane: str) -> float:
+        """This lane's fair-share weight (``lane_weights`` entry or the
+        ``default_weight``)."""
         return self.lane_weights.get(lane, self.default_weight)
 
     def lane_order(self, candidates: Iterable[str]) -> list[str]:
@@ -262,6 +297,8 @@ class LanePolicy:
 
     # -------------------------------------------------------------- quotas
     def tenant_quota(self, tenant: Optional[str]) -> Optional[int]:
+        """Max outstanding requests for ``tenant`` (``None`` = unbounded;
+        anonymous submissions are never tenant-bounded)."""
         if tenant is None:
             return None
         return self.tenant_quotas.get(tenant, self.default_tenant_quota)
@@ -356,20 +393,28 @@ class LanePolicy:
         explicit ``share`` registrations first, then auto-derived routings
         from :meth:`describe` metadata.  Both hits and "no superset"
         misses are memoized (invalidated by :meth:`describe`), so this
-        stays O(1) under the policy lock on the submit hot path."""
+        stays O(1) under the policy lock on the submit hot path.  Submit
+        paths that also call :meth:`note_submit` should use
+        :meth:`resolve_submit` instead (one lock acquisition, not two)."""
         with self._lock:
-            hit = self._shared.get(query_name)
-            if (hit is None and self._meta
-                    and query_name not in self._auto_miss):
-                hit = self._auto_resolve_locked(query_name)
-                if hit is None and query_name in self._meta:
-                    # Memoize "described but no covering superset" so the
-                    # O(|meta|) scan runs once, not per submit.  Undescribed
-                    # templates are O(1) rejects and need no entry, which
-                    # keeps this set bounded by len(_meta).
-                    self._auto_miss.add(query_name)
+            hit = self._resolve_locked(query_name)
         if hit is None:
             return query_name, None
+        return hit
+
+    def _resolve_locked(self, query_name: str) -> Optional[tuple]:
+        """Shared-routing lookup under ``_lock``: ``(canonical, projector)``
+        or ``None`` for an unshared template."""
+        hit = self._shared.get(query_name)
+        if (hit is None and self._meta
+                and query_name not in self._auto_miss):
+            hit = self._auto_resolve_locked(query_name)
+            if hit is None and query_name in self._meta:
+                # Memoize "described but no covering superset" so the
+                # O(|meta|) scan runs once, not per submit.  Undescribed
+                # templates are O(1) rejects and need no entry, which
+                # keeps this set bounded by len(_meta).
+                self._auto_miss.add(query_name)
         return hit
 
     # ---------------------------------------------------------------- stats

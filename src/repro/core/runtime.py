@@ -146,6 +146,7 @@ class RuntimeStats:
         self.lane_traces: dict = {}
 
     def snapshot(self) -> dict:
+        """Plain JSON-safe copy of every counter and trace."""
         d = {name: int(getattr(self, name)) for name in self._COUNTERS}
         # dict()/list() copies are single C-level ops (no GIL release), so
         # snapshotting while workers insert new lanes cannot hit
@@ -158,6 +159,7 @@ class RuntimeStats:
 
     @property
     def mean_batch_size(self) -> float:
+        """Mean take size over every execution (singles included)."""
         trace = self.batch_trace
         if not trace:
             return 0.0
@@ -264,6 +266,7 @@ class _ResultCache:
             return value, True, 0
 
     def put(self, req: tuple, value: Any) -> None:
+        """Insert/refresh one entry (evicting LRU past stripe capacity)."""
         deadline = (time.monotonic() + self._ttl
                     if self._ttl is not None else None)
         i = self._idx(req)
@@ -276,6 +279,8 @@ class _ResultCache:
 
     def invalidate(self, query_name: Optional[str],
                    params: Optional[tuple], req_key_fn) -> int:
+        """Drop everything / one template's entries / one entry; returns
+        the number of entries removed."""
         if query_name is None:
             n = 0
             for lock, m in zip(self._locks, self._maps):
@@ -397,10 +402,20 @@ class AsyncQueryRuntime:
         applied at result fan-out.
         """
         policy = self.policy
-        if policy is not None:
-            lane_query, projector = policy.resolve(query_name)
-        else:
+        if policy is None:
             lane_query, projector = query_name, None
+        elif self.sharded:
+            # One policy-lock acquisition per submit: resolve the shared
+            # routing AND note the submission on the canonical lane in a
+            # single critical section (the lane key IS the canonical query
+            # when sharded).  The note lands before the quota wait below —
+            # a blocked submission still warms its lane's temperature.
+            lane_query, projector = policy.resolve_submit(query_name)
+        else:
+            # Single-queue compatibility mode: the lane key is not the
+            # query name, so the fold doesn't apply — note the one lane.
+            lane_query, projector = policy.resolve(query_name)
+            policy.note_submit(_SINGLE_LANE)
         lk = self._lane_key(lane_query)
 
         slots = self._acquire_slots(lk, tenant)  # may block; raises on shutdown
@@ -411,8 +426,6 @@ class AsyncQueryRuntime:
         self._producer_done = False
         if projector is not None:
             self.stats.shared.add()
-        if policy is not None:
-            policy.note_submit(lk)
 
         req = self._req_key(lane_query, params)
         stripe = self._handle_stripe(key)
@@ -518,8 +531,10 @@ class AsyncQueryRuntime:
             self._resubmit(handle)
             deadline = time.monotonic() + self.straggler_timeout
 
-    # The HIR interpreter's synchronous path delegates to the service.
     def execute(self, query_name: str, params: tuple) -> Any:
+        """Synchronous single-query escape hatch (the HIR interpreter's
+        untransformed path): delegates straight to the service, bypassing
+        lanes, dedup and the cache."""
         return self.service.execute(query_name, params)
 
     def drain(self) -> None:
@@ -537,6 +552,9 @@ class AsyncQueryRuntime:
                 self._drain_waiters -= 1
 
     def shutdown(self) -> None:
+        """Stop the worker pool and wake every blocked fetcher / submitter /
+        drainer (they observe the shutdown flag and raise).  Pending work is
+        abandoned; call :meth:`drain` first for a clean stop."""
         self._shutdown = True
         self._ready.close()
         with self._gates_lock:

@@ -58,6 +58,7 @@ class ServiceStats:
         self.busy_time = ShardedCounter()
 
     def snapshot(self) -> dict:
+        """Plain-number copy of every counter."""
         d = {name: int(getattr(self, name)) for name in self._COUNTERS}
         d["busy_time"] = float(self.busy_time)
         return d
@@ -115,12 +116,14 @@ class TableService(_StatsMixin):
         raise KeyError(f"unknown query {query_name!r}")
 
     def execute(self, query_name: str, params: tuple) -> Any:
+        """One lookup/query (1 round trip; optional fixed latency)."""
         if self.latency:
             time.sleep(self.latency)
         self._count(round_trips=1, single=1)
         return self._run(query_name, params)
 
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        """Set-oriented form: one call, 3 round trips (§5.2.3)."""
         if self.batch_latency is not None:
             time.sleep(self.batch_latency(len(params_list)))
         elif self.latency:
@@ -162,6 +165,7 @@ class SimulatedDBService(_StatsMixin):
         self.compute_fn = compute_fn or (lambda q, p: (q, p))
 
     def execute(self, query_name: str, params: tuple) -> Any:
+        """One simulated request: 1 round trip + single-query processing."""
         t0 = time.perf_counter()
         time.sleep(self.rtt / 2)
         with self._server:
@@ -172,6 +176,7 @@ class SimulatedDBService(_StatsMixin):
         return out
 
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        """One simulated set-oriented call: 3 round trips + batch costs."""
         n = len(params_list)
         t0 = time.perf_counter()
         # 3 round trips: parameter insert, batched query, cleanup (§5.2.3).
@@ -217,11 +222,31 @@ class ModelService(_StatsMixin):
         self.lane_buckets: dict[str, int] = {}
 
     def execute(self, query_name: str, params: tuple) -> Any:
+        """One model forward, blocking until the device result is ready."""
         self._count(round_trips=1, single=1)
         out = self.single_fn(*params)
         return jax_block(out)
 
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        """One device dispatch for the whole batch; blocks for the results.
+
+        Equivalent to ``execute_batch_async(...)()`` — dispatch + resolve
+        in one call."""
+        return self.execute_batch_async(query_name, params_list)()
+
+    def execute_batch_async(self, query_name: str,
+                            params_list: Sequence[tuple]) -> Callable[[], list]:
+        """Dispatch the batched forward WITHOUT blocking; returns a resolver.
+
+        JAX dispatch is asynchronous: the jitted call returns as soon as
+        the computation is enqueued on the device.  This split exposes
+        that to callers — the paper's "results already fetched by the time
+        they are consumed", at the service layer (the same shape as
+        :meth:`InferenceEngine.prefill_dispatch` /
+        :meth:`~repro.serving.engine.InferenceEngine.commit_prefill` one
+        level up): dispatch the batch, overlap host-side work, then call
+        the returned zero-arg resolver to block on and split the results.
+        """
         jnp = self._jnp
         n = len(params_list)
         n_pad = 0
@@ -237,13 +262,21 @@ class ModelService(_StatsMixin):
             jnp.stack([p[i] for p in params_list]) for i in range(len(params_list[0]))
         )
         self._count(round_trips=3, batches=1, items=n, padded=n_pad)
-        out = jax_block(self.batch_fn(*stacked))
-        import jax
+        pending = self.batch_fn(*stacked)  # async dispatch: not yet blocked
 
-        return [jax.tree_util.tree_map(lambda a: a[i], out) for i in range(n)]
+        def resolve() -> list:
+            """Block on the dispatched batch and split it per request."""
+            import jax
+
+            out = jax_block(pending)
+            return [jax.tree_util.tree_map(lambda a: a[i], out)
+                    for i in range(n)]
+
+        return resolve
 
 
 def jax_block(x):
+    """Block until every device array in the pytree is materialized."""
     import jax
 
     return jax.tree_util.tree_map(

@@ -81,9 +81,20 @@ class BatchingStrategy:
         strategy's lane had requests running.  Static strategies ignore it;
         adaptive ones track the lane's steady-state per-token cost."""
 
+    def observe_abort(self, duration: float) -> None:
+        """Serving-side feedback: a speculative prefill for this strategy's
+        lane was dispatched (paying ``duration`` seconds of prefill) but
+        aborted before commit — the lane it bet on was never freed, or the
+        requests were retired/evicted first — so the work was wasted.
+        Static strategies ignore it; adaptive ones fold the wasted time
+        into the lane's fixed cost so a lane whose speculations keep
+        missing batches later instead of speculating harder."""
+
 
 @dataclasses.dataclass
 class PureAsync(BatchingStrategy):
+    """Always take one pending request (plain asynchronous submission, §3)."""
+
     def decide(self, n_pending: int, producer_done: bool) -> int:
         return 1 if n_pending >= 1 else 0
 
@@ -100,6 +111,8 @@ class PureBatch(BatchingStrategy):
 
 @dataclasses.dataclass
 class OneOrAll(BatchingStrategy):
+    """Take one when one is pending, everything otherwise (§5.2.3)."""
+
     def decide(self, n_pending: int, producer_done: bool) -> int:
         if n_pending == 0:
             return 0
@@ -212,17 +225,26 @@ class AdaptiveCost(BatchingStrategy):
         self.reset()
 
     def reset(self) -> None:
+        """Forget all learned evidence (per-run state)."""
         with getattr(self, "_lock", threading.Lock()):
             self._s: Optional[float] = None  # EWMA single latency
             self._d: Optional[float] = None  # EWMA decode-tick latency (serving)
+            self._ab: Optional[float] = None  # EWMA wasted spec-prefill time
             self._n_single = 0
             self._n_batch = 0
+            self.aborts = 0  # speculative prefills wasted (observe_abort calls)
             # decayed least-squares moments for T(n) = F + n*c
             self._w = self._sn = self._st = self._snt = self._snn = 0.0
             self._explore_flip = False
 
     # ------------------------------------------------------------- learning
     def observe(self, batch_size: int, duration: float) -> None:
+        """Fold one service call's ``(batch_size, duration)`` into the model:
+        size-1 calls update the single-latency EWMA ``s``; larger ones feed
+        the decayed least-squares fit of ``T_batch(n) = F + n·c``.  Each
+        *successful* batch also decays the abort penalty (see
+        :meth:`observe_abort`) — speculation that has started landing again
+        stops being taxed."""
         with self._lock:
             if batch_size <= 1:
                 self._n_single += 1
@@ -232,6 +254,8 @@ class AdaptiveCost(BatchingStrategy):
                 )
                 return
             self._n_batch += 1
+            if self._ab:
+                self._ab *= 1 - self.alpha  # a landed batch: decay the penalty
             d = 1 - self.alpha  # decay old evidence
             self._w = self._w * d + 1.0
             self._sn = self._sn * d + batch_size
@@ -240,11 +264,36 @@ class AdaptiveCost(BatchingStrategy):
             self._snn = self._snn * d + batch_size * batch_size
 
     def observe_decode(self, duration: float) -> None:
+        """Fold one decode-tick duration into the lane's decode EWMA ``d``."""
         with self._lock:
             self._d = (
                 duration if self._d is None
                 else (1 - self.alpha) * self._d + self.alpha * duration
             )
+
+    def observe_abort(self, duration: float) -> None:
+        """Charge one wasted speculative prefill to this lane's cost model.
+
+        The wasted ``duration`` enters an EWMA ``ab`` that is added to the
+        fixed cost in :attr:`threshold` (``(F + d + ab)/(s + d − c)``): a
+        lane whose speculations keep aborting effectively pays the wasted
+        prefill as extra per-batch setup, so it demands a deeper backlog
+        before batching/speculating again.  Successful batches decay the
+        penalty back toward zero (:meth:`observe`)."""
+        with self._lock:
+            self.aborts += 1
+            self._ab = (
+                duration if self._ab is None
+                else (1 - self.alpha) * self._ab + self.alpha * duration
+            )
+
+    @property
+    def abort_penalty(self) -> float:
+        """Current EWMA of wasted speculative-prefill time (0.0 when no
+        abort has been observed, or once successful batches have decayed
+        the penalty away)."""
+        with self._lock:
+            return self._ab or 0.0
 
     @property
     def decode_latency(self) -> Optional[float]:
@@ -272,19 +321,21 @@ class AdaptiveCost(BatchingStrategy):
 
     @property
     def threshold(self) -> Optional[float]:
-        """The learned batching threshold ``(F + d)/(s + d − c)`` — decode
-        occupancy ``d`` amortized by the batch like the fixed cost, each
-        individual submission paying its own (``F/(s − c)`` while no decode
-        ticks have been observed).  ``inf`` when batching never pays;
+        """The learned batching threshold ``(F + d + ab)/(s + d − c)`` —
+        decode occupancy ``d`` and the speculative-abort penalty ``ab``
+        are amortized by the batch like the fixed cost, each individual
+        submission paying its own (``F/(s − c)`` while no decode ticks or
+        aborts have been observed).  ``inf`` when batching never pays;
         ``None`` while still exploring."""
         est = self.estimates()
         if est is None:
             return None
         f, c, s = est
         d = self.decode_latency or 0.0
+        ab = self.abort_penalty
         if s + d <= c:
             return float("inf")
-        return (f + d) / (s + d - c)
+        return (f + d + ab) / (s + d - c)
 
     # ------------------------------------------------------------- decision
     def decide(self, n_pending: int, producer_done: bool) -> int:

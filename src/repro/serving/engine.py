@@ -7,13 +7,33 @@ step over all lanes (inactive lanes are masked).  The admission policy —
 how many queued requests to prefill together — is the scheduler's call
 (:mod:`repro.serving.scheduler`), where the paper's §5.2 strategies live.
 
+Two production mechanisms live at this layer:
+
+* **Per-template KV partitioning** (``kv_shares={template: n_lanes}``).
+  Lanes are a shared cache: without reservations a burst on one template
+  can occupy every free lane and starve the others' cache residency (the
+  serving analogue of one tenant evicting everyone's buffer pool).  A
+  :class:`KVPartition` reserves a fixed lane count per named template;
+  reserved lanes are only ever allocated to (and released back to) their
+  owning template, the remainder form a shared pool any template may use.
+  :func:`proportional_shares` derives a share map from
+  :class:`~repro.core.lane_policy.LanePolicy` ``lane_weights``.
+* **Split prefill dispatch** (:meth:`InferenceEngine.prefill_dispatch` /
+  :meth:`InferenceEngine.commit_prefill`).  ``admit`` = dispatch + commit
+  in one call; the split form lets the scheduler *dispatch* the next
+  batch's padded prefill while the current decode tick runs (JAX dispatch
+  is asynchronous — the jitted call returns before the device finishes)
+  and *commit* the staged KV into lanes at the next tick boundary.
+  Dispatch mutates no engine or request state, so an uncommitted
+  :class:`StagedPrefill` can simply be dropped (speculation abort).
+
 Prefill batches are padded to power-of-two buckets (bounded jit cache).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,27 +41,173 @@ import numpy as np
 
 from repro.models.registry import Arch
 
-__all__ = ["InferenceEngine"]
+__all__ = ["InferenceEngine", "KVPartition", "StagedPrefill",
+           "proportional_shares"]
+
+_SHARED = "__shared__"  # KVPartition pool key for unreserved lanes
 
 
 def _bucket(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
 
 
+def proportional_shares(weights: Mapping[str, float], n_lanes: int,
+                        reserve: float = 0.5) -> dict[str, int]:
+    """Derive ``kv_shares`` from :class:`LanePolicy` ``lane_weights``.
+
+    Distributes ``floor(n_lanes * reserve)`` reserved lanes across the
+    weighted templates proportionally to their weights (largest-remainder
+    rounding, name breaking ties), leaving the rest as the shared pool —
+    so the templates the operator already marked as mattering
+    (``lane_weights``) get KV residency guarantees in the same proportion
+    as their service shares.  Zero-lane templates are dropped from the map
+    (they use the shared pool like any unreserved template).
+    """
+    if not 0.0 <= reserve <= 1.0:
+        raise ValueError("reserve must be in [0, 1]")
+    budget = int(n_lanes * reserve)
+    if not weights or budget <= 0:
+        return {}
+    for t, w in weights.items():
+        if w <= 0:
+            raise ValueError(f"weights[{t!r}] must be > 0, got {w}")
+    total = float(sum(weights.values()))
+    quotas = {t: budget * w / total for t, w in weights.items()}
+    shares = {t: int(q) for t, q in quotas.items()}
+    remaining = budget - sum(shares.values())
+    for t in sorted(quotas, key=lambda t: (-(quotas[t] - shares[t]), t)):
+        if remaining <= 0:
+            break
+        shares[t] += 1
+        remaining -= 1
+    return {t: s for t, s in shares.items() if s > 0}
+
+
+class KVPartition:
+    """Per-template lane reservations over a fixed set of decode lanes.
+
+    ``shares[template] = k`` pins ``k`` specific lanes to ``template``:
+    they are allocated only to that template and return to its pool on
+    release, so no burst elsewhere can take them.  Unreserved lanes form
+    the shared pool; a reserved template drains its own pool first and
+    then competes for shared lanes like everyone else, while a template
+    with no reservation sees only the shared pool.
+
+    Single-threaded by design (the scheduler tick loop): allocation and
+    release happen on the scheduler thread only — the speculative prefill
+    thread never touches the partition (dispatch is stateless; see
+    :meth:`InferenceEngine.prefill_dispatch`).
+    """
+
+    def __init__(self, n_lanes: int, shares: Optional[Mapping[str, int]] = None):
+        shares = dict(shares or {})
+        for t, k in shares.items():
+            if t == _SHARED:
+                raise ValueError(f"{_SHARED!r} is a reserved pool name")
+            if k < 0:
+                raise ValueError(f"kv_shares[{t!r}] must be >= 0, got {k}")
+        if sum(shares.values()) > n_lanes:
+            raise ValueError(
+                f"kv_shares reserve {sum(shares.values())} lanes but the "
+                f"engine only has {n_lanes}")
+        self.shares = {t: k for t, k in shares.items() if k > 0}
+        lanes = list(range(n_lanes))
+        self._home: dict[int, str] = {}
+        self._free: dict[str, list[int]] = {}
+        for t, k in self.shares.items():
+            pool = [lanes.pop(0) for _ in range(k)]
+            for lane in pool:
+                self._home[lane] = t
+            self._free[t] = pool
+        self._free[_SHARED] = lanes
+
+    @property
+    def n_free(self) -> int:
+        """Total free lanes across every pool."""
+        return sum(len(p) for p in self._free.values())
+
+    def n_free_for(self, template: Optional[str]) -> int:
+        """Free lanes ``template`` may allocate right now: its own reserved
+        pool (if any) plus the shared pool.  ``None`` (untemplated
+        admission) sees only the shared pool."""
+        n = len(self._free[_SHARED])
+        if template is not None:
+            n += len(self._free.get(template, ()))
+        return n
+
+    def alloc(self, template: Optional[str]) -> int:
+        """Take one lane for ``template`` — its reserved pool first (keeps
+        the shared pool liquid for everyone else), then shared.  Raises
+        ``IndexError`` when neither pool has a free lane."""
+        pool = self._free.get(template) if template is not None else None
+        if not pool:
+            pool = self._free[_SHARED]
+        return pool.pop(0)
+
+    def release(self, lane: int) -> None:
+        """Return a lane to its home pool (owning template's reservation,
+        or shared for unreserved lanes)."""
+        self._free[self._home.get(lane, _SHARED)].append(lane)
+
+    def benefits(self, lane: int, template: Optional[str]) -> bool:
+        """Whether releasing ``lane`` would raise ``n_free_for(template)``:
+        true for shared lanes and for ``template``'s own reserved lanes.
+        The scheduler's speculative sizing uses this to bet only on
+        retirements that can actually serve the speculated template —
+        a lane going home to ANOTHER template's reservation is a
+        guaranteed miss, not a speculation."""
+        home = self._home.get(lane, _SHARED)
+        return home == _SHARED or home == template
+
+    @property
+    def free_lanes(self) -> list[int]:
+        """Sorted snapshot of every free lane (introspection/debugging)."""
+        return sorted(lane for p in self._free.values() for lane in p)
+
+
+@dataclasses.dataclass
+class StagedPrefill:
+    """A dispatched-but-uncommitted prefill batch.
+
+    Produced by :meth:`InferenceEngine.prefill_dispatch`; holds the padded
+    batch's device results (``first`` tokens + KV ``cache`` — possibly
+    still being computed: JAX dispatch is asynchronous) and the request
+    list, but no engine state.  :meth:`InferenceEngine.commit_prefill`
+    materializes it into lanes; dropping it instead is a zero-cost abort
+    (beyond the device work already paid, which the scheduler reports via
+    ``observe_abort``).
+    """
+
+    template: Optional[str]
+    requests: list
+    first: object   # (bsz,) int32 device array — argmax token 0 per row
+    cache: object   # KV pytree, batch axis sized to the padded bucket
+    plens: np.ndarray
+    shape: tuple[int, int]  # the padded (batch, prompt) bucket dispatched
+
+
 @dataclasses.dataclass
 class InferenceEngine:
+    """Lane-based KV cache + jitted prefill/decode (see module docstring).
+
+    ``kv_shares`` reserves decode lanes per template
+    (:class:`KVPartition`); the default ``None`` keeps every lane in the
+    shared pool (pre-partitioning behaviour).
+    """
+
     arch: Arch
     params: object
     n_lanes: int = 8
     max_prompt_len: int = 64
     max_len: int = 128
+    kv_shares: Optional[Mapping[str, int]] = None
 
     def __post_init__(self):
         self.cache = self.arch.init_cache(self.n_lanes, self.max_len)
         self.lengths = jnp.zeros((self.n_lanes,), jnp.int32)
         self.active = np.zeros((self.n_lanes,), bool)
         self.last_token = jnp.zeros((self.n_lanes,), jnp.int32)
-        self.free_lanes = list(range(self.n_lanes))
+        self.partition = KVPartition(self.n_lanes, self.kv_shares)
         self.decode_steps = 0
         self.prefill_calls = 0
         # template -> pinned (batch, prompt) prefill bucket: each template
@@ -85,10 +251,32 @@ class InferenceEngine:
         ``template`` keys the padding bucket to the lane: the batch/prompt
         bucket is pinned per template (monotone max), so every admission of
         a template after its first dispatches the SAME compiled shape.
+        With ``kv_shares``, ``template`` also selects which lane pools the
+        batch may draw from (:meth:`n_free_for` bounds the batch size).
+
+        Equivalent to :meth:`prefill_dispatch` immediately followed by
+        :meth:`commit_prefill` — the synchronous path, paying the prefill
+        inline; the scheduler's overlap mode uses the split form instead.
         """
         if not requests:
             return (0, 0)
-        assert len(requests) <= len(self.free_lanes), "admit() beyond free lanes"
+        assert len(requests) <= self.n_free_for(template), \
+            "admit() beyond this template's free lanes"
+        return self.commit_prefill(self.prefill_dispatch(requests, template))
+
+    def prefill_dispatch(self, requests: Sequence,
+                         template: Optional[str] = None) -> StagedPrefill:
+        """Dispatch (but do not commit) one padded prefill batch.
+
+        Builds the padded token batch and issues the jitted prefill — an
+        *asynchronous* device dispatch: the call returns as soon as the
+        computation is enqueued, so the caller can overlap it with a decode
+        tick and commit at the next tick boundary.  No engine or request
+        state is mutated (the only write is the per-template shape pin,
+        a GIL-atomic dict store), so this is safe to call from the
+        scheduler's speculative-dispatch thread while :meth:`decode_tick`
+        runs on the main thread, and an uncommitted result can be dropped.
+        """
         bsz = _bucket(len(requests))
         # Bucket the prompt axis to the batch's longest (truncated) prompt:
         # lane-homogeneous admission (scheduler groups by template) means
@@ -109,26 +297,46 @@ class InferenceEngine:
         first, cache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(plens), self.max_len
         )
-        first = np.asarray(first)
+        return StagedPrefill(template, list(requests), first, cache,
+                             plens, (bsz, plen))
 
-        lanes = [self.free_lanes.pop(0) for _ in requests]
-        self.cache = _insert_lanes(self.cache, cache, lanes)
+    def commit_prefill(self, staged: StagedPrefill,
+                       n: Optional[int] = None) -> tuple[int, int]:
+        """Materialize a staged prefill into decode lanes.
+
+        Commits the first ``n`` requests of ``staged`` (default: all),
+        blocking until the device results are ready, allocating each a
+        lane from its template's pools and splicing its KV rows into the
+        lane cache.  The caller bounds ``n`` by :meth:`n_free_for` —
+        requests beyond ``n`` are the caller's to re-queue (speculation
+        abort: the rows were computed but never inserted).  Returns the
+        padded ``(batch, prompt)`` bucket actually dispatched (cost-model
+        feedback, same as :meth:`admit`).
+        """
+        reqs = staged.requests if n is None else staged.requests[:n]
+        assert len(reqs) <= self.n_free_for(staged.template), \
+            "commit_prefill() beyond this template's free lanes"
+        if not reqs:
+            return staged.shape
+        first = np.asarray(staged.first)  # materializes the async dispatch
+        lanes = [self.partition.alloc(staged.template) for _ in reqs]
+        self.cache = _insert_lanes(self.cache, staged.cache, lanes)
         lt = np.array(self.last_token)
         ln = np.array(self.lengths)
-        for i, (r, lane) in enumerate(zip(requests, lanes)):
+        for i, (r, lane) in enumerate(zip(reqs, lanes)):
             r.lane = lane
             r.generated.append(int(first[i]))
             lt[lane] = first[i]
-            ln[lane] = plens[i]  # real prompt length; decode writes here next
+            ln[lane] = staged.plens[i]  # real prompt length; decode writes here
             self.active[lane] = True
         self.last_token = jnp.asarray(lt)
         self.lengths = jnp.asarray(ln)
         self.prefill_calls += 1
-        return bsz, plen  # padded bucket actually dispatched (cost feedback)
+        return staged.shape
 
     # ----------------------------------------------------------------- tick
     def decode_tick(self) -> dict[int, int]:
-        """One batched decode step over all lanes → {lane: token}."""
+        """One batched decode step over all lanes → ``{lane: token}``."""
         if not self.active.any():
             return {}
         nxt, self.cache = self._decode(
@@ -144,12 +352,32 @@ class InferenceEngine:
         return {lane: int(out[lane]) for lane in np.nonzero(self.active)[0]}
 
     def retire(self, lane: int) -> None:
+        """Free a lane (request finished or force-retired); the lane
+        returns to its home pool — a reserved lane back to its template's
+        reservation, a shared lane back to the shared pool."""
         self.active[lane] = False
-        self.free_lanes.append(lane)
+        self.partition.release(lane)
 
     @property
     def n_free(self) -> int:
-        return len(self.free_lanes)
+        """Total free lanes across every pool."""
+        return self.partition.n_free
+
+    def n_free_for(self, template: Optional[str]) -> int:
+        """Free lanes admissible for ``template`` right now (its reserved
+        pool plus the shared pool; see :class:`KVPartition`)."""
+        return self.partition.n_free_for(template)
+
+    def lane_benefits(self, lane: int, template: Optional[str]) -> bool:
+        """Whether retiring ``lane`` would free capacity ``template`` can
+        use (:meth:`KVPartition.benefits`) — the scheduler's speculative
+        sizing hint."""
+        return self.partition.benefits(lane, template)
+
+    @property
+    def free_lanes(self) -> list[int]:
+        """Sorted snapshot of every free lane (introspection/debugging)."""
+        return self.partition.free_lanes
 
 
 def _insert_lanes(lane_cache, new_cache, lanes: list[int]):

@@ -12,22 +12,37 @@ __all__ = ["Request", "RequestMetrics"]
 
 @dataclasses.dataclass
 class RequestMetrics:
+    """Wall-clock milestones for one request's trip through the scheduler.
+
+    ``admitted`` is when the request left its queue for a prefill batch —
+    for a speculatively-prefilled request that is the *dispatch* time (the
+    prefill started while the previous decode tick was still running), and
+    ``speculative`` records that the request took the overlap path.  A
+    speculative request whose bet missed is re-queued and may be admitted
+    again; the timestamps always describe the attempt that finally landed.
+    """
+
     arrival: float = 0.0
     admitted: float = 0.0
     first_token: float = 0.0
     finished: float = 0.0
+    speculative: bool = False  # prefill overlapped a decode tick
 
     @property
-    def ttft(self) -> float:  # time to first token (paper: time to k-th response)
+    def ttft(self) -> float:
+        """Time to first token (paper: time to k-th response)."""
         return self.first_token - self.arrival
 
     @property
     def latency(self) -> float:
+        """Total arrival → finished wall time."""
         return self.finished - self.arrival
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request (prompt in, ``max_new_tokens`` tokens out)."""
+
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
@@ -45,4 +60,10 @@ class Request:
 
     @property
     def done(self) -> bool:
+        """Whether the token budget is spent."""
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def remaining(self) -> int:
+        """Tokens still owed (0 once :attr:`done`)."""
+        return max(0, self.max_new_tokens - len(self.generated))

@@ -34,7 +34,10 @@ AdaptiveCost model, cold ones stay pure-async), lanes are visited in
 weighted-fair order instead of round-robin, and both prefill (admit) and
 decode-tick durations feed back into that lane's cost model.  Admission
 also passes the template to :meth:`InferenceEngine.admit`, which pins one
-compiled prefill shape per template.
+compiled prefill shape per template and — with ``kv_shares`` — bounds the
+batch by that template's reserved + shared KV lanes
+(:meth:`InferenceEngine.n_free_for`), so a burst on one template cannot
+evict or starve the others' cache residency.
 
 Admission consumes the same :class:`~repro.core.concurrency.ReadyLanes`
 structure the lock-sharded runtime's workers drain: lanes with queued
@@ -42,6 +45,28 @@ requests sit in a duplicate-suppressed ready queue, each tick pops lanes
 (weighted-fair under a policy, FIFO/round-robin otherwise) only while
 engine slots remain free, and lanes with leftover backlog are re-queued —
 a tick never scans lanes that have nothing to admit.
+
+**Speculative prefill overlap** (``overlap=True``) — the paper's core
+claim, applied to the tick loop itself: results should already be fetched
+by the time they are consumed, so the *next* batch's prefill should be in
+flight while the *current* decode tick runs, not after it.  Each tick
+becomes a two-stage pipeline:
+
+  commit(staged) → admit → speculate(dispatch next lane's prefill)
+                                      ∥ decode tick t
+  commit at tick t+1's boundary ──────┘
+
+The scheduler peeks (without popping — :meth:`ReadyLanes.peek`) the next
+ready lane, sizes a batch against the lanes that are free now *plus* the
+lanes decode is about to retire (the speculation), and dispatches its
+padded prefill on a separate thread through
+:meth:`InferenceEngine.prefill_dispatch` while :meth:`decode_tick` runs.
+At the next tick boundary the staged KV is committed into lanes
+(:meth:`InferenceEngine.commit_prefill`).  If the bet missed — the lanes
+it counted on were never freed, or freed into another template's
+reservation — the uncommitted requests go back to the head of their queue
+and the wasted prefill time feeds the lane's own cost model via
+``observe_abort``, so chronically-missing lanes speculate less.
 
 The scheduler records the per-tick admission trace (= Fig. 10 batch sizes,
 also split per lane) and per-request ttft/latency (= Fig. 11
@@ -54,6 +79,7 @@ runtime's fetch-timeout path).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import Optional
@@ -69,21 +95,84 @@ __all__ = ["ContinuousBatchingScheduler"]
 
 @dataclasses.dataclass
 class SchedulerStats:
+    """Per-scheduler counters and traces (one instance per scheduler)."""
+
     admission_trace: list = dataclasses.field(default_factory=list)  # (tick, n)
     # per-template (tick, n) admission traces (runtime lane analogue)
     lane_admissions: dict = dataclasses.field(default_factory=dict)
     decode_ticks: int = 0
     completed: int = 0
     requeued: int = 0
+    # speculative-prefill pipeline (overlap=True)
+    spec_dispatched: int = 0  # requests whose prefill was dispatched early
+    spec_committed: int = 0   # of those, committed into KV lanes
+    spec_aborted: int = 0     # of those, re-queued (the bet missed)
+
+
+class _SpecTask:
+    """One in-flight speculative prefill.
+
+    The dispatch runs on its own daemon thread so the host-side padding +
+    device dispatch overlaps the main thread's decode tick; the main
+    thread joins at the next tick boundary (commit).  One task is in
+    flight at a time (the pipeline is two-stage), so a plain thread per
+    dispatch costs nothing worth pooling."""
+
+    __slots__ = ("template", "batch", "staged", "duration", "error", "_thread")
+
+    def __init__(self, engine, template: str, batch: list):
+        self.template = template
+        self.batch = batch
+        self.staged = None
+        self.duration = 0.0
+        self.error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(engine,), daemon=True,
+            name="cbs-spec-prefill",
+        )
+        self._thread.start()
+
+    def _run(self, engine) -> None:
+        t0 = time.perf_counter()
+        try:
+            self.staged = engine.prefill_dispatch(self.batch,
+                                                  template=self.template)
+        except BaseException as e:  # noqa: BLE001 — surfaced at commit
+            self.error = e
+        self.duration = time.perf_counter() - t0
+
+    def join(self) -> None:
+        """Block until the dispatch thread has finished (commit boundary)."""
+        self._thread.join()
 
 
 class ContinuousBatchingScheduler:
+    """Per-template admission + one batched decode step per tick.
+
+    Parameters
+    ----------
+    engine:
+        The lane-holding engine.  Any object with the
+        :class:`InferenceEngine` admission/decode surface works; the
+        ``overlap=True`` pipeline additionally needs the split dispatch
+        path (``prefill_dispatch`` / ``commit_prefill`` / ``n_free_for``).
+    strategy / policy:
+        One global :class:`BatchingStrategy`, or a per-lane
+        :class:`LanePolicy` (mutually exclusive).
+    lane_timeout:
+        Decode ticks before a running request is force-retired and
+        re-queued (straggler mitigation); ``None`` disables.
+    overlap:
+        Enable the speculative prefill/decode pipeline (module docstring).
+    """
+
     def __init__(
         self,
         engine: InferenceEngine,
         strategy: Optional[BatchingStrategy] = None,
         lane_timeout: Optional[int] = None,
         policy: Optional[LanePolicy] = None,
+        overlap: bool = False,
     ):
         if policy is not None and strategy is not None:
             raise ValueError(
@@ -93,6 +182,16 @@ class ContinuousBatchingScheduler:
         self.policy = policy
         self.strategy = strategy or PureAsync()
         self.strategy.reset()
+        self.overlap = overlap
+        if overlap and not hasattr(engine, "prefill_dispatch"):
+            raise ValueError(
+                "overlap=True needs an engine with the split dispatch path "
+                "(prefill_dispatch/commit_prefill/n_free_for)"
+            )
+        # Engines predating KV partitioning expose only the global n_free;
+        # treat every template as drawing from one shared pool there.
+        self._free_for = getattr(engine, "n_free_for",
+                                 lambda tmpl: engine.n_free)
         # template -> pending requests; insertion-ordered for round-robin
         self.queues: "OrderedDict[str, deque[Request]]" = OrderedDict()
         self.running: dict[int, Request] = {}  # lane -> request
@@ -106,9 +205,11 @@ class ContinuousBatchingScheduler:
         self._ready = ReadyLanes()
         self._warm_shapes: set = set()  # prefill buckets already compiled
         self._producer_done = False
+        self._staged: Optional[_SpecTask] = None  # in-flight spec prefill
 
     # ------------------------------------------------------------------ api
     def submit(self, request: Request) -> None:
+        """Queue one request on its template's lane."""
         q = self.queues.get(request.template)
         if q is None:
             q = self.queues[request.template] = deque()
@@ -119,39 +220,214 @@ class ContinuousBatchingScheduler:
 
     @property
     def n_queued(self) -> int:
+        """Requests waiting in lanes (staged/running not counted)."""
         return sum(len(q) for q in self.queues.values())
 
     def producer_done(self) -> None:
+        """Signal that no more requests are coming (lets PureBatch-style
+        strategies drain the tail)."""
         self._producer_done = True
 
     def run_until_drained(self, max_ticks: int = 100_000) -> list[Request]:
+        """Tick until every submitted request has finished (or raise after
+        ``max_ticks`` with a diagnosis of what is stuck)."""
         done: list[Request] = []
         for _ in range(max_ticks):
-            if not self.n_queued and not self.running:
+            if (not self.n_queued and not self.running
+                    and self._staged is None):
                 if self._producer_done:
                     break
             done.extend(self.tick())
         else:
-            if self.n_queued or self.running:
+            if self.n_queued or self.running or self._staged is not None:
                 stuck_queued = {t: len(q) for t, q in self.queues.items() if q}
                 stuck_running = {
                     lane: r.template for lane, r in sorted(self.running.items())
                 }
+                staged = (f", staged spec prefill on "
+                          f"{self._staged.template!r}" if self._staged else "")
                 raise RuntimeError(
                     f"run_until_drained exhausted max_ticks={max_ticks} with "
                     f"work still pending: queued per template {stuck_queued}, "
-                    f"running lanes {stuck_running} "
+                    f"running lanes {stuck_running}{staged} "
                     f"({self.stats.completed} completed, "
-                    f"{self.stats.requeued} requeued). A lane that never "
-                    "finishes usually means the engine stopped emitting "
-                    "tokens for it or max_new_tokens exceeds the tick budget."
+                    f"{self.stats.requeued} requeued, "
+                    f"{self.stats.spec_aborted} spec-aborted). A lane that "
+                    "never finishes usually means the engine stopped emitting "
+                    "tokens for it, max_new_tokens exceeds the tick budget, "
+                    "or kv_shares leaves its template no admissible lane."
                 )
         return done
 
+    # ------------------------------------------------- speculative pipeline
+    def _strategy_for(self, tmpl: str) -> BatchingStrategy:
+        return (self.policy.strategy_for(tmpl) if self.policy is not None
+                else self.strategy)
+
+    def _requeue_front(self, tmpl: str, batch: list) -> None:
+        """Return an uncommitted speculative batch to the head of its lane
+        (these requests were next in line; they must not lose their turn).
+        The overlap markers are reset: metrics describe the attempt that
+        finally lands, and this one did not."""
+        q = self.queues.get(tmpl)
+        if q is None:
+            q = self.queues[tmpl] = deque()
+        for r in reversed(batch):
+            r.metrics.speculative = False
+            q.appendleft(r)
+        self._ready.push(tmpl)
+
+    def _land_batch(self, tmpl: str, strat: BatchingStrategy, batch: list,
+                    shape, duration: float) -> None:
+        """Shared bookkeeping for a batch that just entered KV lanes —
+        identical for synchronous admission and speculative commit, so the
+        two paths cannot drift.
+
+        Cost-model feedback is warm-shape guarded: the first dispatch of a
+        padded bucket pays XLA compilation, an outlier that would blow up
+        the learned fixed cost, so only steady-state durations are
+        observed, sized by the bucket the device actually dispatched.
+        ``duration`` is what the scheduler actually paid for the batch:
+        the inline admit time on the synchronous path, dispatch + the
+        commit-side materialization wait on the speculative one."""
+        if shape in self._warm_shapes:
+            strat.observe(shape[0], duration)
+        else:
+            self._warm_shapes.add(shape)
+        if self.policy is not None:
+            self.policy.charge(tmpl, len(batch))
+        now = time.perf_counter()
+        for r in batch:
+            r.metrics.first_token = now  # prefill emits token 0
+            self.running[r.lane] = r
+            self._lane_age[r.lane] = 0
+        self.stats.admission_trace.append((self.stats.decode_ticks, len(batch)))
+        self.stats.lane_admissions.setdefault(tmpl, []).append(
+            (self.stats.decode_ticks, len(batch)))
+
+    def _commit_speculative(self) -> None:
+        """Tick-boundary commit of the previous tick's speculative prefill.
+
+        Joins the dispatch thread, commits as many staged requests as the
+        template's pools can actually hold NOW, and aborts the rest: they
+        return to the head of their queue and the wasted prefill time is
+        charged to the lane's cost model (``observe_abort``)."""
+        task = self._staged
+        if task is None:
+            return
+        self._staged = None
+        task.join()
+        tmpl = task.template
+        if task.error is not None:
+            self._requeue_front(tmpl, task.batch)
+            raise task.error
+        strat = self._strategy_for(tmpl)
+        fit = min(len(task.batch), self._free_for(tmpl))
+        committed = task.batch[:fit]
+        if committed:
+            t0 = time.perf_counter()
+            shape = self.engine.commit_prefill(task.staged, n=fit)
+            commit_dt = time.perf_counter() - t0
+            self._land_batch(tmpl, strat, committed, shape,
+                             task.duration + commit_dt)
+            self.stats.spec_committed += fit
+        aborted = task.batch[fit:]
+        if aborted:
+            self._requeue_front(tmpl, aborted)
+            self.stats.spec_aborted += len(aborted)
+            if not committed:
+                # The whole dispatch was wasted: charge the lane so it
+                # demands a deeper backlog before speculating again.  A
+                # partial commit still used the batch — no penalty.
+                if self.policy is not None:
+                    self.policy.observe_abort(tmpl, task.duration)
+                else:
+                    strat.observe_abort(task.duration)
+
+    def _dispatch_speculative(self, select) -> None:
+        """Pick the next speculable ready lane (peek — a lane we decline
+        keeps its queue position) and dispatch its prefill on the spec
+        thread, sized against free lanes plus the lanes this tick's decode
+        is about to retire — the speculation ``_commit_speculative``
+        settles at the next boundary.
+
+        The scan consults each ready lane at most once, in the pick order
+        admission would use (weighted-fair under a policy, FIFO
+        otherwise), by filtering already-declined lanes out of the peek's
+        candidate set — so one permanently-starved head lane cannot blind
+        the speculator to dispatchable lanes behind it, in EITHER pick
+        discipline, and declined lanes are never reordered."""
+        ben = getattr(self.engine, "lane_benefits", None)
+        consulted: set = set()
+
+        def next_candidate(keys: list):
+            cand = [k for k in keys if k not in consulted]
+            if not cand:
+                return None  # peek passes this through: scan exhausted
+            return cand[0] if select is None else select(cand)
+
+        while True:
+            tmpl = self._ready.peek(select=next_candidate)
+            if tmpl is None or tmpl in consulted:
+                # None: nothing ready / every ready lane declined.  A
+                # consulted key can still surface via peek's single-entry
+                # short-circuit (select is bypassed at len 1): same exit.
+                return
+            consulted.add(tmpl)
+            q = self.queues.get(tmpl)
+            if not q:
+                # Stale entry (lane drained since the push): discard it —
+                # the targeted pop removes exactly this key.
+                self._ready.pop(select=lambda keys, t=tmpl: t, block=False)
+                continue
+            # The speculative capacity: lanes free now, plus lanes whose
+            # request reaches max_new_tokens on this very tick (decode is
+            # about to retire them) — counting only retirements whose lane
+            # goes home to a pool this template can draw from
+            # (engine.lane_benefits): a lane bound for another template's
+            # reservation is a guaranteed miss, not a bet.  The remaining
+            # optimism (a straggler that refuses to finish, an engine that
+            # stops emitting, an engine without the lane_benefits hint) is
+            # what makes this a speculation, and the abort path is what
+            # settles it.  Capacity is checked BEFORE the strategy is
+            # consulted: decide() may be stateful (AdaptiveCost's explore
+            # alternation), and a lane with no speculative capacity must
+            # not consume a decision it cannot act on.
+            cap = self._free_for(tmpl) + sum(
+                1 for r in self.running.values()
+                if r.remaining <= 1 and (ben is None or ben(r.lane, tmpl)))
+            if cap > 0:
+                strat = self._strategy_for(tmpl)
+                take = min(strat.decide(len(q), self._producer_done),
+                           len(q), cap)
+                if take > 0:
+                    break
+            # Declined (strategy says wait / no capacity even
+            # speculatively): leave the lane exactly where it is and look
+            # at the next candidate.
+        self._ready.pop(select=lambda keys, t=tmpl: t, block=False)
+        batch = [q.popleft() for _ in range(take)]
+        if not q:
+            del self.queues[tmpl]
+        else:
+            self._ready.push(tmpl)
+        now = time.perf_counter()
+        for r in batch:
+            r.metrics.admitted = now
+            r.metrics.speculative = True
+        self._staged = _SpecTask(self.engine, tmpl, batch)
+        self.stats.spec_dispatched += take
+
     # ----------------------------------------------------------------- tick
     def tick(self) -> list[Request]:
-        """One scheduling round: admit per strategy (per lane), one decode
-        step."""
+        """One scheduling round: commit the staged speculative prefill,
+        admit per strategy (per lane), dispatch the next speculation, run
+        one decode step."""
+        # 0) tick boundary: the previous tick's speculative prefill lands
+        # (or aborts) before admission sees the free-lane picture.
+        if self.overlap:
+            self._commit_speculative()
+
         # 1) admission — the paper's "how many requests does a free worker
         # take from the queue" decision.  Ready lanes are popped (weighted-
         # fair under a LanePolicy, round-robin otherwise) only while engine
@@ -177,15 +453,14 @@ class ContinuousBatchingScheduler:
             q = self.queues.get(tmpl)
             if not q:
                 continue  # stale push: lane drained since
-            strat = (self.policy.strategy_for(tmpl) if self.policy is not None
-                     else self.strategy)
+            strat = self._strategy_for(tmpl)
             want = strat.decide(len(q), self._producer_done)
-            take = min(want, self.engine.n_free, len(q))
+            # kv_shares: the batch is bounded by THIS template's admissible
+            # lanes (reserved + shared), not the global free count.
+            take = min(want, self._free_for(tmpl), len(q))
             if take <= 0:
                 repush.append(tmpl)  # strategy says wait: stay scheduled
                 continue
-            if self.policy is not None:
-                self.policy.charge(tmpl, take)
             batch = [q.popleft() for _ in range(take)]
             if not q:
                 # GC drained lanes (mirrors the runtime): high-cardinality
@@ -198,27 +473,18 @@ class ContinuousBatchingScheduler:
                 r.metrics.admitted = now
             t0 = time.perf_counter()
             shape = self.engine.admit(batch, template=tmpl)
-            dt = time.perf_counter() - t0
-            # Adaptive feedback: the first admit of a bucket shape pays XLA
-            # compilation — an outlier that would blow up a learned fixed
-            # cost, so only steady-state admits are observed, sized by the
-            # padded bucket the device actually dispatched.  Feedback goes
-            # to the deciding model (the lane's own under a policy).
-            if shape in self._warm_shapes:
-                strat.observe(shape[0], dt)
-            else:
-                self._warm_shapes.add(shape)
-            now = time.perf_counter()
-            for r in batch:
-                r.metrics.first_token = now  # prefill emits token 0
-                self.running[r.lane] = r
-                self._lane_age[r.lane] = 0
-            self.stats.admission_trace.append((self.stats.decode_ticks, take))
-            self.stats.lane_admissions.setdefault(tmpl, []).append(
-                (self.stats.decode_ticks, take)
-            )
+            # Feedback goes to the deciding model (the lane's own under a
+            # policy); warm-shape guarding and the landing bookkeeping are
+            # shared with the speculative commit path.
+            self._land_batch(tmpl, strat, batch, shape,
+                             time.perf_counter() - t0)
         for tmpl in repush:
             self._ready.push(tmpl)
+
+        # 1.5) speculation: while decode runs below, the next ready lane's
+        # prefill is already in flight on the spec thread.
+        if self.overlap and self._staged is None:
+            self._dispatch_speculative(select)
 
         # 2) one batched decode step over all active lanes
         finished: list[Request] = []

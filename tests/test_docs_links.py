@@ -1,0 +1,32 @@
+"""Docs gate, tier-1 edition: the CI ``docs`` job runs
+``tools/check_links.py``; this wraps the same checker so a broken
+relative link (or a doc the tentpole promised going missing) fails
+locally before CI ever sees it."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_links import broken_links, iter_markdown  # noqa: E402
+
+
+def test_no_broken_relative_links():
+    assert broken_links(ROOT) == []
+
+
+def test_docs_layer_exists_and_is_scanned():
+    scanned = {p.relative_to(ROOT).as_posix() for p in iter_markdown(ROOT)}
+    for required in ("docs/ARCHITECTURE.md", "docs/TUNING.md", "ROADMAP.md",
+                     "benchmarks/README.md"):
+        assert required in scanned, f"{required} missing from the docs gate"
+
+
+def test_checker_flags_a_broken_link(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "a.md").write_text(
+        "[ok](a.md) [dead](missing.md) [ext](https://x) [anchor](#sec)")
+    problems = broken_links(tmp_path)
+    assert problems == ["docs/a.md: missing.md"]

@@ -39,6 +39,7 @@ class Recording(BatchingStrategy):
     def __init__(self):
         self.observed: list[tuple[int, float]] = []
         self.decode_observed: list[float] = []
+        self.aborted: list[float] = []
 
     def decide(self, n_pending, producer_done):
         return n_pending
@@ -48,6 +49,9 @@ class Recording(BatchingStrategy):
 
     def observe_decode(self, duration):
         self.decode_observed.append(duration)
+
+    def observe_abort(self, duration):
+        self.aborted.append(duration)
 
 
 # ---------------------------------------------------------------------------
@@ -584,6 +588,60 @@ def test_decode_occupancy_flips_batching_decision():
     cheap.observe_decode(0.2)  # s+d=0.3 still <= c=0.5: batching never pays
     assert cheap.threshold == float("inf")
     assert cheap.decide(100, False) == 1
+
+
+def test_abort_penalty_raises_threshold_then_decays():
+    """A wasted speculative prefill (observe_abort) enters the threshold
+    like extra fixed cost — (F+d+ab)/(s+d−c) — so a chronically-missing
+    lane demands a deeper backlog; landed batches decay the penalty."""
+    s = AdaptiveCost(alpha=0.5, min_samples=3)
+    for _ in range(3):
+        s.observe(1, 1.0)                    # s = 1.0
+    for n in (2, 4, 8):
+        s.observe(n, 0.5 + 0.1 * n)          # exact line: F=0.5, c=0.1
+    assert s.abort_penalty == 0.0
+    base = s.threshold
+    assert base == pytest.approx(0.5 / 0.9, abs=0.05)
+    s.observe_abort(0.9)
+    assert s.aborts == 1
+    assert s.abort_penalty == pytest.approx(0.9)
+    assert s.threshold == pytest.approx((0.5 + 0.9) / 0.9, abs=0.05)
+    assert s.threshold > base
+    # a batch that lands again decays the penalty back toward zero
+    p0 = s.abort_penalty
+    s.observe(4, 0.9)
+    assert 0.0 < s.abort_penalty < p0
+    # singles never decay it (no batch landed)
+    p1 = s.abort_penalty
+    s.observe(1, 1.0)
+    assert s.abort_penalty == pytest.approx(p1)
+    s.reset()
+    assert s.abort_penalty == 0.0 and s.aborts == 0
+
+
+def test_policy_routes_observe_abort_to_lane_strategy():
+    rec_a, rec_b = Recording(), Recording()
+    policy = LanePolicy(overrides={"a": rec_a, "b": rec_b})
+    policy.observe_abort("a", 0.25)
+    assert rec_a.aborted == [0.25]
+    assert rec_b.aborted == []
+
+
+def test_resolve_submit_folds_note_into_one_call():
+    """resolve_submit = resolve + note_submit on the canonical lane: shared
+    variants warm the canonical's temperature, not their own."""
+    policy = LanePolicy(hot_threshold=2)
+    policy.share("users.lookup", {"users.sel_name": lambda r: r["name"]})
+    lane, proj = policy.resolve_submit("users.sel_name")
+    assert lane == "users.lookup" and proj is not None
+    lane, proj = policy.resolve_submit("plain")
+    assert lane == "plain" and proj is None
+    snap = policy.snapshot()["lanes"]
+    assert snap["users.lookup"]["submits"] == 1   # noted on the canonical
+    assert "users.sel_name" not in snap
+    assert snap["plain"]["submits"] == 1
+    policy.resolve_submit("users.sel_name")
+    assert policy.is_hot("users.lookup")          # 2 submits >= hot_threshold
 
 
 # ---------------------------------------------------------------------------

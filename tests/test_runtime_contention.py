@@ -425,6 +425,22 @@ def test_ready_lanes_dedups_and_orders():
     assert r.pop() is None  # ...then signals shutdown
 
 
+def test_ready_lanes_peek_without_pop():
+    """peek returns what pop would, never blocks, and leaves the queue
+    untouched — the serving scheduler's speculation primitive."""
+    r = ReadyLanes()
+    assert r.peek() is None  # empty: no block, no None-pop confusion
+    r.push("a")
+    r.push("b")
+    assert r.peek() == "a"
+    assert r.peek() == "a"          # idempotent: nothing was removed
+    assert len(r) == 2
+    assert r.peek(select=max) == "b"  # weighted-fair style select applies
+    assert "b" in r                   # ...but the winner stays queued
+    assert r.pop() == "a"             # FIFO pop still sees the peeked head
+    assert r.pop(select=max) == "b"
+
+
 def test_ready_lanes_push_all_and_blocking_pop():
     r = ReadyLanes()
     got = []

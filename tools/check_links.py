@@ -1,0 +1,71 @@
+"""Fail on broken relative links in the repo's markdown.
+
+Scans ``docs/**/*.md``, every root-level ``*.md`` (ROADMAP, PAPER, ...)
+and ``benchmarks/README.md`` for markdown links/images whose target is a
+relative path, and verifies the target exists on disk.  External links
+(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+skipped; a relative target's ``#fragment`` is stripped before the
+existence check.  Used by the CI ``docs`` job and wrapped by
+``tests/test_docs_links.py`` so tier-1 catches a broken link before CI
+does.
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); target ends at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root: Path):
+    """The markdown set the docs gate covers (docs tree + README-level)."""
+    seen = set()
+    for pattern in ("*.md", "docs/**/*.md", "benchmarks/README.md"):
+        for p in sorted(root.glob(pattern)):
+            if p not in seen:
+                seen.add(p)
+                yield p
+
+
+def broken_links(root: Path) -> list[str]:
+    """``"file: target"`` lines for every relative link that resolves to
+    nothing on disk."""
+    problems = []
+    for md in iter_markdown(root):
+        text = md.read_text(encoding="utf-8")
+        # fenced code blocks frequently contain ``[x](y)``-shaped text
+        # (regex examples, shell globs) that are not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(f"{md.relative_to(root)}: {target}")
+    return problems
+
+
+def main(argv=None) -> int:
+    """CLI entry point: exit 1 listing broken links, 0 when clean."""
+    args = argv if argv is not None else sys.argv[1:]
+    root = Path(args[0]).resolve() if args else Path(__file__).resolve().parents[1]
+    problems = broken_links(root)
+    if not problems:
+        print(f"check_links: all relative markdown links resolve under {root}")
+        return 0
+    for p in problems:
+        print(f"::error::check_links: broken relative link — {p}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

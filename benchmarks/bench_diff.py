@@ -36,6 +36,10 @@ GATED_METRICS = {
     # loaded runner can still stall one side — loosen to 30%; the hard
     # floor is the absolute >= 1.3x in check_floors.py.
     "overlap.tokens_per_s_ratio": 0.3,
+    # Same latency model; hard floors (>= 1.1x depth ratio, >= 0.5 hit
+    # ratio with kv_restored > 0) live in check_floors.py.
+    "overlap_depth.tokens_per_s_ratio": 0.3,
+    "spill.hit_ratio": 0.3,
 }
 
 

@@ -15,7 +15,10 @@ same-machine ratio with a physically-motivated minimum:
   baseline's submissions/s at 32 producers / 8 workers;
 * Part 6 — the speculative prefill/decode overlap must deliver >= 1.3x
   end-to-end tokens/s over the synchronous pipeline on mixed
-  prefill-heavy + decode-heavy traffic.
+  prefill-heavy + decode-heavy traffic;
+* Part 7 — the depth-4 speculation pipeline must deliver >= 1.1x
+  tokens/s over depth-1 on prefill-heavy traffic, and the host-KV-spill
+  scenario must actually restore (kv_restored > 0, hit ratio >= 0.5).
 """
 from __future__ import annotations
 
@@ -78,6 +81,26 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
         failures.append(
             "overlap run never committed a speculative prefill — the "
             "pipeline is not actually engaging")
+
+    od = d["overlap_depth"]
+    print("overlap_depth.tokens_per_s_ratio", od["tokens_per_s_ratio"])
+    if od["tokens_per_s_ratio"] < 1.1:
+        failures.append(
+            "depth-4 speculation must deliver >= 1.1x tokens/s over "
+            "depth-1 on prefill-heavy traffic, got "
+            f"{od['tokens_per_s_ratio']:.2f}")
+
+    sp = d["spill"]
+    print("spill.hit_ratio", sp["hit_ratio"],
+          "kv_spilled", sp["kv_spilled"], "kv_restored", sp["kv_restored"])
+    if sp["kv_restored"] < 1:
+        failures.append(
+            "spill scenario never restored a staged KV entry "
+            "(kv_restored == 0) — the host spill pool is not engaging")
+    if sp["hit_ratio"] < 0.5:
+        failures.append(
+            "spill scenario must restore at least half of what it spills, "
+            f"got hit_ratio {sp['hit_ratio']:.2f}")
 
     return failures
 

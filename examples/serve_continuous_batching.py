@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.lane_policy import LanePolicy
 from repro.core.strategies import GrowingUpperThreshold, OneOrAll, PureAsync
 from repro.models.registry import get_arch
-from repro.serving.engine import InferenceEngine, proportional_shares
+from repro.serving.engine import HostSpillPool, InferenceEngine, proportional_shares
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousBatchingScheduler
 
@@ -57,6 +57,47 @@ def overlap_kv_demo(arch, params, n_requests: int = 16, verbose: bool = True):
         for tmpl, trace in st.lane_admissions.items():
             sizes = [n for _, n in trace]
             print(f"  lane {tmpl:10s} admissions {sizes}")
+    return done, st
+
+
+def depth_spill_demo(arch, params, n_requests: int = 12, verbose: bool = True):
+    """Depth-k speculation + chunked prefill + host KV spill, end to end.
+
+    ``spec_depth=2`` keeps two speculative prefills in flight;
+    ``chunk_tokens=8`` folds one oversized prompt in chunk-per-tick
+    (bit-identical to the one-shot prefill); ``kv_spill`` stages evicted
+    straggler KV to a host LRU whose per-template budgets come from the
+    policy (``spill_budget_for``), so a re-admitted straggler RESUMES
+    instead of restarting.  Returns finished requests + scheduler stats
+    (smoke-tested by tests/test_serving.py).
+    """
+    rng = np.random.default_rng(11)
+    policy = LanePolicy(hot_threshold=10**9, spill_budget=4,
+                        spill_budgets={"bulk": 0})
+    pool = HostSpillPool(max_entries=8, budget_for=policy.spill_budget_for)
+    eng = InferenceEngine(arch, params, n_lanes=4, max_prompt_len=16,
+                          max_len=48, kv_spill=pool)
+    sched = ContinuousBatchingScheduler(eng, policy=policy, overlap=True,
+                                        spec_depth=2, chunk_tokens=8,
+                                        lane_timeout=6)
+    # one oversized prompt (chunked), the rest short chat traffic; long
+    # generations make a straggler eviction (and spill/restore) likely
+    sched.submit(Request(rid=300,
+                         prompt=rng.integers(1, 200, size=15).astype(np.int32),
+                         max_new_tokens=4, template="doc"))
+    for i in range(1, n_requests):
+        sched.submit(Request(rid=300 + i,
+                             prompt=rng.integers(1, 200, size=5).astype(np.int32),
+                             max_new_tokens=10, template="chat"))
+    sched.producer_done()
+    done = sched.run_until_drained()
+    st = sched.stats
+    if verbose:
+        print(f"  {len(done)} finished | spec: {st.spec_dispatched} "
+              f"dispatched / {st.spec_committed} committed / "
+              f"{st.spec_aborted} aborted | {st.spec_chunks} prefill "
+              f"chunks | kv spilled {st.kv_spilled} restored "
+              f"{st.kv_restored} (pool {pool.snapshot()})")
     return done, st
 
 
@@ -130,6 +171,12 @@ def main():
     # they are consumed" (see docs/ARCHITECTURE.md for the timeline).
     print("\noverlapped serving (speculative prefill + kv_shares):")
     overlap_kv_demo(arch, params)
+
+    # ------------------------------- depth-k + chunked prefill + KV spill
+    # Two staged bets in flight, oversized prompts folded chunk-per-tick,
+    # straggler KV staged to host memory and resumed on re-admission.
+    print("\ndepth-2 pipeline + chunked prefill + host KV spill:")
+    depth_spill_demo(arch, params)
 
 
 if __name__ == "__main__":

@@ -107,6 +107,12 @@ class ShardedCounter:
     def __eq__(self, other):
         return self.value == _as_number(other)
 
+    # Defining __eq__ sets __hash__ to None (unhashable); counters compare
+    # by value but must still be usable as dict keys / set members (e.g. a
+    # stats registry keyed by counter object), so restore identity hashing.
+    # Value-based hashing would be wrong: the value mutates under add().
+    __hash__ = object.__hash__
+
     def __ne__(self, other):
         return self.value != _as_number(other)
 

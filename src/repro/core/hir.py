@@ -866,6 +866,11 @@ class Interpreter:
     def __init__(self, service, outputs: Optional[Callable[[Any], None]] = None):
         self.service = service
         self.emitted: list[Any] = []  # ordered observable outputs (print/log)
+        # Optional output sink: called with each (effect, value) pair as it
+        # is emitted, alongside the `emitted` log — a streaming consumer
+        # (print, logger, socket) sees outputs in program order without
+        # waiting for run() to return.
+        self.outputs = outputs
 
     # -- public --------------------------------------------------------------
     def run(self, prog: Program, inputs: Mapping[str, Any]) -> dict[str, Any]:
@@ -891,6 +896,8 @@ class Interpreter:
             val = s.fn(*[env[a] for a in s.args])
             if s.effect is not None:
                 self.emitted.append((s.effect, val))
+                if self.outputs is not None:
+                    self.outputs((s.effect, val))
             if s.target is not None:
                 env[s.target] = val
         elif isinstance(s, Query):
@@ -924,20 +931,32 @@ class Interpreter:
         # Java tool gets this for free from per-iteration locals).
         penv = dict(env) if s.overlap else env
 
+        # A producer exception must not strand the consumer: the table is
+        # closed in a `finally` (the consumer's `for record in table:` would
+        # otherwise block forever on the overlap path) and the exception is
+        # captured and re-raised on the caller's thread after join — the
+        # §5.1 thread must neither swallow errors nor hang the program.
+        producer_error: list[BaseException] = []
+
         def produce():
-            for item in list(penv[s.producer.iter_var]):
-                penv[s.producer.item_var] = item
-                self._exec_block(s.producer.body, penv)
-                record = {v: penv[v] for v in s.split_vars if v in penv}
-                # the submit handle:
-                for st in s.producer.body:
-                    if isinstance(st, _Submit):
-                        if self._guard_ok(st, penv):
-                            record[st.target] = penv[st.target]
-                        else:
-                            record[st.target] = None
-                table.put(record)
-            table.close()
+            try:
+                for item in list(penv[s.producer.iter_var]):
+                    penv[s.producer.item_var] = item
+                    self._exec_block(s.producer.body, penv)
+                    record = {v: penv[v] for v in s.split_vars if v in penv}
+                    # the submit handle:
+                    for st in s.producer.body:
+                        if isinstance(st, _Submit):
+                            if self._guard_ok(st, penv):
+                                record[st.target] = penv[st.target]
+                            else:
+                                record[st.target] = None
+                    table.put(record)
+            except BaseException as e:  # noqa: BLE001 — re-raised after join
+                producer_error.append(e)
+                return
+            finally:
+                table.close()
             # The producer loop has submitted everything: strategies that
             # wait for the full request set (PureBatch) may now fire.
             done_hook = getattr(self.service, "producer_done", None)
@@ -951,6 +970,8 @@ class Interpreter:
             th.start()
         else:
             produce()
+            if producer_error:
+                raise producer_error[0]
 
         for record in table:
             env.update(record)
@@ -958,6 +979,8 @@ class Interpreter:
 
         if s.overlap:
             th.join()
+            if producer_error:
+                raise producer_error[0]
             # Merge back producer-only writes (vars the consumer neither
             # restores nor writes), preserving the original program's final
             # values: per body order, a consumer write supersedes the

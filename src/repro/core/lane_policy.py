@@ -83,6 +83,15 @@ class LanePolicy:
     lane_quota:
         Max outstanding requests per lane (any tenant), replacing the
         single global ``max_pending`` with per-template back-pressure.
+    spill_budget / spill_budgets:
+        Serving-side host-KV spill bounds: how many evicted-lane KV
+        entries the engine's :class:`~repro.serving.engine.HostSpillPool`
+        may hold per template (``spill_budgets`` names specific lanes,
+        ``spill_budget`` is the default for the rest; ``None`` leaves the
+        pool's own global bound as the only limit, ``0`` fences a lane
+        out of the pool entirely).  Consumed via :meth:`spill_budget_for`
+        — pass it as the pool's ``budget_for`` so spill residency follows
+        the same per-lane policy as scheduling and KV reservations.
     """
 
     def __init__(
@@ -97,6 +106,8 @@ class LanePolicy:
         default_tenant_quota: Optional[int] = None,
         lane_quota: Optional[int] = None,
         max_lanes: int = 4096,
+        spill_budget: Optional[int] = None,
+        spill_budgets: Optional[Mapping[str, int]] = None,
     ):
         if hot_threshold < 0:
             raise ValueError("hot_threshold must be >= 0")
@@ -107,6 +118,11 @@ class LanePolicy:
                 raise ValueError(f"lane_weights[{lane!r}] must be > 0, got {w}")
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
+        if spill_budget is not None and spill_budget < 0:
+            raise ValueError("spill_budget must be >= 0")
+        for lane, b in (spill_budgets or {}).items():
+            if b < 0:
+                raise ValueError(f"spill_budgets[{lane!r}] must be >= 0, got {b}")
         self.cold_factory = cold_factory
         self.hot_factory = hot_factory
         self.hot_threshold = hot_threshold
@@ -117,6 +133,8 @@ class LanePolicy:
         self.default_tenant_quota = default_tenant_quota
         self.lane_quota = lane_quota
         self.max_lanes = max_lanes
+        self.spill_budget = spill_budget
+        self.spill_budgets = dict(spill_budgets or {})
 
         self._lock = threading.Lock()
         self._strategies: dict[str, BatchingStrategy] = {}
@@ -235,13 +253,25 @@ class LanePolicy:
         feedback: the steady-state per-token cost of this lane's class)."""
         self.strategy_for(lane).observe_decode(duration)
 
-    def observe_abort(self, lane: str, duration: float) -> None:
+    def observe_abort(self, lane: str, duration: float, depth: int = 1) -> None:
         """Route one wasted speculative prefill (serving feedback: the
         scheduler dispatched ``duration`` seconds of prefill for this lane
-        and aborted it before commit) to the lane's own model, so a lane
-        whose speculations keep missing batches later instead of
-        speculating harder."""
-        self.strategy_for(lane).observe_abort(duration)
+        and aborted the bet ``depth`` tick boundaries after staging it) to
+        the lane's own model, so a lane whose speculations keep missing
+        batches later instead of speculating harder — deep-pipeline misses
+        are charged proportionally harder (see
+        :meth:`~repro.core.strategies.BatchingStrategy.observe_abort`)."""
+        self.strategy_for(lane).observe_abort(duration, depth=depth)
+
+    # --------------------------------------------------------------- spill
+    def spill_budget_for(self, lane: Optional[str]) -> Optional[int]:
+        """Max host-spilled KV entries for ``lane`` — the named override,
+        else the policy-wide ``spill_budget`` default (``None`` =
+        pool-bounded only).  Shaped to plug straight into
+        :class:`~repro.serving.engine.HostSpillPool` as ``budget_for``."""
+        if lane is not None and lane in self.spill_budgets:
+            return self.spill_budgets[lane]
+        return self.spill_budget
 
     # ----------------------------------------------------- weighted fairness
     def weight(self, lane: str) -> float:

@@ -38,9 +38,17 @@ __all__ = [
 
 
 class QueryService(Protocol):
-    def execute(self, query_name: str, params: tuple) -> Any: ...
+    """What the runtime requires of a backing service: a single-request
+    call and a set-oriented batch call (the paper's batched query)."""
 
-    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list: ...
+    def execute(self, query_name: str, params: tuple) -> Any:
+        """Execute ONE query — one service round trip."""
+        ...
+
+    def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
+        """Execute many parameter sets of one query as a single
+        set-oriented call, results in ``params_list`` order."""
+        ...
 
 
 class ServiceStats:

@@ -67,10 +67,11 @@ class BatchingStrategy:
     """
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """How many of ``n_pending`` requests to take now (0 = wait)."""
         raise NotImplementedError
 
-    def reset(self) -> None:  # per-run state (e.g. growing threshold)
-        pass
+    def reset(self) -> None:
+        """Clear per-run state (e.g. a growing threshold, learned fits)."""
 
     def observe(self, batch_size: int, duration: float) -> None:
         """Feedback from the runtime after each service call.  Static
@@ -81,14 +82,19 @@ class BatchingStrategy:
         strategy's lane had requests running.  Static strategies ignore it;
         adaptive ones track the lane's steady-state per-token cost."""
 
-    def observe_abort(self, duration: float) -> None:
+    def observe_abort(self, duration: float, depth: int = 1) -> None:
         """Serving-side feedback: a speculative prefill for this strategy's
         lane was dispatched (paying ``duration`` seconds of prefill) but
         aborted before commit — the lane it bet on was never freed, or the
         requests were retired/evicted first — so the work was wasted.
-        Static strategies ignore it; adaptive ones fold the wasted time
-        into the lane's fixed cost so a lane whose speculations keep
-        missing batches later instead of speculating harder."""
+        ``depth`` is the bet's pipeline depth: how many tick boundaries it
+        sat staged (1 for the single-bet pipeline), i.e. how long it held
+        promised lane capacity that admission could not use.  Each aborted
+        bet reports separately, attributed with ITS depth.  Static
+        strategies ignore the call; adaptive ones fold the depth-scaled
+        wasted time into the lane's fixed cost so a lane whose
+        speculations keep missing batches later instead of speculating
+        harder."""
 
 
 @dataclasses.dataclass
@@ -96,6 +102,7 @@ class PureAsync(BatchingStrategy):
     """Always take one pending request (plain asynchronous submission, §3)."""
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """One request whenever any is pending."""
         return 1 if n_pending >= 1 else 0
 
 
@@ -104,6 +111,7 @@ class PureBatch(BatchingStrategy):
     """The [1] baseline: a single set-oriented execution of all requests."""
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """Everything at once — but only after the producer finished."""
         if producer_done and n_pending >= 1:
             return n_pending
         return 0
@@ -114,6 +122,7 @@ class OneOrAll(BatchingStrategy):
     """Take one when one is pending, everything otherwise (§5.2.3)."""
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """One when one is pending; the whole backlog otherwise."""
         if n_pending == 0:
             return 0
         return 1 if n_pending == 1 else n_pending
@@ -131,6 +140,7 @@ class LowerThreshold(BatchingStrategy):
             raise ValueError("batching threshold bt must be >= 3 (paper §5.2.3)")
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """All pending iff the backlog exceeds ``bt``; one otherwise."""
         if n_pending == 0:
             return 0
         return n_pending if n_pending > self.bt else 1
@@ -152,15 +162,19 @@ class GrowingUpperThreshold(BatchingStrategy):
         self._upper = initial_upper
 
     def reset(self) -> None:
+        """Shrink the upper threshold back to its initial value."""
         with self._lock:
             self._upper = self.initial_upper
 
     @property
     def upper(self) -> int:
+        """The current (doubling) upper batch-size threshold."""
         with self._lock:
             return self._upper
 
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """Up to the current upper threshold; a full-threshold batch
+        doubles the threshold for the batches after it (Fig. 10 ramp)."""
         if n_pending == 0:
             return 0
         if self.bt is not None and n_pending <= self.bt:
@@ -230,6 +244,7 @@ class AdaptiveCost(BatchingStrategy):
             self._s: Optional[float] = None  # EWMA single latency
             self._d: Optional[float] = None  # EWMA decode-tick latency (serving)
             self._ab: Optional[float] = None  # EWMA wasted spec-prefill time
+            self._ab_depth: Optional[float] = None  # EWMA aborted-bet depth
             self._n_single = 0
             self._n_batch = 0
             self.aborts = 0  # speculative prefills wasted (observe_abort calls)
@@ -271,29 +286,50 @@ class AdaptiveCost(BatchingStrategy):
                 else (1 - self.alpha) * self._d + self.alpha * duration
             )
 
-    def observe_abort(self, duration: float) -> None:
+    def observe_abort(self, duration: float, depth: int = 1) -> None:
         """Charge one wasted speculative prefill to this lane's cost model.
 
-        The wasted ``duration`` enters an EWMA ``ab`` that is added to the
-        fixed cost in :attr:`threshold` (``(F + d + ab)/(s + d − c)``): a
-        lane whose speculations keep aborting effectively pays the wasted
-        prefill as extra per-batch setup, so it demands a deeper backlog
-        before batching/speculating again.  Successful batches decay the
-        penalty back toward zero (:meth:`observe`)."""
+        The wasted cost is the dispatch ``duration`` scaled by the bet's
+        pipeline ``depth``: a bet that sat staged for ``d`` tick
+        boundaries also held promised lane capacity for ``d`` ticks that
+        admission could not use, so a depth-4 miss is charged four times
+        the depth-1 miss of the same dispatch — deep pipelines that keep
+        missing throttle themselves faster than shallow ones.  The scaled
+        cost enters an EWMA ``ab`` that is added to the fixed cost in
+        :attr:`threshold` (``(F + d + ab)/(s + d − c)``): the lane
+        effectively pays its wasted speculation as extra per-batch setup,
+        demanding a deeper backlog before batching/speculating again.
+        Successful batches decay the penalty back toward zero
+        (:meth:`observe`).  ``abort_depth`` tracks the EWMA of reported
+        depths (introspection: how deep this lane's misses run)."""
+        cost = duration * max(1, depth)
         with self._lock:
             self.aborts += 1
             self._ab = (
-                duration if self._ab is None
-                else (1 - self.alpha) * self._ab + self.alpha * duration
+                cost if self._ab is None
+                else (1 - self.alpha) * self._ab + self.alpha * cost
+            )
+            self._ab_depth = (
+                float(depth) if self._ab_depth is None
+                else (1 - self.alpha) * self._ab_depth + self.alpha * depth
             )
 
     @property
     def abort_penalty(self) -> float:
-        """Current EWMA of wasted speculative-prefill time (0.0 when no
-        abort has been observed, or once successful batches have decayed
-        the penalty away)."""
+        """Current EWMA of wasted speculative-prefill time (depth-scaled;
+        0.0 when no abort has been observed, or once successful batches
+        have decayed the penalty away)."""
         with self._lock:
             return self._ab or 0.0
+
+    @property
+    def abort_depth(self) -> Optional[float]:
+        """EWMA of the pipeline depth at which this lane's speculative
+        bets abort (``None`` until any abort is observed) — introspection
+        for tuning ``spec_depth``: a lane whose misses run deep wastes
+        promised capacity for longer per miss."""
+        with self._lock:
+            return self._ab_depth
 
     @property
     def decode_latency(self) -> Optional[float]:
@@ -339,6 +375,8 @@ class AdaptiveCost(BatchingStrategy):
 
     # ------------------------------------------------------------- decision
     def decide(self, n_pending: int, producer_done: bool) -> int:
+        """Take everything when the backlog clears the learned threshold,
+        one otherwise; alternate single/take-all while still exploring."""
         if n_pending == 0:
             return 0
         cap = self.max_take or n_pending
@@ -360,6 +398,7 @@ class AdaptiveCost(BatchingStrategy):
 
 
 def from_name(name: str, **kw) -> BatchingStrategy:
+    """Construct a strategy by its CLI/benchmark name (see ``table``)."""
     table = {
         "async": PureAsync,
         "batch": PureBatch,

@@ -27,13 +27,35 @@ Two production mechanisms live at this layer:
   Dispatch mutates no engine or request state, so an uncommitted
   :class:`StagedPrefill` can simply be dropped (speculation abort).
 
+Two further mechanisms extend the split dispatch path:
+
+* **Chunked prefill** (``prefill_dispatch(..., chunk=n)``).  One huge
+  prompt dispatched as a single prefill stalls the next commit boundary
+  for its full duration.  With ``chunk``, the prompt is processed as
+  resumable chunks: the first ``chunk`` tokens go through the ordinary
+  prefill, every later chunk extends the staged KV through the decode
+  path (:meth:`InferenceEngine.prefill_resume`, one scan of
+  ``decode_step`` per chunk) — so the scheduler can interleave decode
+  ticks between chunks instead of stalling on one monolithic prefill.
+  The staged result is bit-for-bit the computation the one-shot path
+  performs (same causal attention, incrementally), just split in time.
+* **Host KV spill** (``KVPartition(spill=HostSpillPool(...))``).
+  Evicting a running request (straggler force-retire) normally drops its
+  KV, so re-admission pays a full re-prefill AND restarts generation.
+  With a spill pool the evicted lane's KV rows are staged to host memory
+  (:meth:`InferenceEngine.spill`); re-admission of the same request
+  restores the rows into a fresh lane (:meth:`InferenceEngine.try_restore`)
+  and decode continues where it stopped.
+
 Prefill batches are padded to power-of-two buckets (bounded jit cache).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from functools import partial
-from typing import Mapping, Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +63,7 @@ import numpy as np
 
 from repro.models.registry import Arch
 
-__all__ = ["InferenceEngine", "KVPartition", "StagedPrefill",
+__all__ = ["HostSpillPool", "InferenceEngine", "KVPartition", "StagedPrefill",
            "proportional_shares"]
 
 _SHARED = "__shared__"  # KVPartition pool key for unreserved lanes
@@ -83,6 +105,95 @@ def proportional_shares(weights: Mapping[str, float], n_lanes: int,
     return {t: s for t, s in shares.items() if s > 0}
 
 
+class HostSpillPool:
+    """Host-side LRU staging area for evicted decode-lane KV.
+
+    Keys are request identities (the scheduler uses ``Request.rid``); each
+    entry holds one lane's KV rows plus the decode cursor (length + last
+    token), copied to host memory at eviction time.  ``max_entries``
+    bounds the pool globally; ``budget_for`` (e.g.
+    :meth:`~repro.core.lane_policy.LanePolicy.spill_budget_for`) bounds
+    entries *per template*, so one template's straggler churn cannot evict
+    everyone else's staged KV — the host-memory analogue of the lane
+    reservations above.  Over-budget inserts evict the least-recently-used
+    entry (of that template for the per-template bound, globally for
+    ``max_entries``); a re-admitted request whose entry survived restores
+    instead of re-prefilling.
+
+    Thread-safe (a lock per op): the scheduler spills/restores from its
+    tick loop, but introspection (stats, ``in``) may come from anywhere.
+    """
+
+    def __init__(self, max_entries: int = 32,
+                 budget_for: Optional[Callable[[Optional[str]],
+                                               Optional[int]]] = None):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.budget_for = budget_for
+        self._lock = threading.Lock()
+        self._lru: "OrderedDict[object, tuple[Optional[str], dict]]" = OrderedDict()
+        self.spilled = 0    # entries accepted
+        self.restored = 0   # entries taken back by a re-admission
+        self.dropped = 0    # entries evicted (LRU / budget) before restore
+
+    def accepts(self, template: Optional[str]) -> bool:
+        """Whether a new entry for ``template`` would be stored at all —
+        ``False`` only for a zero-budget (fenced) template.  Callers
+        check this BEFORE paying the device→host KV copy; a positive
+        budget always admits the new entry (evicting older ones)."""
+        budget = self.budget_for(template) if self.budget_for else None
+        return budget is None or budget > 0
+
+    def put(self, key, template: Optional[str], entry: dict) -> bool:
+        """Stage one evicted lane's KV under ``key`` (replacing any stale
+        entry for the same key), evicting LRU entries that break the
+        global or per-template budget.  Returns whether the entry was
+        stored (``False`` for a zero-budget fenced template)."""
+        with self._lock:
+            if key in self._lru:
+                del self._lru[key]  # stale duplicate: the new KV wins
+                self.dropped += 1
+            budget = self.budget_for(template) if self.budget_for else None
+            if budget is not None and budget <= 0:
+                self.dropped += 1  # template fenced out of the pool
+                return False
+            if budget is not None:
+                mine = [k for k, (t, _) in self._lru.items() if t == template]
+                while len(mine) >= budget:
+                    del self._lru[mine.pop(0)]  # oldest of THIS template
+                    self.dropped += 1
+            while len(self._lru) >= self.max_entries:
+                self._lru.popitem(last=False)
+                self.dropped += 1
+            self._lru[key] = (template, entry)
+            self.spilled += 1
+            return True
+
+    def take(self, key) -> Optional[dict]:
+        """Remove and return ``key``'s staged entry (``None`` on miss)."""
+        with self._lock:
+            hit = self._lru.pop(key, None)
+            if hit is None:
+                return None
+            self.restored += 1
+            return hit[1]
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._lru
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+    def snapshot(self) -> dict:
+        """Counters + occupancy (introspection/benchmark reporting)."""
+        with self._lock:
+            return {"entries": len(self._lru), "spilled": self.spilled,
+                    "restored": self.restored, "dropped": self.dropped}
+
+
 class KVPartition:
     """Per-template lane reservations over a fixed set of decode lanes.
 
@@ -99,7 +210,9 @@ class KVPartition:
     :meth:`InferenceEngine.prefill_dispatch`).
     """
 
-    def __init__(self, n_lanes: int, shares: Optional[Mapping[str, int]] = None):
+    def __init__(self, n_lanes: int, shares: Optional[Mapping[str, int]] = None,
+                 spill: Optional[HostSpillPool] = None):
+        self.spill = spill  # host-side LRU for evicted lanes' KV (optional)
         shares = dict(shares or {})
         for t, k in shares.items():
             if t == _SHARED:
@@ -184,6 +297,19 @@ class StagedPrefill:
     cache: object   # KV pytree, batch axis sized to the padded bucket
     plens: np.ndarray
     shape: tuple[int, int]  # the padded (batch, prompt) bucket dispatched
+    # Chunked dispatch state (``prefill_dispatch(..., chunk=)``): token
+    # chunks not yet folded into the staged cache, and the device-side
+    # lengths cursor the next :meth:`InferenceEngine.prefill_resume` call
+    # extends from.  ``first`` stays ``None`` until the final chunk.
+    pending: list = dataclasses.field(default_factory=list)
+    lengths_dev: object = None
+
+    @property
+    def complete(self) -> bool:
+        """Whether every chunk has been processed (always true for the
+        one-shot dispatch path) — only a complete staged prefill may be
+        committed."""
+        return not self.pending
 
 
 @dataclasses.dataclass
@@ -192,7 +318,9 @@ class InferenceEngine:
 
     ``kv_shares`` reserves decode lanes per template
     (:class:`KVPartition`); the default ``None`` keeps every lane in the
-    shared pool (pre-partitioning behaviour).
+    shared pool (pre-partitioning behaviour).  ``kv_spill`` attaches a
+    :class:`HostSpillPool` so evicted lanes stage their KV to host memory
+    (:meth:`spill` / :meth:`try_restore`) instead of dropping it.
     """
 
     arch: Arch
@@ -201,13 +329,15 @@ class InferenceEngine:
     max_prompt_len: int = 64
     max_len: int = 128
     kv_shares: Optional[Mapping[str, int]] = None
+    kv_spill: Optional[HostSpillPool] = None
 
     def __post_init__(self):
         self.cache = self.arch.init_cache(self.n_lanes, self.max_len)
         self.lengths = jnp.zeros((self.n_lanes,), jnp.int32)
         self.active = np.zeros((self.n_lanes,), bool)
         self.last_token = jnp.zeros((self.n_lanes,), jnp.int32)
-        self.partition = KVPartition(self.n_lanes, self.kv_shares)
+        self.partition = KVPartition(self.n_lanes, self.kv_shares,
+                                     spill=self.kv_spill)
         self.decode_steps = 0
         self.prefill_calls = 0
         # template -> pinned (batch, prompt) prefill bucket: each template
@@ -239,6 +369,23 @@ class InferenceEngine:
 
         self._prefill = _prefill
 
+        @partial(jax.jit, static_argnums=())
+        def _extend(params, cache, toks, lengths):
+            # toks: (B, C) — C further prompt tokens per row, fed through
+            # the decode path one position at a time (a lax.scan, ONE
+            # compiled dispatch per chunk shape).  Exactly the computation
+            # prefill performs for those positions, split in time.
+            def step(carry, tok):
+                c, ln = carry
+                logits, c = self.arch.decode_step(params, tok, c, ln)
+                return (c, ln + 1), logits
+
+            (cache, lengths), logits = jax.lax.scan(
+                step, (cache, lengths), jnp.swapaxes(toks, 0, 1))
+            return logits[-1], cache, lengths
+
+        self._extend = _extend
+
     # ------------------------------------------------------------- admission
     def admit(self, requests: Sequence, template: Optional[str] = None
               ) -> tuple[int, int]:
@@ -265,7 +412,8 @@ class InferenceEngine:
         return self.commit_prefill(self.prefill_dispatch(requests, template))
 
     def prefill_dispatch(self, requests: Sequence,
-                         template: Optional[str] = None) -> StagedPrefill:
+                         template: Optional[str] = None,
+                         chunk: Optional[int] = None) -> StagedPrefill:
         """Dispatch (but do not commit) one padded prefill batch.
 
         Builds the padded token batch and issues the jitted prefill — an
@@ -276,7 +424,24 @@ class InferenceEngine:
         a GIL-atomic dict store), so this is safe to call from the
         scheduler's speculative-dispatch thread while :meth:`decode_tick`
         runs on the main thread, and an uncommitted result can be dropped.
+
+        ``chunk`` enables resumable chunked prefill for ONE oversized
+        prompt (the scheduler dispatches such prompts alone): the first
+        ``chunk`` tokens prefill now, the rest stay ``pending`` on the
+        returned staged object for :meth:`prefill_resume` to fold in one
+        chunk at a time — each resume is one compiled dispatch the caller
+        can overlap with a decode tick.  Prompts that fit in one chunk
+        fall through to the ordinary path.  Chunk shapes compile per
+        distinct (final-remainder) width; steady traffic converges on two
+        compiled shapes (``chunk`` and its remainder bucket).
         """
+        if chunk is not None and chunk >= 1:
+            if len(requests) == 1:
+                r = requests[0]
+                prompt = np.asarray(r.prompt[-(self.max_len - 1):], np.int32)
+                if len(prompt) > chunk:
+                    return self._chunked_dispatch(r, prompt, template, chunk)
+            # A batch, or a prompt that fits one chunk: one-shot below.
         bsz = _bucket(len(requests))
         # Bucket the prompt axis to the batch's longest (truncated) prompt:
         # lane-homogeneous admission (scheduler groups by template) means
@@ -300,6 +465,45 @@ class InferenceEngine:
         return StagedPrefill(template, list(requests), first, cache,
                              plens, (bsz, plen))
 
+    def _chunked_dispatch(self, r, prompt: np.ndarray,
+                          template: Optional[str], chunk: int) -> StagedPrefill:
+        """Chunked-path dispatch: prefill the first chunk, stage the rest.
+
+        The staged cache is batch-1 and already padded to ``max_len``;
+        later chunks extend it in place through the decode path (positions
+        ``chunk..S-1``), so the committed KV matches what a one-shot
+        prefill of the full prompt would have produced.  The per-template
+        shape pin is NOT consulted: chunk shapes are their own (bounded)
+        compile family, and a huge prompt must not widen the template's
+        pinned batch bucket."""
+        S = len(prompt)
+        toks = jnp.asarray(prompt[None, :chunk])
+        _, cache = self._prefill(self.params, toks,
+                                 jnp.asarray([chunk], jnp.int32), self.max_len)
+        pending = [prompt[None, i: i + chunk] for i in range(chunk, S, chunk)]
+        return StagedPrefill(
+            template, [r], None, cache, np.asarray([S], np.int32), (1, S),
+            pending=pending, lengths_dev=jnp.asarray([chunk], jnp.int32))
+
+    def prefill_resume(self, staged: StagedPrefill) -> bool:
+        """Fold the next pending chunk into a chunked staged prefill.
+
+        One compiled dispatch (a ``lax.scan`` of ``decode_step`` over the
+        chunk's positions) extends the staged KV and advances the length
+        cursor; the final chunk also yields the first generated token,
+        making the staged prefill :attr:`~StagedPrefill.complete` and
+        commit-eligible.  Returns completeness.  Like ``prefill_dispatch``
+        this mutates only the staged object, never engine or request
+        state — safe on the scheduler's speculation thread."""
+        if staged.complete:
+            return True
+        toks = staged.pending.pop(0)
+        logits, staged.cache, staged.lengths_dev = self._extend(
+            self.params, staged.cache, jnp.asarray(toks), staged.lengths_dev)
+        if not staged.pending:
+            staged.first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return staged.complete
+
     def commit_prefill(self, staged: StagedPrefill,
                        n: Optional[int] = None) -> tuple[int, int]:
         """Materialize a staged prefill into decode lanes.
@@ -313,6 +517,8 @@ class InferenceEngine:
         padded ``(batch, prompt)`` bucket actually dispatched (cost-model
         feedback, same as :meth:`admit`).
         """
+        assert staged.complete, \
+            "commit_prefill() of a chunked staged prefill with pending chunks"
         reqs = staged.requests if n is None else staged.requests[:n]
         assert len(reqs) <= self.n_free_for(staged.template), \
             "commit_prefill() beyond this template's free lanes"
@@ -357,6 +563,70 @@ class InferenceEngine:
         reservation, a shared lane back to the shared pool."""
         self.active[lane] = False
         self.partition.release(lane)
+
+    # ---------------------------------------------------------------- spill
+    def spill(self, lane: int, key, template: Optional[str] = None) -> bool:
+        """Retire ``lane``, staging its KV to the host spill pool.
+
+        Copies the lane's cache rows plus the decode cursor (length, last
+        token) to host memory under ``key`` (the request identity) before
+        releasing the lane, so a later re-admission of the same request
+        can :meth:`try_restore` instead of re-prefilling.  Returns whether
+        the KV was actually staged — ``False`` (plain retire) when no
+        pool is configured or the template is fenced out of it
+        (zero spill budget, checked BEFORE paying the device→host copy);
+        an LRU/budget eviction later is the pool's business."""
+        pool = self.partition.spill
+        if pool is None or not pool.accepts(template):
+            self.retire(lane)
+            return False
+        entry = {
+            "rows": jax.tree_util.tree_map(
+                lambda a: np.asarray(a[:, lane]), self.cache),
+            "length": int(np.asarray(self.lengths)[lane]),
+            "last": int(np.asarray(self.last_token)[lane]),
+        }
+        staged = pool.put(key, template, entry)
+        self.retire(lane)
+        return staged
+
+    def has_spill(self, key) -> bool:
+        """Whether ``key`` currently has staged KV in the spill pool (the
+        scheduler's cue to restore at admission instead of re-prefilling
+        — and to keep the request out of speculative prefill batches)."""
+        pool = self.partition.spill
+        return pool is not None and key in pool
+
+    def try_restore(self, key, template: Optional[str] = None) -> Optional[int]:
+        """Restore ``key``'s spilled KV into a fresh lane, if possible.
+
+        On a pool hit with a free lane admissible for ``template``, the
+        staged rows are spliced back, the decode cursor resumes where the
+        eviction stopped, and the lane index is returned — generation
+        continues with no re-prefill and no token restart.  Returns
+        ``None`` on a pool miss (entry evicted or never spilled) or when
+        the template has no admissible free lane (the entry stays staged
+        for a later attempt)."""
+        pool = self.partition.spill
+        if pool is None or key not in pool or self.n_free_for(template) <= 0:
+            return None
+        entry = pool.take(key)
+        if entry is None:  # raced away (defensive: tick loop is 1-threaded)
+            return None
+        lane = self.partition.alloc(template)
+        rows = entry["rows"]
+        self.cache = jax.tree_util.tree_map(
+            lambda dst, src: dst.at[:, lane].set(
+                jnp.asarray(src).astype(dst.dtype)),
+            self.cache, rows)
+        ln = np.array(self.lengths)
+        lt = np.array(self.last_token)
+        ln[lane] = entry["length"]
+        lt[lane] = entry["last"]
+        self.lengths = jnp.asarray(ln)
+        self.last_token = jnp.asarray(lt)
+        self.active[lane] = True
+        return lane
 
     @property
     def n_free(self) -> int:

@@ -68,6 +68,36 @@ reservation — the uncommitted requests go back to the head of their queue
 and the wasted prefill time feeds the lane's own cost model via
 ``observe_abort``, so chronically-missing lanes speculate less.
 
+**Depth-k speculation** (``spec_depth=k``, default 1) generalizes the
+single staged bet to a bounded pipeline: up to ``k`` dispatched-but-
+uncommitted prefills ride in flight at once, each sized against the free
+lanes MINUS the capacity already promised to older staged bets (older
+bets claim their lanes first; a younger bet may only count lanes the
+older ones cannot take).  Bets settle oldest-first at every tick
+boundary; when an older bet misses, younger bets survive only while
+their template's own reserved lanes still cover them — an uncovered
+younger bet aborts immediately (its lane's ``observe_abort`` is charged
+with the bet's pipeline depth) rather than wasting further boundaries.
+Depth pays off when prefill capacity is separate from decode (the
+disaggregated shape): ``k`` prefills progress concurrently under one
+decode stream, submitting well AHEAD of the consumption point exactly as
+the paper's §5.1 thread does for queries.
+
+**Chunked prefill** (``chunk_tokens=n``) keeps one huge prompt from
+stalling the pipeline: a prompt wider than ``n`` is dispatched alone and
+processed as resumable chunks (:meth:`InferenceEngine.prefill_resume`) —
+one chunk per tick boundary rides the speculation thread under that
+tick's decode, and the bet commits when the last chunk lands.  Younger
+bets queue behind it (commits stay oldest-first) but decode never stops.
+
+**Host KV spill** (engine ``kv_spill=HostSpillPool(...)``): a straggler
+force-retire stages the lane's KV to host memory instead of dropping it
+(``stats.kv_spilled``); when the request is re-admitted, admission
+restores the KV into a fresh lane and generation RESUMES
+(``stats.kv_restored``) — no re-prefill, no token restart.  Requests
+with staged KV are kept out of speculative prefill batches (the restore
+path is strictly cheaper).
+
 The scheduler records the per-tick admission trace (= Fig. 10 batch sizes,
 also split per lane) and per-request ttft/latency (= Fig. 11
 time-to-k-th-response).
@@ -107,25 +137,39 @@ class SchedulerStats:
     spec_dispatched: int = 0  # requests whose prefill was dispatched early
     spec_committed: int = 0   # of those, committed into KV lanes
     spec_aborted: int = 0     # of those, re-queued (the bet missed)
+    spec_chunks: int = 0      # chunked-prefill resume steps processed
+    # host KV spill (engine kv_spill=HostSpillPool)
+    kv_spilled: int = 0       # evicted lanes whose KV was staged to host
+    kv_restored: int = 0      # re-admissions served by a restore (no prefill)
 
 
 class _SpecTask:
-    """One in-flight speculative prefill.
+    """One in-flight speculative prefill (one bet of the depth-k pipeline).
 
     The dispatch runs on its own daemon thread so the host-side padding +
     device dispatch overlaps the main thread's decode tick; the main
-    thread joins at the next tick boundary (commit).  One task is in
-    flight at a time (the pipeline is two-stage), so a plain thread per
-    dispatch costs nothing worth pooling."""
+    thread settles bets at tick boundaries, oldest-first.  At most
+    ``spec_depth`` tasks are in flight, so a plain thread per dispatch
+    costs nothing worth pooling.  A chunked task (``chunk`` set and an
+    oversized prompt) is re-armed by :meth:`advance` once per boundary
+    until every chunk has been folded in; ``duration`` accumulates across
+    chunks so the cost model sees the bet's full dispatch time."""
 
-    __slots__ = ("template", "batch", "staged", "duration", "error", "_thread")
+    __slots__ = ("template", "batch", "chunk", "staged", "duration", "error",
+                 "age", "_thread")
 
-    def __init__(self, engine, template: str, batch: list):
+    def __init__(self, engine, template: str, batch: list,
+                 chunk: Optional[int] = None):
         self.template = template
         self.batch = batch
+        self.chunk = chunk
         self.staged = None
         self.duration = 0.0
         self.error: Optional[BaseException] = None
+        self.age = 0  # tick boundaries this bet has been in flight
+        self._spawn(engine)
+
+    def _spawn(self, engine) -> None:
         self._thread = threading.Thread(
             target=self._run, args=(engine,), daemon=True,
             name="cbs-spec-prefill",
@@ -135,11 +179,38 @@ class _SpecTask:
     def _run(self, engine) -> None:
         t0 = time.perf_counter()
         try:
-            self.staged = engine.prefill_dispatch(self.batch,
-                                                  template=self.template)
+            if self.staged is None:
+                if self.chunk is None:
+                    self.staged = engine.prefill_dispatch(
+                        self.batch, template=self.template)
+                else:
+                    self.staged = engine.prefill_dispatch(
+                        self.batch, template=self.template, chunk=self.chunk)
+            else:
+                engine.prefill_resume(self.staged)
         except BaseException as e:  # noqa: BLE001 — surfaced at commit
             self.error = e
-        self.duration = time.perf_counter() - t0
+        self.duration += time.perf_counter() - t0
+
+    @property
+    def finished(self) -> bool:
+        """Whether the current dispatch/resume thread has returned (a
+        non-blocking check — younger bets are only committed when they
+        have already finished, never waited on)."""
+        return not self._thread.is_alive()
+
+    @property
+    def complete(self) -> bool:
+        """Whether the staged prefill is commit-eligible: dispatched, and
+        (for a chunked bet) every chunk folded in.  Engines without chunk
+        support stage complete results in one dispatch."""
+        return (self.staged is not None
+                and getattr(self.staged, "complete", True))
+
+    def advance(self, engine) -> None:
+        """Re-arm a chunked task: fold the next chunk on a fresh spec
+        thread (it overlaps the decode tick now starting)."""
+        self._spawn(engine)
 
     def join(self) -> None:
         """Block until the dispatch thread has finished (commit boundary)."""
@@ -161,9 +232,20 @@ class ContinuousBatchingScheduler:
         :class:`LanePolicy` (mutually exclusive).
     lane_timeout:
         Decode ticks before a running request is force-retired and
-        re-queued (straggler mitigation); ``None`` disables.
+        re-queued (straggler mitigation); ``None`` disables.  With an
+        engine spill pool the retired lane's KV is staged to host memory
+        and the re-queued request resumes on re-admission.
     overlap:
         Enable the speculative prefill/decode pipeline (module docstring).
+    spec_depth:
+        Maximum staged speculative prefills in flight (default 1 — the
+        single-bet pipeline).  Values above 1 need ``overlap=True`` and
+        pay off when prefill hardware is separate from decode.
+    chunk_tokens:
+        Split any prompt wider than this into resumable prefill chunks
+        (one per tick boundary) so a single huge prompt overlaps decode
+        instead of stalling the commit boundary.  Needs ``overlap=True``
+        and an engine with ``prefill_resume``; ``None`` disables.
     """
 
     def __init__(
@@ -173,6 +255,8 @@ class ContinuousBatchingScheduler:
         lane_timeout: Optional[int] = None,
         policy: Optional[LanePolicy] = None,
         overlap: bool = False,
+        spec_depth: int = 1,
+        chunk_tokens: Optional[int] = None,
     ):
         if policy is not None and strategy is not None:
             raise ValueError(
@@ -188,6 +272,22 @@ class ContinuousBatchingScheduler:
                 "overlap=True needs an engine with the split dispatch path "
                 "(prefill_dispatch/commit_prefill/n_free_for)"
             )
+        if spec_depth < 1:
+            raise ValueError("spec_depth must be >= 1")
+        if spec_depth > 1 and not overlap:
+            raise ValueError("spec_depth > 1 needs overlap=True")
+        if chunk_tokens is not None:
+            if chunk_tokens < 1:
+                raise ValueError("chunk_tokens must be >= 1")
+            if not overlap:
+                raise ValueError("chunk_tokens needs overlap=True")
+            if not hasattr(engine, "prefill_resume"):
+                raise ValueError(
+                    "chunk_tokens needs an engine with prefill_resume "
+                    "(resumable chunked prefill)"
+                )
+        self.spec_depth = spec_depth
+        self.chunk_tokens = chunk_tokens
         # Engines predating KV partitioning expose only the global n_free;
         # treat every template as drawing from one shared pool there.
         self._free_for = getattr(engine, "n_free_for",
@@ -205,7 +305,9 @@ class ContinuousBatchingScheduler:
         self._ready = ReadyLanes()
         self._warm_shapes: set = set()  # prefill buckets already compiled
         self._producer_done = False
-        self._staged: Optional[_SpecTask] = None  # in-flight spec prefill
+        # The speculation pipeline: up to spec_depth in-flight bets,
+        # oldest first (index 0 settles at the next tick boundary).
+        self._staged: "deque[_SpecTask]" = deque()
 
     # ------------------------------------------------------------------ api
     def submit(self, request: Request) -> None:
@@ -234,18 +336,19 @@ class ContinuousBatchingScheduler:
         done: list[Request] = []
         for _ in range(max_ticks):
             if (not self.n_queued and not self.running
-                    and self._staged is None):
+                    and not self._staged):
                 if self._producer_done:
                     break
             done.extend(self.tick())
         else:
-            if self.n_queued or self.running or self._staged is not None:
+            if self.n_queued or self.running or self._staged:
                 stuck_queued = {t: len(q) for t, q in self.queues.items() if q}
                 stuck_running = {
                     lane: r.template for lane, r in sorted(self.running.items())
                 }
-                staged = (f", staged spec prefill on "
-                          f"{self._staged.template!r}" if self._staged else "")
+                staged = (", staged spec prefills on "
+                          f"{[t.template for t in self._staged]!r}"
+                          if self._staged else "")
                 raise RuntimeError(
                     f"run_until_drained exhausted max_ticks={max_ticks} with "
                     f"work still pending: queued per template {stuck_queued}, "
@@ -305,59 +408,175 @@ class ContinuousBatchingScheduler:
         self.stats.lane_admissions.setdefault(tmpl, []).append(
             (self.stats.decode_ticks, len(batch)))
 
-    def _commit_speculative(self) -> None:
-        """Tick-boundary commit of the previous tick's speculative prefill.
+    def _reservation_covers(self, task: _SpecTask) -> bool:
+        """Whether ``task``'s template's OWN reserved lanes can hold its
+        whole batch right now — the survival test for a younger bet after
+        an older bet missed: reserved lanes cannot be taken by any other
+        template, so a covered bet is still a sound speculation.  Engines
+        without per-template pools (no ``n_free_for``) report zero
+        reserved lanes, so their younger bets abort on a miss —
+        conservative, and settled the same way a depth-1 miss is."""
+        reserved_free = self._free_for(task.template) - self._free_for(None)
+        return len(task.batch) <= max(0, reserved_free)
 
-        Joins the dispatch thread, commits as many staged requests as the
-        template's pools can actually hold NOW, and aborts the rest: they
-        return to the head of their queue and the wasted prefill time is
-        charged to the lane's cost model (``observe_abort``)."""
-        task = self._staged
-        if task is None:
+    def _promised_against(self, tmpl: str) -> int:
+        """Free-lane capacity already promised to in-flight staged bets
+        that a new bet for ``tmpl`` must not count again.
+
+        An older bet on the SAME template claims its whole batch from the
+        pools ``tmpl`` draws on; an older bet on ANOTHER template claims
+        only its spill-over into the shared pool (whatever its own
+        reserved lanes cannot hold) — its reserved draw can never collide
+        with ``tmpl``.  Engines without per-template pools see every claim
+        as shared."""
+        shared_free = self._free_for(None)
+        n = 0
+        for task in self._staged:
+            if task.template == tmpl:
+                n += len(task.batch)
+            else:
+                reserved_free = max(
+                    0, self._free_for(task.template) - shared_free)
+                n += max(0, len(task.batch) - reserved_free)
+        return n
+
+    def _abort_task(self, task: _SpecTask, requeues: list,
+                    n_committed: int = 0) -> None:
+        """Charge a missed bet and record its re-queue.
+
+        The uncommitted requests are appended to ``requeues`` rather than
+        re-queued immediately: the commit boundary settles bets
+        oldest-first, and naive immediate ``appendleft`` would stack a
+        younger same-template batch ON TOP of the older one it arrived
+        behind — the caller flushes ``requeues`` youngest-first so the
+        oldest aborted batch ends up at the very head.  A fully-wasted
+        bet feeds its lane's ``observe_abort`` with the bet's accumulated
+        dispatch time AND its pipeline depth (``age``): a bet that sat
+        staged for d boundaries also held promised capacity for d ticks,
+        so deep misses raise the lane's learned threshold faster.  A
+        partial commit still used the dispatch — no penalty."""
+        aborted = task.batch[n_committed:]
+        if not aborted:
             return
-        self._staged = None
-        task.join()
-        tmpl = task.template
-        if task.error is not None:
-            self._requeue_front(tmpl, task.batch)
-            raise task.error
-        strat = self._strategy_for(tmpl)
-        fit = min(len(task.batch), self._free_for(tmpl))
-        committed = task.batch[:fit]
-        if committed:
-            t0 = time.perf_counter()
-            shape = self.engine.commit_prefill(task.staged, n=fit)
-            commit_dt = time.perf_counter() - t0
-            self._land_batch(tmpl, strat, committed, shape,
-                             task.duration + commit_dt)
-            self.stats.spec_committed += fit
-        aborted = task.batch[fit:]
-        if aborted:
-            self._requeue_front(tmpl, aborted)
-            self.stats.spec_aborted += len(aborted)
-            if not committed:
-                # The whole dispatch was wasted: charge the lane so it
-                # demands a deeper backlog before speculating again.  A
-                # partial commit still used the batch — no penalty.
-                if self.policy is not None:
-                    self.policy.observe_abort(tmpl, task.duration)
-                else:
-                    strat.observe_abort(task.duration)
+        requeues.append((task.template, aborted))
+        self.stats.spec_aborted += len(aborted)
+        if n_committed == 0:
+            depth = max(1, task.age)
+            if self.policy is not None:
+                self.policy.observe_abort(task.template, task.duration,
+                                          depth=depth)
+            else:
+                self._strategy_for(task.template).observe_abort(
+                    task.duration, depth=depth)
+
+    def _flush_requeues(self, requeues: list) -> None:
+        """Apply a boundary's aborted-bet re-queues YOUNGEST-first, so the
+        oldest bet's requests (which arrived first) end at the queue
+        head — FIFO arrival order survives a multi-bet abort cascade."""
+        for tmpl, batch in reversed(requeues):
+            self._requeue_front(tmpl, batch)
+
+    def _commit_speculative(self) -> None:
+        """Tick-boundary settlement of the speculation pipeline.
+
+        Bets settle OLDEST-FIRST.  The oldest bet is joined (its dispatch
+        had a full decode tick to finish) and committed once its whole
+        batch fits; a bet whose capacity has not materialized yet may wait
+        up to ``spec_depth`` boundaries (the horizon it was sized
+        against), after which the shortfall is a MISS: the fitting prefix
+        commits, the rest aborts to the head of its queue.  Younger bets
+        may commit at the same boundary — but only after every older bet
+        fully committed, and only if their own dispatch already finished
+        (they are never waited on).  After a miss, a younger bet survives
+        only while its template's reserved lanes still cover it
+        (:meth:`_reservation_covers`); an uncovered bet aborts NOW,
+        feeding ``observe_abort`` with its pipeline depth, instead of
+        wasting further boundaries.  An incomplete chunked bet is advanced
+        one chunk (overlapping the coming decode tick) and keeps its
+        position; younger bets stay queued behind it."""
+        if not self._staged:
+            return
+        tasks = list(self._staged)
+        self._staged.clear()
+        keep: list[_SpecTask] = []
+        requeues: list = []  # (template, batch) per aborted bet, oldest first
+        blocked = False  # an older bet is still in flight / mid-chunk
+        missed = False   # an older bet aborted requests at this boundary
+        for i, task in enumerate(tasks):
+            task.age += 1
+            if i == 0:
+                task.join()
+            if missed and not self._reservation_covers(task):
+                self._abort_task(task, requeues)
+                continue
+            if blocked or (i > 0 and not task.finished):
+                keep.append(task)
+                blocked = True
+                continue
+            if task.error is not None:
+                requeues.append((task.template, task.batch))
+                self._flush_requeues(requeues)
+                keep.extend(tasks[i + 1:])
+                self._staged.extend(keep)
+                raise task.error
+            if not task.complete:  # chunked: fold the next chunk this tick
+                task.advance(self.engine)
+                self.stats.spec_chunks += 1
+                keep.append(task)
+                blocked = True
+                continue
+            tmpl = task.template
+            fit = min(len(task.batch), self._free_for(tmpl))
+            if fit < len(task.batch) and task.age < self.spec_depth:
+                # The bet was sized against capacity materializing up to
+                # spec_depth ticks out; within that horizon a shortfall is
+                # "not yet", not a miss — wait for a later boundary rather
+                # than splitting the batch or aborting.  (depth 1: age is
+                # already 1 at the first boundary, so bets settle
+                # immediately — the single-bet pipeline's semantics.)
+                keep.append(task)
+                blocked = True
+                continue
+            strat = self._strategy_for(tmpl)
+            committed = task.batch[:fit]
+            if committed:
+                t0 = time.perf_counter()
+                shape = self.engine.commit_prefill(task.staged, n=fit)
+                commit_dt = time.perf_counter() - t0
+                self._land_batch(tmpl, strat, committed, shape,
+                                 task.duration + commit_dt)
+                self.stats.spec_committed += fit
+            if fit < len(task.batch):
+                self._abort_task(task, requeues, n_committed=fit)
+                # Younger bets stop committing at this boundary: the
+                # aborted requests are going back to their queue head, and
+                # a younger same-template commit would overtake them.
+                missed = True
+                blocked = True
+        self._flush_requeues(requeues)
+        self._staged.extend(keep)
 
     def _dispatch_speculative(self, select) -> None:
-        """Pick the next speculable ready lane (peek — a lane we decline
-        keeps its queue position) and dispatch its prefill on the spec
-        thread, sized against free lanes plus the lanes this tick's decode
-        is about to retire — the speculation ``_commit_speculative``
-        settles at the next boundary.
+        """Fill the speculation pipeline: pick speculable ready lanes
+        (peek — a lane we decline keeps its queue position) and dispatch
+        their prefills on spec threads until ``spec_depth`` bets are in
+        flight, each sized against free lanes plus the lanes this tick's
+        decode is about to retire MINUS the capacity already promised to
+        older staged bets — the bets ``_commit_speculative`` settles
+        oldest-first at later boundaries.
 
-        The scan consults each ready lane at most once, in the pick order
-        admission would use (weighted-fair under a policy, FIFO
-        otherwise), by filtering already-declined lanes out of the peek's
-        candidate set — so one permanently-starved head lane cannot blind
-        the speculator to dispatchable lanes behind it, in EITHER pick
-        discipline, and declined lanes are never reordered."""
+        The scan consults each ready lane at most once per tick, in the
+        pick order admission would use (weighted-fair under a policy,
+        FIFO otherwise), by filtering already-declined lanes out of the
+        peek's candidate set — so one permanently-starved head lane
+        cannot blind the speculator to dispatchable lanes behind it, in
+        EITHER pick discipline, and declined lanes are never reordered.
+        A lane whose head prompt exceeds ``chunk_tokens`` dispatches that
+        prompt ALONE as a chunked bet; a lane whose next requests have
+        spilled KV staged is declined (the admission-time restore is
+        strictly cheaper than a re-prefill)."""
         ben = getattr(self.engine, "lane_benefits", None)
+        has_spill = getattr(self.engine, "has_spill", None)
         consulted: set = set()
 
         def next_candidate(keys: list):
@@ -366,7 +585,7 @@ class ContinuousBatchingScheduler:
                 return None  # peek passes this through: scan exhausted
             return cand[0] if select is None else select(cand)
 
-        while True:
+        while len(self._staged) < self.spec_depth:
             tmpl = self._ready.peek(select=next_candidate)
             if tmpl is None or tmpl in consulted:
                 # None: nothing ready / every ready lane declined.  A
@@ -381,30 +600,57 @@ class ContinuousBatchingScheduler:
                 self._ready.pop(select=lambda keys, t=tmpl: t, block=False)
                 continue
             # The speculative capacity: lanes free now, plus lanes whose
-            # request reaches max_new_tokens on this very tick (decode is
-            # about to retire them) — counting only retirements whose lane
-            # goes home to a pool this template can draw from
+            # request reaches max_new_tokens within the pipeline's horizon
+            # (``spec_depth`` decode ticks — a bet staged behind j older
+            # bets commits ~j boundaries later, so a deeper pipeline may
+            # bet on retirements further out) — counting only retirements
+            # whose lane goes home to a pool this template can draw from
             # (engine.lane_benefits): a lane bound for another template's
-            # reservation is a guaranteed miss, not a bet.  The remaining
-            # optimism (a straggler that refuses to finish, an engine that
-            # stops emitting, an engine without the lane_benefits hint) is
-            # what makes this a speculation, and the abort path is what
-            # settles it.  Capacity is checked BEFORE the strategy is
-            # consulted: decide() may be stateful (AdaptiveCost's explore
-            # alternation), and a lane with no speculative capacity must
-            # not consume a decision it cannot act on.
-            cap = self._free_for(tmpl) + sum(
+            # reservation is a guaranteed miss, not a bet.  Lanes already
+            # promised to older staged bets are subtracted
+            # (``_promised_against``): an older bet claims its capacity
+            # first, so a younger bet may only count what is left.  The
+            # remaining optimism (a straggler that refuses to finish, an
+            # engine that stops emitting, an engine without the
+            # lane_benefits hint, a retirement double-counted across
+            # bets) is what makes this a speculation, and the abort path
+            # is what settles it.  Capacity is checked BEFORE the
+            # strategy is consulted: decide() may be stateful
+            # (AdaptiveCost's explore alternation), and a lane with no
+            # speculative capacity must not consume a decision it cannot
+            # act on.
+            cap = (self._free_for(tmpl) + sum(
                 1 for r in self.running.values()
-                if r.remaining <= 1 and (ben is None or ben(r.lane, tmpl)))
+                if (r.remaining <= self.spec_depth
+                    and (ben is None or ben(r.lane, tmpl))))
+                - self._promised_against(tmpl))
             if cap > 0:
+                chunked = (self.chunk_tokens is not None
+                           and len(q[0].prompt) > self.chunk_tokens)
                 strat = self._strategy_for(tmpl)
-                take = min(strat.decide(len(q), self._producer_done),
-                           len(q), cap)
+                if chunked:
+                    # An oversized prompt dispatches alone (the chunk
+                    # pipeline is per-prompt); the strategy still gates
+                    # WHETHER the lane wants service now.
+                    take = min(strat.decide(len(q), self._producer_done), 1)
+                else:
+                    take = min(strat.decide(len(q), self._producer_done),
+                               len(q), cap)
+                if take > 0 and has_spill is not None and any(
+                        has_spill(q[i].rid) for i in range(take)):
+                    take = 0  # restore at admission beats re-prefilling
                 if take > 0:
-                    break
+                    self._dispatch_one(tmpl, q, take,
+                                       chunked=chunked)
+                    continue
             # Declined (strategy says wait / no capacity even
-            # speculatively): leave the lane exactly where it is and look
-            # at the next candidate.
+            # speculatively / spilled KV pending restore): leave the lane
+            # exactly where it is and look at the next candidate.
+
+    def _dispatch_one(self, tmpl: str, q: "deque[Request]", take: int,
+                      chunked: bool) -> None:
+        """Pop ``take`` requests off ``tmpl``'s lane and stage their
+        prefill as one new speculation-pipeline bet."""
         self._ready.pop(select=lambda keys, t=tmpl: t, block=False)
         batch = [q.popleft() for _ in range(take)]
         if not q:
@@ -415,7 +661,9 @@ class ContinuousBatchingScheduler:
         for r in batch:
             r.metrics.admitted = now
             r.metrics.speculative = True
-        self._staged = _SpecTask(self.engine, tmpl, batch)
+        self._staged.append(_SpecTask(
+            self.engine, tmpl, batch,
+            chunk=self.chunk_tokens if chunked else None))
         self.stats.spec_dispatched += take
 
     # ----------------------------------------------------------------- tick
@@ -440,6 +688,7 @@ class ContinuousBatchingScheduler:
         select = (self.policy.lane_min
                   if self.policy is not None and self.policy.lane_weights
                   else None)
+        has_spill = getattr(self.engine, "has_spill", None)
         consulted: set = set()
         repush: list = []
         while self.engine.n_free > 0:
@@ -453,6 +702,19 @@ class ContinuousBatchingScheduler:
             q = self.queues.get(tmpl)
             if not q:
                 continue  # stale push: lane drained since
+            if (self.chunk_tokens is not None
+                    and len(q[0].prompt) > self.chunk_tokens
+                    and not (has_spill is not None
+                             and has_spill(q[0].rid))):
+                # Oversized head prompt: admitting it inline is exactly the
+                # stall chunking exists to avoid — leave the lane for the
+                # chunked speculative dispatch (step 1.5) instead.  An
+                # oversized request WITH staged spilled KV falls through:
+                # its restore path pays no prefill at all, and skipping it
+                # here while the spec path also declines spilled requests
+                # would starve it forever.
+                repush.append(tmpl)
+                continue
             strat = self._strategy_for(tmpl)
             want = strat.decide(len(q), self._producer_done)
             # kv_shares: the batch is bounded by THIS template's admissible
@@ -468,22 +730,56 @@ class ContinuousBatchingScheduler:
                 del self.queues[tmpl]
             else:
                 repush.append(tmpl)
-            now = time.perf_counter()
+            # Host-KV restore first: a re-admitted request whose spilled
+            # KV survived in the pool resumes decoding directly (no
+            # prefill, no token restart); only the rest go through the
+            # prefill batch.  A request whose entry was evicted (pool
+            # LRU/budget) restarts from scratch — its stale partial
+            # generation is cleared before the re-prefill.
+            restore = getattr(self.engine, "try_restore", None)
+            fresh: list = []
+            n_restored = 0
             for r in batch:
+                lane = restore(r.rid, tmpl) if restore is not None else None
+                if lane is not None:
+                    r.lane = lane
+                    self.running[lane] = r
+                    self._lane_age[lane] = 0
+                    n_restored += 1
+                    self.stats.kv_restored += 1
+                else:
+                    if r.generated:
+                        r.generated.clear()  # spill entry lost: restart
+                    if (self.chunk_tokens is not None
+                            and len(r.prompt) > self.chunk_tokens):
+                        # Oversized restart whose entry was evicted: back
+                        # to the head — the chunk pipeline re-prefills it
+                        # (its spill entry is gone, so the admission gate
+                        # now routes it to the spec path, no starvation).
+                        self._requeue_front(tmpl, [r])
+                        continue
+                    fresh.append(r)
+            if n_restored and self.policy is not None:
+                self.policy.charge(tmpl, n_restored)  # restored = service
+            if not fresh:
+                continue
+            now = time.perf_counter()
+            for r in fresh:
                 r.metrics.admitted = now
             t0 = time.perf_counter()
-            shape = self.engine.admit(batch, template=tmpl)
+            shape = self.engine.admit(fresh, template=tmpl)
             # Feedback goes to the deciding model (the lane's own under a
             # policy); warm-shape guarding and the landing bookkeeping are
             # shared with the speculative commit path.
-            self._land_batch(tmpl, strat, batch, shape,
+            self._land_batch(tmpl, strat, fresh, shape,
                              time.perf_counter() - t0)
         for tmpl in repush:
             self._ready.push(tmpl)
 
-        # 1.5) speculation: while decode runs below, the next ready lane's
-        # prefill is already in flight on the spec thread.
-        if self.overlap and self._staged is None:
+        # 1.5) speculation: while decode runs below, the next ready lanes'
+        # prefills are already in flight on spec threads (up to
+        # spec_depth staged bets).
+        if self.overlap and len(self._staged) < self.spec_depth:
             self._dispatch_speculative(select)
 
         # 2) one batched decode step over all active lanes
@@ -511,10 +807,22 @@ class ContinuousBatchingScheduler:
                 finished.append(r)
                 self.stats.completed += 1
             elif self.lane_timeout and self._lane_age[lane] > self.lane_timeout:
-                # straggler: retire the lane, re-queue the request
-                self.engine.retire(lane)
+                # Straggler: retire the lane, re-queue the request.  With
+                # an engine spill pool the lane's KV is staged to host
+                # memory and the partial generation is KEPT — re-admission
+                # restores and resumes; without one (or if the entry is
+                # later evicted) the re-admission re-prefills from scratch.
+                spill = getattr(self.engine, "spill", None)
+                if spill is not None:
+                    spilled = spill(lane, key=r.rid, template=r.template)
+                else:
+                    self.engine.retire(lane)
+                    spilled = False
                 del self.running[lane]
-                r.generated.clear()
+                if spilled:
+                    self.stats.kv_spilled += 1
+                else:
+                    r.generated.clear()
                 r.lane = None
                 rq = self.queues.get(r.template)
                 if rq is None:  # lane may have been GC'd since admission

@@ -222,6 +222,113 @@ def test_rule_b_guard_grouping_repr():
 
 
 # ---------------------------------------------------------------------------
+# interpreter seams: output sink, producer-thread failure
+# ---------------------------------------------------------------------------
+
+
+def _effect_program():
+    """A loop whose query result is logged via an effectful Assign."""
+    return Program(
+        inputs=("categories",),
+        body=[
+            Loop(item_var="category", iter_var="categories", body=[
+                Query(target="partCount", query_name="part.lookup",
+                      params=("category",)),
+                Assign(target=None, fn=lambda v: v, args=("partCount",),
+                       effect="log"),
+            ]),
+        ],
+    )
+
+
+def test_interpreter_outputs_sink_receives_emissions():
+    """Regression: Interpreter.__init__ accepted `outputs` and silently
+    dropped it.  The sink must see every (effect, value) pair, in emission
+    order, alongside the `emitted` log — on the original AND the
+    transformed program."""
+    inputs = {"categories": list(range(12))}
+    seen: list = []
+    interp = Interpreter(TableService(TABLES), outputs=seen.append)
+    interp.run(_effect_program(), dict(inputs))
+    assert seen == interp.emitted
+    assert len(seen) == 12 and all(eff == "log" for eff, _ in seen)
+
+    t = transform_program(_effect_program(), overlap=True)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
+    seen_t: list = []
+    interp_t = Interpreter(rt, outputs=seen_t.append)
+    interp_t.run(t, dict(inputs))
+    rt.drain()
+    rt.shutdown()
+    assert seen_t == interp_t.emitted
+    assert sorted(v for _, v in seen_t) == sorted(v for _, v in seen)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _raising_program(n_items: int, raise_at: int):
+    """Producer-side Assign (feeds the query's params) raises mid-loop."""
+
+    def key_of(i):
+        if i == raise_at:
+            raise _Boom(f"producer failed at item {i}")
+        return i
+
+    return Program(
+        inputs=("items", "total"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Assign(target="key", fn=key_of, args=("i",)),
+                Query(target="v", query_name="part.lookup", params=("key",)),
+                Assign(target="total", fn=add, args=("total", "v")),
+            ]),
+        ],
+    )
+
+
+def test_fissioned_producer_exception_propagates_without_hanging():
+    """Regression: an exception on the overlap producer thread skipped
+    ``table.close()`` — the consumer's ``for record in table:`` blocked
+    forever and the exception was swallowed.  The run must terminate
+    promptly and re-raise the producer's exception on the caller."""
+    import threading as _threading
+
+    prog = transform_program(_raising_program(30, raise_at=7), overlap=True)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
+    outcome: list = []
+
+    def drive():
+        try:
+            Interpreter(rt).run(prog, {"items": list(range(30)), "total": 0})
+            outcome.append(("returned", None))
+        except _Boom as e:
+            outcome.append(("raised", e))
+        except BaseException as e:  # noqa: BLE001 — diagnosed below
+            outcome.append(("raised-other", e))
+
+    th = _threading.Thread(target=drive, daemon=True)
+    th.start()
+    th.join(timeout=30)  # pre-fix: blocks forever on the unclosed table
+    hung = th.is_alive()
+    rt.shutdown()
+    assert not hung, "fissioned run hung after a producer exception"
+    assert outcome and outcome[0][0] == "raised", outcome
+    assert "producer failed at item 7" in str(outcome[0][1])
+
+
+def test_fissioned_producer_exception_inline_mode_closes_table():
+    """Same failure without overlap: the exception propagates before the
+    consumer runs (unchanged contract) and the table is still closed."""
+    prog = transform_program(_raising_program(10, raise_at=3), overlap=False)
+    rt = AsyncQueryRuntime(TableService(TABLES), n_threads=3)
+    with pytest.raises(_Boom):
+        Interpreter(rt).run(prog, {"items": list(range(10)), "total": 0})
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # property tests: random programs, transformed ≡ original
 # ---------------------------------------------------------------------------
 

@@ -50,7 +50,7 @@ class Recording(BatchingStrategy):
     def observe_decode(self, duration):
         self.decode_observed.append(duration)
 
-    def observe_abort(self, duration):
+    def observe_abort(self, duration, depth=1):
         self.aborted.append(duration)
 
 
@@ -625,6 +625,48 @@ def test_policy_routes_observe_abort_to_lane_strategy():
     policy.observe_abort("a", 0.25)
     assert rec_a.aborted == [0.25]
     assert rec_b.aborted == []
+
+
+def test_abort_penalty_attributes_per_bet_depth():
+    """A depth-d abort charges d times the wasted dispatch: deep-pipeline
+    misses raise the learned threshold proportionally faster, and the
+    observed depth EWMA is exposed for spec_depth tuning."""
+    shallow = AdaptiveCost(alpha=0.5)
+    deep = AdaptiveCost(alpha=0.5)
+    assert shallow.abort_depth is None
+    shallow.observe_abort(0.4)             # depth defaults to 1
+    deep.observe_abort(0.4, depth=4)
+    assert shallow.abort_penalty == pytest.approx(0.4)
+    assert deep.abort_penalty == pytest.approx(1.6)  # 0.4 * depth 4
+    assert shallow.abort_depth == pytest.approx(1.0)
+    assert deep.abort_depth == pytest.approx(4.0)
+    deep.observe_abort(0.4, depth=2)
+    assert deep.abort_depth == pytest.approx(3.0)  # EWMA(4, 2), alpha .5
+    deep.reset()
+    assert deep.abort_depth is None and deep.abort_penalty == 0.0
+
+
+def test_spill_budget_knob_and_per_lane_overrides():
+    """The serving-side host-KV spill budget: per-lane overrides beat the
+    policy-wide default, shaped for HostSpillPool(budget_for=...)."""
+    policy = LanePolicy(spill_budget=4, spill_budgets={"chat": 8, "bulk": 0})
+    assert policy.spill_budget_for("chat") == 8
+    assert policy.spill_budget_for("bulk") == 0     # fenced out of the pool
+    assert policy.spill_budget_for("embed") == 4    # policy-wide default
+    assert policy.spill_budget_for(None) == 4
+    assert LanePolicy().spill_budget_for("x") is None  # unbounded default
+    with pytest.raises(ValueError):
+        LanePolicy(spill_budget=-1)
+    with pytest.raises(ValueError):
+        LanePolicy(spill_budgets={"a": -2})
+
+    from repro.serving.engine import HostSpillPool
+
+    pool = HostSpillPool(max_entries=8, budget_for=policy.spill_budget_for)
+    pool.put(1, "bulk", {"kv": 1})       # budget 0: dropped on arrival
+    assert 1 not in pool
+    pool.put(2, "embed", {"kv": 2})
+    assert 2 in pool
 
 
 def test_resolve_submit_folds_note_into_one_call():

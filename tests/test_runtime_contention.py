@@ -380,6 +380,25 @@ def test_sharded_counter_exact_under_concurrent_adds():
     assert int(c) == n_threads * n_each
 
 
+def test_sharded_counter_hashable_with_identity_hash():
+    """Regression: defining __eq__ without __hash__ made every counter
+    unhashable (``hash(c)`` raised TypeError), so stats counters could not
+    be dict keys or set members.  Identity hashing is restored — and it
+    must stay identity-based (value hashing would break when add() mutates
+    the value after insertion)."""
+    c = ShardedCounter()
+    h0 = hash(c)  # must not raise
+    c.add(5)
+    assert hash(c) == h0  # stable across mutation (identity, not value)
+    d = ShardedCounter()
+    d.add(5)
+    assert c == d  # equal by value...
+    registry = {c: "first", d: "second"}
+    assert len(registry) == 2  # ...but distinct as keys (identity hash)
+    assert registry[c] == "first" and registry[d] == "second"
+    assert {c, d} == {c, d} and len({c, d}) == 2
+
+
 def test_sharded_counter_behaves_like_a_number():
     c = ShardedCounter()
     c.add(3)

@@ -1,0 +1,64 @@
+"""Tooling tests: the bench-trend markdown renderer over artifact
+histories (tools/bench_trend.py)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from tools.bench_trend import collect, main, render  # noqa: E402
+
+
+def _write_run(tmp_path: Path, name: str, ratios: dict) -> Path:
+    d = tmp_path / name
+    d.mkdir()
+    doc = {
+        "batch_size_ratio": ratios.get("batch", 2.0),
+        "throughput_ratio": ratios.get("tp", 3.0),
+        "skewed_tenant": {"throughput_ratio": 2.0},
+        "shared_projection": {"round_trip_gain": 3.0},
+        "contention": {"submit_throughput_ratio": 5.0},
+        "overlap": {"tokens_per_s_ratio": ratios.get("overlap", 1.5)},
+        "overlap_depth": {"tokens_per_s_ratio": ratios.get("depth", 1.5)},
+        "spill": {"hit_ratio": ratios.get("hit", 1.0)},
+    }
+    f = d / "bench_lanes.json"
+    f.write_text(json.dumps(doc))
+    return f
+
+
+def test_bench_trend_renders_history_with_deltas(tmp_path):
+    f1 = _write_run(tmp_path, "run-a", {"tp": 3.0, "depth": 1.2})
+    f2 = _write_run(tmp_path, "run-b", {"tp": 4.5, "depth": 1.8})
+    table = render(collect([str(f1), str(f2)], [], keep_order=True))
+    lines = table.splitlines()
+    assert lines[0].startswith("| run |")
+    assert "overlap_depth.tokens_per_s_ratio" in lines[0]
+    assert "spill.hit_ratio" in lines[0]
+    assert lines[2].startswith("| run-a |")
+    assert lines[3].startswith("| run-b |")
+    assert "(+50.0%)" in lines[3]  # throughput 3.0 -> 4.5 on the last row
+    # every row has one cell per metric (+ the label column)
+    n_cols = lines[0].count("|")
+    assert all(ln.count("|") == n_cols for ln in lines[1:])
+
+
+def test_bench_trend_missing_metric_renders_dash(tmp_path):
+    f1 = _write_run(tmp_path, "old-run", {})
+    doc = json.loads(f1.read_text())
+    del doc["overlap_depth"]  # a run predating the metric
+    f1.write_text(json.dumps(doc))
+    table = render(collect([str(f1)], [], keep_order=True))
+    assert "—" in table
+
+
+def test_bench_trend_cli_dir_search_and_out(tmp_path, capsys):
+    _write_run(tmp_path, "r1", {})
+    _write_run(tmp_path, "r2", {})
+    out = tmp_path / "trend.md"
+    assert main(["--dir", str(tmp_path), "--out", str(out)]) == 0
+    text = out.read_text()
+    assert text.count("\n") >= 4  # header + separator + 2 runs
+    assert main([]) == 1  # no inputs → error exit

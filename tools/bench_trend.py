@@ -1,0 +1,109 @@
+"""Markdown trend table over accumulated bench-result artifacts.
+
+CI uploads every main run's ``results/bench*.json`` as a workflow
+artifact (ROADMAP: "trend dashboards over the artifact history").  This
+tool renders that history: point it at the downloaded artifact
+directories (or individual ``bench_lanes.json`` files) and it emits a
+markdown table of every gated ratio metric per run — the same metric set
+``benchmarks/bench_diff.py`` gates pairwise, so the trend view and the
+regression gate can never disagree about what matters.
+
+    python tools/bench_trend.py artifacts/run-*/bench_lanes.json
+    python tools/bench_trend.py --dir artifacts/ --out trend.md
+
+Runs are ordered oldest-first (file mtime; ``--keep-order`` preserves
+the argument order instead, for explicitly curated histories) and
+labelled by their parent directory name.  The last row additionally
+shows the delta vs the previous run per metric.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# The gated metric set is owned by bench_diff; reuse it so the trend
+# table tracks exactly what CI gates.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.bench_diff import GATED_METRICS, lookup  # noqa: E402
+
+
+def collect(paths: list[str], search_dirs: list[str],
+            keep_order: bool) -> list[Path]:
+    """Resolve the run files: explicit paths plus ``bench_lanes.json``
+    found under any ``--dir``, ordered oldest-first by mtime unless
+    ``keep_order``."""
+    files = [Path(p) for p in paths]
+    for d in search_dirs:
+        files.extend(sorted(Path(d).rglob("bench_lanes.json")))
+    missing = [f for f in files if not f.is_file()]
+    if missing:
+        raise FileNotFoundError(f"not a file: {[str(m) for m in missing]}")
+    if not keep_order:
+        files.sort(key=lambda f: f.stat().st_mtime)
+    return files
+
+
+def label_for(path: Path) -> str:
+    """A short run label: the parent directory name (artifact dirs are
+    one-per-run), falling back to the file stem."""
+    parent = path.resolve().parent.name
+    return parent if parent not in ("", "results") else path.stem
+
+
+def render(files: list[Path]) -> str:
+    """The markdown trend table (one row per run, one column per gated
+    metric; missing metrics — runs predating a metric — render as ``—``)."""
+    metrics = list(GATED_METRICS)
+    rows = []
+    for f in files:
+        with open(f) as fh:
+            doc = json.load(fh)
+        rows.append((label_for(f), [lookup(doc, m) for m in metrics]))
+    head = "| run | " + " | ".join(metrics) + " |"
+    sep = "|---" * (len(metrics) + 1) + "|"
+    lines = [head, sep]
+    for i, (label, vals) in enumerate(rows):
+        cells = []
+        for j, v in enumerate(vals):
+            if v is None:
+                cells.append("—")
+                continue
+            cell = f"{v:.2f}"
+            if i == len(rows) - 1 and i > 0:
+                prev = rows[i - 1][1][j]
+                if prev:
+                    cell += f" ({(v - prev) / prev:+.1%})"
+            cells.append(cell)
+        lines.append(f"| {label} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", help="bench_lanes.json files")
+    ap.add_argument("--dir", action="append", default=[],
+                    help="directory to search recursively for "
+                         "bench_lanes.json (repeatable)")
+    ap.add_argument("--keep-order", action="store_true",
+                    help="keep the argument order instead of sorting by "
+                         "file mtime")
+    ap.add_argument("--out", help="write the table here instead of stdout")
+    args = ap.parse_args(argv)
+
+    files = collect(args.paths, args.dir, args.keep_order)
+    if not files:
+        print("bench-trend: no result files found", file=sys.stderr)
+        return 1
+    table = render(files)
+    if args.out:
+        Path(args.out).write_text(table + "\n")
+        print(f"bench-trend: wrote {len(files)}-run trend to {args.out}")
+    else:
+        print(table)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

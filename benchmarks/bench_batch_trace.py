@@ -14,6 +14,7 @@ from benchmarks.common import CSV, run_variant
 
 
 def main(csv: CSV | None = None, quick: bool = False):
+    """Fig. 10: batch-size ramp over time in the queue-buildup regime."""
     csv = csv or CSV()
     n = 300 if quick else 800
     # per-iteration app work paces arrivals (paper §5.2.3's arrival rate);

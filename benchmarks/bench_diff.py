@@ -21,8 +21,12 @@ import argparse
 import json
 import sys
 
-# Higher-is-better ratio metrics gated across runs: dotted path into
-# results/bench_lanes.json -> max-drop override (None = the CLI default).
+# Ratio metrics gated across runs: dotted path into
+# results/bench_lanes.json -> spec.  A bare number (or None = the CLI
+# default) is a max-drop override for a higher-is-better ratio; a dict
+# spec may also set ``"direction": "lower"`` for metrics where GROWTH is
+# the regression (e.g. bytes-moved ratios) — the allowance then bounds
+# the relative rise instead of the relative drop.
 # The contention ratio is gated loosely here because thread-scheduling
 # noise swings it run to run; its hard floor (>= 2x) is asserted
 # absolutely by the CI bench step itself.
@@ -40,10 +44,17 @@ GATED_METRICS = {
     # ratio with kv_restored > 0) live in check_floors.py.
     "overlap_depth.tokens_per_s_ratio": 0.3,
     "spill.hit_ratio": 0.3,
+    # Part 8 paged KV: tokens/s ratio rides the same latency model (hard
+    # floor >= 1.0x in check_floors.py); the bytes ratio comes from the
+    # real engine's deterministic counters, so growth means page motion
+    # actually regressed — gate it tightly, lower-is-better.
+    "paged.tokens_per_s_ratio": {"allowance": 0.3},
+    "paged.kv_bytes_moved_ratio": {"allowance": 0.1, "direction": "lower"},
 }
 
 
 def lookup(doc: dict, dotted: str):
+    """Resolve a dotted metric path to a number (None when absent)."""
     cur = doc
     for part in dotted.split("."):
         if not isinstance(cur, dict) or part not in cur:
@@ -55,8 +66,15 @@ def lookup(doc: dict, dotted: str):
 def diff(baseline: dict, current: dict, max_drop: float) -> list[str]:
     """Human-readable regression lines (empty → all gates pass)."""
     regressions = []
-    for metric, override in GATED_METRICS.items():
-        allowed = override if override is not None else max_drop
+    for metric, spec in GATED_METRICS.items():
+        if isinstance(spec, dict):
+            allowed = spec.get("allowance")
+            lower_is_better = spec.get("direction") == "lower"
+        else:
+            allowed = spec
+            lower_is_better = False
+        if allowed is None:
+            allowed = max_drop
         base = lookup(baseline, metric)
         cur = lookup(current, metric)
         if base is None:
@@ -66,18 +84,22 @@ def diff(baseline: dict, current: dict, max_drop: float) -> list[str]:
             regressions.append(f"{metric}: present in baseline ({base:.3f}) "
                                "but MISSING from current results")
             continue
-        drop = (base - cur) / base if base > 0 else 0.0
+        # "drop" is movement in the BAD direction for this metric.
+        drop = (cur - base if lower_is_better else base - cur) / base \
+            if base > 0 else 0.0
+        verb = "rose" if lower_is_better else "dropped"
         status = "REGRESSION" if drop > allowed else "ok"
         print(f"  {metric}: baseline {base:.3f} -> current {cur:.3f} "
-              f"({-drop:+.1%}) [{status}, allowed {allowed:.0%}]")
+              f"[{status}, {verb} {drop:+.1%}, allowed {allowed:.0%}]")
         if drop > allowed:
             regressions.append(
-                f"{metric} dropped {drop:.1%} (baseline {base:.3f} -> "
-                f"current {cur:.3f}, allowed drop {allowed:.0%})")
+                f"{metric} {verb} {drop:.1%} (baseline {base:.3f} -> "
+                f"current {cur:.3f}, allowed {allowed:.0%})")
     return regressions
 
 
 def main(argv=None) -> int:
+    """CLI: diff two bench_lanes.json files, exit non-zero on regression."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True,
                     help="previous run's bench_lanes.json")

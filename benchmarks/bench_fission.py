@@ -37,6 +37,8 @@ def _time(f, *args, reps=5):
 
 
 def device_fission(csv: CSV, quick: bool):
+    """Rule A on device: scan-with-gather vs fission-hoisted batched
+    gather, timed and HLO-verified."""
     v, d, n = (10_000, 256, 2048) if not quick else (1_000, 128, 512)
     table = jax.random.normal(jax.random.PRNGKey(0), (v, d))
     ids = (jnp.arange(n) * 37) % v
@@ -64,6 +66,8 @@ def device_fission(csv: CSV, quick: bool):
 
 
 def serving_batching(csv: CSV, quick: bool):
+    """The serving analogue: sequential decode vs continuous batching on
+    the reduced model — counts decode dispatches."""
     arch = get_arch("llama3-8b")
     arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
     params = arch.init(jax.random.PRNGKey(0))
@@ -113,6 +117,7 @@ def serving_batching(csv: CSV, quick: bool):
 
 
 def main(csv: CSV | None = None, quick: bool = False):
+    """Device-level loop-fission benchmarks (Rule A instantiation)."""
     csv = csv or CSV()
     device_fission(csv, quick)
     serving_batching(csv, quick)

@@ -69,6 +69,20 @@ stopped.  Reported: completed tokens/s over a fixed tick budget and the
 ``kv_restored > 0``); ``kv_shares`` keeps the steady template's reserved
 lanes out of the churn (the burst-isolation guarantee, asserted by the
 test suite).
+
+Part 8 (paged KV motion) — the PR 6 tentpole A/B.  The dense engine moves
+whole lanes across the host boundary: a spill or restore always copies all
+``max_len`` KV rows even when the request wrote 20.  The paged engine
+moves only the valid ``ceil(rows / page_size)`` pages.  **Sim side**: the
+Part 7 straggler workload on a :class:`KVMotionSimEngine` whose
+spill/restore sleeps per row actually moved — completed tokens/s over the
+same tick budget isolates the transfer tax (CI floor: paged >= 1.0x
+dense).  **Real side**: the same straggler scenario on the reduced-config
+JAX ``InferenceEngine`` vs ``PagedInferenceEngine`` — per-request outputs
+must be bit-identical (page granularity is a motion change, not a numeric
+one) and the deterministic ``kv_bytes_moved`` counters must show the
+paged engine at <= 0.5x the dense bytes (CI floors:
+``paged.kv_bytes_moved_ratio``, ``paged.outputs_bit_identical``).
 """
 from __future__ import annotations
 
@@ -139,6 +153,7 @@ class HeterogeneousService(_StatsMixin):
         self._server = threading.Semaphore(concurrency)
 
     def execute(self, query_name: str, params: tuple):
+        """One single-item round trip through the semaphore-bounded server."""
         single_s, _, _ = self.profiles[query_name]
         with self._server:
             time.sleep(single_s)
@@ -146,6 +161,7 @@ class HeterogeneousService(_StatsMixin):
         return (query_name, params)
 
     def execute_batch(self, query_name: str, params_list):
+        """One set-oriented round trip (fixed setup + per-item cost)."""
         _, fixed_s, item_s = self.profiles[query_name]
         with self._server:
             time.sleep(fixed_s + item_s * len(params_list))
@@ -174,6 +190,8 @@ def _skew_workload(n_hot: int, n_cold: int, seed: int = 0) -> list:
 
 
 def run_skewed(per_lane: bool, n_hot: int, n_cold: int, n_threads: int = 8) -> dict:
+    """Drive the skewed-tenant workload with one global strategy or the
+    per-lane policy (Part 3 A/B side)."""
     svc = HeterogeneousService(_skew_profiles())
     if per_lane:
         policy = LanePolicy(
@@ -373,16 +391,21 @@ class SimServeEngine:
         self.decode_steps = 0
 
     @property
+    def kv(self):
+        """The KVView the scheduler binds (the real partition)."""
+        return self.partition
+
+    @property
     def n_free(self):
+        """Free decode lanes."""
         return self.partition.n_free
 
     def n_free_for(self, template):
+        """Lanes ``template`` may draw (reserved pool + shared pool)."""
         return self.partition.n_free_for(template)
 
-    def lane_benefits(self, lane, template):
-        return self.partition.benefits(lane, template)
-
     def prefill_dispatch(self, requests, template=None):
+        """Pay the profile's prefill cost on the calling thread and stage."""
         fixed, per = self.profiles[template]
         dt = fixed + per * len(requests)
         self.prefill_time += dt
@@ -390,6 +413,8 @@ class SimServeEngine:
         return _SimStaged(template, requests)
 
     def commit_prefill(self, staged, n=None):
+        """Bind staged requests (or the first ``n``) to freshly allocated
+        lanes — the zero-cost splice."""
         reqs = staged.requests if n is None else staged.requests[:n]
         for r in reqs:
             lane = self.partition.alloc(staged.template)
@@ -399,9 +424,12 @@ class SimServeEngine:
         return (len(staged.requests), 8)
 
     def admit(self, requests, template=None):
+        """Synchronous admission: dispatch + commit inline."""
         return self.commit_prefill(self.prefill_dispatch(requests, template))
 
     def decode_tick(self):
+        """One decode step over every active lane (cost scales with
+        occupancy); returns ``{lane: token}``."""
         if not self.active:
             return {}
         time.sleep(self.decode_base + self.decode_per_lane * len(self.active))
@@ -409,6 +437,7 @@ class SimServeEngine:
         return {lane: 1 for lane in self.active}
 
     def retire(self, lane):
+        """Release a lane back to its pool."""
         self.active.discard(lane)
         self.partition.release(lane)
 
@@ -417,6 +446,7 @@ class SimServeEngine:
     # restore costs nothing — exactly the point: restoring is (nearly)
     # free while a re-prefill pays the full profile cost again.
     def spill(self, lane, key, template=None):
+        """Stage the lane's (virtual) KV under ``key`` and retire it."""
         pool = self.partition.spill
         if pool is None:
             self.retire(lane)
@@ -426,10 +456,12 @@ class SimServeEngine:
         return staged
 
     def has_spill(self, key):
+        """Whether ``key`` has a staged entry to restore."""
         pool = self.partition.spill
         return pool is not None and key in pool
 
     def try_restore(self, key, template=None):
+        """Re-admit ``key`` from the spill pool into a fresh lane (or None)."""
         pool = self.partition.spill
         if (pool is None or key not in pool
                 or self.partition.n_free_for(template) <= 0):
@@ -572,7 +604,173 @@ def run_spill(spill: bool, n_ticks: int, n_steady: int = 24,
     }
 
 
+class KVMotionSimEngine(SimServeEngine):
+    """Part 8 sim engine: SimServeEngine plus a per-row KV transfer cost.
+
+    Every spill or restore pays ``rows_moved * row_cost`` of sleep and adds
+    ``rows_moved * row_bytes`` to ``kv_bytes_moved``.  The dense flavor
+    always moves the whole lane (``max_len`` rows — the lane-granular
+    host copy); the paged flavor moves only the valid pages,
+    ``ceil(rows / page_size) * page_size``.  Valid rows are tracked the
+    way the real engine tracks lengths: set at commit from the prompt,
+    incremented per decode, carried through the spill entry.
+    """
+
+    def __init__(self, *args, paged=False, page_size=16, max_len=128,
+                 row_cost=4e-5, row_bytes=4096, **kw):
+        super().__init__(*args, **kw)
+        self.paged = paged
+        self.page_size = page_size
+        self.max_len = max_len
+        self.row_cost = row_cost
+        self.row_bytes = row_bytes
+        self.kv_bytes_moved = 0
+        self._rows: dict = {}  # lane -> valid KV rows
+
+    def commit_prefill(self, staged, n=None):
+        """Commit, then record each lane's valid rows (prompt + token 0)."""
+        reqs = staged.requests if n is None else staged.requests[:n]
+        out = super().commit_prefill(staged, n)
+        for r in reqs:
+            self._rows[r.lane] = len(r.prompt) + 1
+        return out
+
+    def decode_tick(self):
+        """Decode, then advance each active lane's valid-row count."""
+        out = super().decode_tick()
+        for lane in out:
+            self._rows[lane] = min(self.max_len, self._rows.get(lane, 0) + 1)
+        return out
+
+    def _move(self, rows):
+        if self.paged:
+            ps = self.page_size
+            rows = min(self.max_len, -(-rows // ps) * ps)
+        else:
+            rows = self.max_len
+        self.kv_bytes_moved += rows * self.row_bytes
+        time.sleep(rows * self.row_cost)
+
+    def spill(self, lane, key, template=None):
+        """Pay the transfer for the lane's rows, stage them, retire."""
+        pool = self.partition.spill
+        if pool is None:
+            self.retire(lane)
+            return False
+        rows = self._rows.get(lane, self.max_len)
+        self._move(rows)
+        staged = pool.put(key, template, {"rows": rows})
+        self.retire(lane)
+        return staged
+
+    def try_restore(self, key, template=None):
+        """Re-admit ``key``, paying the transfer for its staged rows."""
+        pool = self.partition.spill
+        if (pool is None or key not in pool
+                or self.partition.n_free_for(template) <= 0):
+            return None
+        entry = pool.take(key)
+        if entry is None:
+            return None
+        lane = self.partition.alloc(template)
+        self.active.add(lane)
+        self._rows[lane] = entry["rows"]
+        self._move(entry["rows"])
+        return lane
+
+
+def run_paged(paged: bool, n_ticks: int, n_steady: int = 24,
+              n_long: int = 6) -> dict:
+    """One Part 8 sim side: the Part 7 straggler workload on a
+    :class:`KVMotionSimEngine` — identical compute costs, identical
+    eviction pressure; only the KV transfer granularity differs."""
+    from repro.serving.engine import HostSpillPool
+
+    profiles = {"steady": (1.5e-3, 1e-4), "long": (4e-3, 2e-4)}
+    eng = KVMotionSimEngine(8, profiles, kv_shares={"steady": 2},
+                            decode_base=1.5e-3,
+                            spill=HostSpillPool(max_entries=32),
+                            paged=paged)
+    sched = ContinuousBatchingScheduler(eng, strategy=OneOrAll(),
+                                        lane_timeout=4)
+    reqs = [Request(rid=i, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=12, template="long")
+            for i in range(n_long)]
+    reqs += [Request(rid=100 + i, prompt=np.arange(4, dtype=np.int32),
+                     max_new_tokens=4, template="steady")
+             for i in range(n_steady)]
+    for r in reqs:
+        sched.submit(r)
+    sched.producer_done()
+    t0 = time.perf_counter()
+    for _ in range(n_ticks):
+        sched.tick()
+    dt = time.perf_counter() - t0
+    finished = [r for r in reqs if r.done]
+    toks = sum(len(r.generated) for r in finished)
+    st = sched.stats
+    return {
+        "paged": paged,
+        "n_ticks": n_ticks,
+        "completed": len(finished),
+        "completed_tokens": toks,
+        "wall_s": dt,
+        "tokens_per_s": toks / dt,
+        "kv_spilled": st.kv_spilled,
+        "kv_restored": st.kv_restored,
+        "kv_bytes_moved": eng.kv_bytes_moved,
+    }
+
+
+def run_paged_real() -> dict:
+    """Part 8 real-engine acceptance check (reduced config, CPU): the
+    straggler spill scenario on the JAX ``InferenceEngine`` vs
+    ``PagedInferenceEngine``.  Page granularity is a KV *motion* change,
+    not a numeric one, so per-request outputs must be bit-identical while
+    the deterministic ``kv_bytes_moved`` counters diverge."""
+    import dataclasses
+
+    import jax
+
+    from repro.models.registry import get_arch
+    from repro.serving.engine import HostSpillPool, InferenceEngine
+    from repro.serving.paged_kv import PagedInferenceEngine
+
+    arch = get_arch("llama3-8b")
+    arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    params = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 200, size=n).astype(np.int32)
+               for n in (5, 9, 13, 7)]
+
+    def run(make_engine):
+        eng = make_engine()
+        sched = ContinuousBatchingScheduler(eng, strategy=OneOrAll(),
+                                            lane_timeout=2)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            sched.submit(r)
+        sched.producer_done()
+        sched.run_until_drained()
+        return [list(r.generated) for r in reqs], int(eng.kv_bytes_moved)
+
+    d_out, d_bytes = run(lambda: InferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=48,
+        kv_spill=HostSpillPool(8)))
+    p_out, p_bytes = run(lambda: PagedInferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=48,
+        kv_spill=HostSpillPool(8), page_size=8, prefetch_pages=1))
+    return {
+        "dense_kv_bytes_moved": d_bytes,
+        "paged_kv_bytes_moved": p_bytes,
+        "kv_bytes_moved_ratio": p_bytes / max(d_bytes, 1),
+        "outputs_bit_identical": d_out == p_out,
+    }
+
+
 def main(csv: CSV | None = None, quick: bool = False):
+    """Run every Part, add CSV rows, write ``results/bench_lanes.json``."""
     csv = csv or CSV()
 
     # -- Fig. 5/8: thread scaling ----------------------------------------
@@ -762,6 +960,43 @@ def main(csv: CSV | None = None, quick: bool = False):
     csv.add("lanes.spill.hit_ratio",
             f"{report['spill']['hit_ratio']:.2f}", "ratio")
     csv.add("lanes.spill.kv_restored", str(sp_on["kv_restored"]), "restores")
+
+    # -- paged KV motion: page-granular vs lane-granular transfers --------
+    # Best-of-2 per side (same rationale as Parts 6/7: a loaded runner only
+    # ever stalls a rep, and the dense side pays strictly more sleep).
+    def best_paged(paged: bool) -> dict:
+        reps = [run_paged(paged, n_ticks) for _ in range(2)]
+        return max(reps, key=lambda r: r["tokens_per_s"])
+
+    pg_off = best_paged(False)
+    pg_on = best_paged(True)
+    real = run_paged_real()
+    report["paged"] = {
+        "workload": f"Part 7 straggler workload, {n_ticks}-tick budget, "
+                    "row-proportional transfer cost (page_size=16, "
+                    "max_len=128), best of 2 reps per side; real-engine "
+                    "A/B on reduced llama3-8b (2 lanes, max_len=48, "
+                    "page_size=8, lane_timeout=2)",
+        "dense": pg_off,
+        "paged": pg_on,
+        "tokens_per_s_ratio": (pg_on["tokens_per_s"]
+                               / max(pg_off["tokens_per_s"], 1e-9)),
+        "sim_kv_bytes_moved_ratio": (pg_on["kv_bytes_moved"]
+                                     / max(pg_off["kv_bytes_moved"], 1)),
+        "real_engine": real,
+        "kv_bytes_moved_ratio": real["kv_bytes_moved_ratio"],
+        "outputs_bit_identical": real["outputs_bit_identical"],
+    }
+    csv.add("lanes.paged.dense.tokens_per_s",
+            f"{pg_off['tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.paged.paged.tokens_per_s",
+            f"{pg_on['tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.paged.tokens_per_s_ratio",
+            f"{report['paged']['tokens_per_s_ratio']:.2f}", "x")
+    csv.add("lanes.paged.kv_bytes_moved_ratio",
+            f"{report['paged']['kv_bytes_moved_ratio']:.3f}", "ratio")
+    csv.add("lanes.paged.bit_identical",
+            str(int(real["outputs_bit_identical"])), "bool")
 
     out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
     out.parent.mkdir(exist_ok=True)

@@ -14,6 +14,7 @@ from benchmarks.common import CSV, VARIANTS, run_variant
 
 
 def main(csv: CSV | None = None, quick: bool = False):
+    """Fig. 11: time until the k-th response per submission variant."""
     csv = csv or CSV()
     n = 150 if quick else 400
     ks = [1, n // 4, n // 2, n]

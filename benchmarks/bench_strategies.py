@@ -11,6 +11,7 @@ from benchmarks.common import CSV, run_variant
 
 
 def main(csv: CSV | None = None, quick: bool = False):
+    """Fig. 9: total execution time per batching strategy and size."""
     csv = csv or CSV()
     iters = [50, 200, 600] if not quick else [50, 200]
     base = {}

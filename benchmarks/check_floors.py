@@ -18,7 +18,10 @@ same-machine ratio with a physically-motivated minimum:
   prefill-heavy + decode-heavy traffic;
 * Part 7 — the depth-4 speculation pipeline must deliver >= 1.1x
   tokens/s over depth-1 on prefill-heavy traffic, and the host-KV-spill
-  scenario must actually restore (kv_restored > 0, hit ratio >= 0.5).
+  scenario must actually restore (kv_restored > 0, hit ratio >= 0.5);
+* Part 8 — page-granular KV motion must deliver >= 1.0x tokens/s over
+  lane-granular motion on the straggler workload, move <= 0.5x the KV
+  bytes on the real engine, and keep outputs bit-identical.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import sys
 
 
 def check(path: str = "results/bench_lanes.json") -> list[str]:
+    """Evaluate every absolute floor; return the failure messages."""
     with open(path) as f:
         d = json.load(f)
     failures = []
@@ -102,10 +106,35 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
             "spill scenario must restore at least half of what it spills, "
             f"got hit_ratio {sp['hit_ratio']:.2f}")
 
+    pg = d["paged"]
+    print("paged.tokens_per_s_ratio", pg["tokens_per_s_ratio"])
+    print("paged.kv_bytes_moved_ratio", pg["kv_bytes_moved_ratio"],
+          "(sim", pg["sim_kv_bytes_moved_ratio"], ")")
+    print("paged.outputs_bit_identical", pg["outputs_bit_identical"])
+    if pg["tokens_per_s_ratio"] < 1.0:
+        failures.append(
+            "page-granular KV motion must not lose tokens/s to "
+            "lane-granular motion on the straggler workload, got "
+            f"{pg['tokens_per_s_ratio']:.2f}")
+    if pg["kv_bytes_moved_ratio"] > 0.5:
+        failures.append(
+            "the paged engine must move <= 0.5x the dense engine's KV "
+            f"bytes, got {pg['kv_bytes_moved_ratio']:.3f}")
+    if pg["paged"]["kv_restored"] < 1:
+        failures.append(
+            "paged scenario never restored a staged KV entry "
+            "(kv_restored == 0) — page motion was not exercised")
+    if not pg["outputs_bit_identical"]:
+        failures.append(
+            "paged and dense engines must generate bit-identical outputs "
+            "per request — page granularity is a motion change, not a "
+            "numeric one")
+
     return failures
 
 
 def main(argv=None) -> int:
+    """CLI: print metrics, exit non-zero when any floor fails."""
     path = (argv or sys.argv[1:] or ["results/bench_lanes.json"])[0]
     failures = check(path)
     if not failures:

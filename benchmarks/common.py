@@ -72,6 +72,7 @@ def comment_author_program(record: Optional[Callable] = None,
 
 
 def strategy_for(variant: str, n_threads: int):
+    """The batching strategy each named paper variant runs with."""
     return {
         "async": PureAsync(),
         "async_batch": LowerThreshold(bt=3),
@@ -113,12 +114,15 @@ def run_variant(variant: str, n_iters: int, n_threads: int = 10,
 
 
 class CSV:
+    """Accumulates ``name,value,derived`` rows and echoes them live."""
     def __init__(self):
         self.rows = []
 
     def add(self, name: str, value, derived: str = ""):
+        """Record one row and print it."""
         self.rows.append((name, value, derived))
         print(f"{name},{value},{derived}", flush=True)
 
     def header(self):
+        """Print the CSV header line."""
         print("name,value,derived", flush=True)

@@ -36,6 +36,7 @@ MODULES = {
 
 
 def main(argv=None) -> None:
+    """Run the selected benchmark modules and write results/bench.csv."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=list(MODULES))

@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages behind one registry-backed facade.
+
+Importing this package populates :mod:`repro.kernels.registry` with every
+``(ref, kernel)`` pair — each subpackage's ``ops.py`` registers itself at
+import — and re-exports the jit'd public wrappers.  Callers use the
+wrappers (``decode_op`` etc.) for normal work and ``registry`` for
+introspection (the parity test sweeps ``registry.names()``).
+
+The ``registry`` import must stay FIRST: the ops modules import it back
+out of this partially-initialized package.
+"""
+from repro.kernels import registry  # noqa: I001  (must precede ops imports)
+
+from repro.kernels.batched_gather.ops import gather_op
+from repro.kernels.decode_attention.ops import decode_op
+from repro.kernels.flash_attention.ops import attention_op
+from repro.kernels.paged_attention.ops import paged_decode_op
+from repro.kernels.ssd_scan.ops import ssd_scan_op
+
+__all__ = [
+    "attention_op",
+    "decode_op",
+    "gather_op",
+    "paged_decode_op",
+    "registry",
+    "ssd_scan_op",
+]

@@ -1,21 +1,40 @@
-"""jit'd wrapper; also registers the kernel as the set-oriented executor of
-the ``table_gather`` QuerySpec on TPU (the fission pass then emits ONE
-kernel launch with pipelined DMAs for the whole loop-context table)."""
+"""jit'd wrapper (registry-dispatched); also registers the kernel as the
+set-oriented executor of the ``table_gather`` QuerySpec on TPU (the fission
+pass then emits ONE kernel launch with pipelined DMAs for the whole
+loop-context table)."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.batched_gather.kernel import batched_gather
 from repro.kernels.batched_gather.ref import gather_ref
 
 __all__ = ["gather_op"]
 
 
+def _supports(table, ids, *, bn=256) -> bool:
+    # The kernel tiles ids into bn-row blocks: a ragged tail block would
+    # read past the array, so non-divisible id counts take the reference.
+    return ids.shape[0] % min(bn, ids.shape[0]) == 0
+
+
+def _sample(key) -> registry.OpSample:
+    ks = jax.random.split(key, 2)
+    table = jax.random.normal(ks[0], (128, 32))
+    ids = jax.random.randint(ks[1], (64,), 0, 128)
+    return registry.OpSample(args=(table, ids), kernel={"bn": 16}, tol=None)
+
+
+registry.register("batched_gather", ref=gather_ref, kernel=batched_gather,
+                  supports=_supports, sample=_sample)
+
+
 @partial(jax.jit, static_argnames=("bn", "use_kernel", "interpret"))
 def gather_op(table, ids, *, bn=256, use_kernel=True, interpret=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_kernel and (on_tpu or interpret) and ids.shape[0] % min(bn, ids.shape[0]) == 0:
-        return batched_gather(table, ids, bn=bn, interpret=interpret or not on_tpu)
-    return gather_ref(table, ids)
+    """Batched row gather ``table[ids]`` (the loop-context table fetch)."""
+    return registry.dispatch("batched_gather", (table, ids),
+                             kernel_kwargs={"bn": bn},
+                             use_kernel=use_kernel, interpret=interpret)

@@ -1,20 +1,33 @@
-"""jit'd public wrapper for the split-KV decode kernel."""
+"""jit'd public wrapper for the split-KV decode kernel (registry-dispatched)."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.decode_attention.ref import decode_ref
 
 __all__ = ["decode_op"]
 
 
+def _sample(key) -> registry.OpSample:
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (2, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    lengths = jax.random.randint(ks[3], (2,), 1, 129)
+    return registry.OpSample(args=(q, k, v, lengths), kernel={"bk": 32})
+
+
+registry.register("decode_attention", ref=decode_ref,
+                  kernel=decode_attention_kernel, sample=_sample)
+
+
 @partial(jax.jit, static_argnames=("bk", "use_kernel", "interpret"))
 def decode_op(q, k, v, lengths, *, bk=512, use_kernel=True, interpret=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_kernel and (on_tpu or interpret):
-        return decode_attention_kernel(q, k, v, lengths, bk=bk,
-                                       interpret=interpret or not on_tpu)
-    return decode_ref(q, k, v, lengths)
+    """Single-token GQA decode attention over a dense KV cache."""
+    return registry.dispatch("decode_attention", (q, k, v, lengths),
+                             kernel_kwargs={"bk": bk},
+                             use_kernel=use_kernel, interpret=interpret)

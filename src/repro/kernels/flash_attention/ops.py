@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the flash-attention kernel.
+"""jit'd public wrapper for the flash-attention kernel (registry-dispatched).
 
 ``use_kernel=False`` (or a non-TPU backend without ``interpret``) falls back
 to the jnp oracle, so models can call :func:`attention_op` unconditionally.
@@ -9,17 +9,31 @@ from functools import partial
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
 __all__ = ["attention_op"]
 
 
+def _sample(key) -> registry.OpSample:
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    return registry.OpSample(args=(q, k, v), common={"causal": True},
+                             kernel={"bq": 32, "bk": 32})
+
+
+registry.register("flash_attention", ref=attention_ref,
+                  kernel=flash_attention, sample=_sample)
+
+
 @partial(jax.jit, static_argnames=("causal", "bq", "bk", "use_kernel", "interpret"))
 def attention_op(q, k, v, *, causal=True, bq=512, bk=512, use_kernel=True,
                  interpret=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_kernel and (on_tpu or interpret):
-        return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
-                               interpret=interpret or not on_tpu)
-    return attention_ref(q, k, v, causal=causal)
+    """Batched multi-head (GQA) attention over full sequences."""
+    return registry.dispatch("flash_attention", (q, k, v),
+                             common={"causal": causal},
+                             kernel_kwargs={"bq": bq, "bk": bk},
+                             use_kernel=use_kernel, interpret=interpret)

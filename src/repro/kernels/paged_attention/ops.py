@@ -1,0 +1,40 @@
+"""jit'd public wrapper for paged decode attention (registry-dispatched)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+from repro.kernels.paged_attention.ref import paged_decode_ref
+
+__all__ = ["paged_decode_op"]
+
+
+def _sample(key) -> registry.OpSample:
+    b, np_, ps, hkv, d = 2, 8, 16, 2, 64
+    n_pages = b * np_ + 1  # page 0 reserved so padding slots stay valid
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, 4, d))
+    k_pages = jax.random.normal(ks[1], (n_pages, ps, hkv, d))
+    v_pages = jax.random.normal(ks[2], (n_pages, ps, hkv, d))
+    # A shuffled (non-contiguous) physical page assignment per request.
+    perm = jax.random.permutation(ks[3], jnp.arange(1, n_pages))
+    tables = perm.reshape(b, np_).astype(jnp.int32)
+    lengths = jax.random.randint(ks[4], (b,), 1, np_ * ps + 1)
+    return registry.OpSample(args=(q, k_pages, v_pages, tables, lengths))
+
+
+registry.register("paged_decode_attention", ref=paged_decode_ref,
+                  kernel=paged_decode_attention_kernel, sample=_sample)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_decode_op(q, k_pages, v_pages, block_tables, lengths, *,
+                    use_kernel=True, interpret=False):
+    """Single-token GQA decode attention over a paged KV pool."""
+    return registry.dispatch(
+        "paged_decode_attention", (q, k_pages, v_pages, block_tables, lengths),
+        use_kernel=use_kernel, interpret=interpret)

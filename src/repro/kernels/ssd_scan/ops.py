@@ -1,19 +1,30 @@
-"""jit'd wrapper for the SSD chunk-state scan."""
+"""jit'd wrapper for the SSD chunk-state scan (registry-dispatched)."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 __all__ = ["ssd_scan_op"]
 
 
+def _sample(key) -> registry.OpSample:
+    ks = jax.random.split(key, 2)
+    states = jax.random.normal(ks[0], (2, 8, 4, 16, 32))
+    decay = jax.nn.sigmoid(jax.random.normal(ks[1], (2, 8, 4)))
+    return registry.OpSample(args=(states, decay))
+
+
+registry.register("ssd_scan", ref=ssd_scan_ref, kernel=ssd_scan,
+                  sample=_sample)
+
+
 @partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def ssd_scan_op(states, decay, *, use_kernel=True, interpret=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_kernel and (on_tpu or interpret):
-        return ssd_scan(states, decay, interpret=interpret or not on_tpu)
-    return ssd_scan_ref(states, decay)
+    """Inter-chunk SSD state scan → (state entering each chunk, final)."""
+    return registry.dispatch("ssd_scan", (states, decay),
+                             use_kernel=use_kernel, interpret=interpret)

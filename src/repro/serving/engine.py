@@ -303,12 +303,19 @@ class StagedPrefill:
     # extends from.  ``first`` stays ``None`` until the final chunk.
     pending: list = dataclasses.field(default_factory=list)
     lengths_dev: object = None
+    # Batched-chunk dispatch (``prefill_dispatch([r0, r1, ...], chunk=)``):
+    # one single-request staged prefill per prompt.  The parent is a pure
+    # aggregate — ``cache``/``first`` stay ``None``; resume advances one
+    # part-chunk per call, commit delegates to the parts in order.
+    parts: list = dataclasses.field(default_factory=list)
 
     @property
     def complete(self) -> bool:
         """Whether every chunk has been processed (always true for the
         one-shot dispatch path) — only a complete staged prefill may be
         committed."""
+        if self.parts:
+            return all(p.complete for p in self.parts)
         return not self.pending
 
 
@@ -340,6 +347,11 @@ class InferenceEngine:
                                      spill=self.kv_spill)
         self.decode_steps = 0
         self.prefill_calls = 0
+        # KV bytes copied across the device boundary (spill + restore).
+        # The dense engine moves whole lanes (max_len rows regardless of
+        # how many are valid); the paged engine moves only valid pages —
+        # this counter is what the Part 8 A/B compares.
+        self.kv_bytes_moved = 0
         # template -> pinned (batch, prompt) prefill bucket: each template
         # converges on ONE compiled prefill shape (monotone max of what it
         # has needed), so a template burst stops recompiling per batch size.
@@ -436,12 +448,26 @@ class InferenceEngine:
         compiled shapes (``chunk`` and its remainder bucket).
         """
         if chunk is not None and chunk >= 1:
+            cprompts = [np.asarray(r.prompt[-(self.max_len - 1):], np.int32)
+                        for r in requests]
             if len(requests) == 1:
-                r = requests[0]
-                prompt = np.asarray(r.prompt[-(self.max_len - 1):], np.int32)
-                if len(prompt) > chunk:
-                    return self._chunked_dispatch(r, prompt, template, chunk)
-            # A batch, or a prompt that fits one chunk: one-shot below.
+                if len(cprompts[0]) > chunk:
+                    return self._chunked_dispatch(
+                        requests[0], cprompts[0], template, chunk)
+                # A prompt that fits one chunk: ordinary one-shot below.
+            elif any(len(p) > chunk for p in cprompts):
+                # A BATCH of oversized prompts: one single-request chunked
+                # part per prompt under an aggregate parent, so resumable
+                # chunking no longer forces oversized prompts to dispatch
+                # alone — the scheduler admits them as one unit and
+                # interleaves decode ticks between every part's chunks.
+                parts = [self._chunked_dispatch(r, p, template, chunk)
+                         for r, p in zip(requests, cprompts)]
+                return StagedPrefill(
+                    template, list(requests), None, None,
+                    np.concatenate([pt.plens for pt in parts]),
+                    (len(requests), int(max(len(p) for p in cprompts))),
+                    parts=parts)
         bsz = _bucket(len(requests))
         # Bucket the prompt axis to the batch's longest (truncated) prompt:
         # lane-homogeneous admission (scheduler groups by template) means
@@ -472,18 +498,22 @@ class InferenceEngine:
         The staged cache is batch-1 and already padded to ``max_len``;
         later chunks extend it in place through the decode path (positions
         ``chunk..S-1``), so the committed KV matches what a one-shot
-        prefill of the full prompt would have produced.  The per-template
-        shape pin is NOT consulted: chunk shapes are their own (bounded)
-        compile family, and a huge prompt must not widen the template's
-        pinned batch bucket."""
+        prefill of the full prompt would have produced.  A prompt that
+        fits one chunk degenerates to a batch-1 one-shot (complete
+        immediately) so batched-chunk parents may mix sizes.  The
+        per-template shape pin is NOT consulted: chunk shapes are their
+        own (bounded) compile family, and a huge prompt must not widen
+        the template's pinned batch bucket."""
         S = len(prompt)
-        toks = jnp.asarray(prompt[None, :chunk])
-        _, cache = self._prefill(self.params, toks,
-                                 jnp.asarray([chunk], jnp.int32), self.max_len)
-        pending = [prompt[None, i: i + chunk] for i in range(chunk, S, chunk)]
+        c0 = min(chunk, S)
+        first, cache = self._prefill(
+            self.params, jnp.asarray(prompt[None, :c0]),
+            jnp.asarray([c0], jnp.int32), self.max_len)
+        pending = [prompt[None, i: i + chunk] for i in range(c0, S, chunk)]
         return StagedPrefill(
-            template, [r], None, cache, np.asarray([S], np.int32), (1, S),
-            pending=pending, lengths_dev=jnp.asarray([chunk], jnp.int32))
+            template, [r], None if pending else first, cache,
+            np.asarray([S], np.int32), (1, S),
+            pending=pending, lengths_dev=jnp.asarray([c0], jnp.int32))
 
     def prefill_resume(self, staged: StagedPrefill) -> bool:
         """Fold the next pending chunk into a chunked staged prefill.
@@ -494,9 +524,19 @@ class InferenceEngine:
         making the staged prefill :attr:`~StagedPrefill.complete` and
         commit-eligible.  Returns completeness.  Like ``prefill_dispatch``
         this mutates only the staged object, never engine or request
-        state — safe on the scheduler's speculation thread."""
+        state — safe on the scheduler's speculation thread.
+
+        A batched-chunk parent advances ONE chunk of its first incomplete
+        part per call — the one-dispatch-per-resume contract the
+        scheduler's tick interleaving relies on is preserved."""
         if staged.complete:
             return True
+        if staged.parts:
+            for part in staged.parts:
+                if not part.complete:
+                    self.prefill_resume(part)
+                    break
+            return staged.complete
         toks = staged.pending.pop(0)
         logits, staged.cache, staged.lengths_dev = self._extend(
             self.params, staged.cache, jnp.asarray(toks), staged.lengths_dev)
@@ -519,6 +559,15 @@ class InferenceEngine:
         """
         assert staged.complete, \
             "commit_prefill() of a chunked staged prefill with pending chunks"
+        if staged.parts:
+            take = len(staged.requests) if n is None else n
+            for part in staged.parts:
+                k = min(len(part.requests), take)
+                if k <= 0:
+                    break
+                self.commit_prefill(part, k)
+                take -= k
+            return staged.shape
         reqs = staged.requests if n is None else staged.requests[:n]
         assert len(reqs) <= self.n_free_for(staged.template), \
             "commit_prefill() beyond this template's free lanes"
@@ -526,7 +575,7 @@ class InferenceEngine:
             return staged.shape
         first = np.asarray(staged.first)  # materializes the async dispatch
         lanes = [self.partition.alloc(staged.template) for _ in reqs]
-        self.cache = _insert_lanes(self.cache, staged.cache, lanes)
+        self._insert_staged(staged, lanes)
         lt = np.array(self.last_token)
         ln = np.array(self.lengths)
         for i, (r, lane) in enumerate(zip(reqs, lanes)):
@@ -539,6 +588,16 @@ class InferenceEngine:
         self.lengths = jnp.asarray(ln)
         self.prefill_calls += 1
         return staged.shape
+
+    def _insert_staged(self, staged: StagedPrefill, lanes: list[int]) -> None:
+        """Splice the staged batch's cache into ``lanes`` — the KV-motion
+        hook the paged engine overrides.  The dense engine always moves
+        full lanes (all ``max_len`` rows, valid or not) and accounts them
+        against :attr:`kv_bytes_moved`."""
+        self.cache = _insert_lanes(self.cache, staged.cache, lanes)
+        for a in jax.tree_util.tree_leaves(staged.cache):
+            self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0] * len(lanes)
+                                    * int(np.prod(a.shape[2:])))
 
     # ----------------------------------------------------------------- tick
     def decode_tick(self) -> dict[int, int]:
@@ -586,6 +645,8 @@ class InferenceEngine:
             "length": int(np.asarray(self.lengths)[lane]),
             "last": int(np.asarray(self.last_token)[lane]),
         }
+        self.kv_bytes_moved += sum(
+            a.nbytes for a in jax.tree_util.tree_leaves(entry["rows"]))
         staged = pool.put(key, template, entry)
         self.retire(lane)
         return staged
@@ -615,6 +676,8 @@ class InferenceEngine:
             return None
         lane = self.partition.alloc(template)
         rows = entry["rows"]
+        self.kv_bytes_moved += sum(
+            np.asarray(a).nbytes for a in jax.tree_util.tree_leaves(rows))
         self.cache = jax.tree_util.tree_map(
             lambda dst, src: dst.at[:, lane].set(
                 jnp.asarray(src).astype(dst.dtype)),
@@ -627,6 +690,14 @@ class InferenceEngine:
         self.last_token = jnp.asarray(lt)
         self.active[lane] = True
         return lane
+
+    @property
+    def kv(self):
+        """The engine's :class:`~repro.serving.kv.KVView` — the one
+        capacity/placement surface the scheduler consumes.  Dense engines
+        expose their :class:`KVPartition`; the paged engine overrides
+        this with a page-budget-bounded view."""
+        return self.partition
 
     @property
     def n_free(self) -> int:

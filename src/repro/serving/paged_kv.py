@@ -1,0 +1,481 @@
+"""Paged KV cache: fixed-size pages, block tables, page-granular motion.
+
+The dense engine treats a lane as the unit of KV residency: spill copies
+all ``max_len`` rows to host, restore copies them all back, commit splices
+a full padded lane — even when the request only wrote 20 tokens.  This
+module makes the *page* (``page_size`` token rows) the unit instead,
+vLLM-style:
+
+* :class:`PagedKVPool` — the allocation layer: a free list of physical
+  pages, per-request block tables (logical slot ``j`` → physical page),
+  refcounted pages so tables may *share* a prefix (``share``), and
+  LRU eviction of unpinned tables to a host record when an allocation
+  cannot be satisfied (``host_tables``).
+* :class:`PagedKVView` — the :class:`~repro.serving.kv.KVView` the
+  scheduler consumes: lane allocation delegated to the dense
+  :class:`~repro.serving.engine.KVPartition` (reservations keep working),
+  capacity additionally min-bounded by the page budget.
+* :class:`PagedInferenceEngine` — the serving engine at page granularity.
+  Decode compute keeps the dense per-lane cache (so paged and dense
+  decode are *bit-identical* per request — same jitted ``decode_step``
+  on the same rows), with pages mapped to identity frames
+  ``lane * pages_per_lane + j``; what changes is every KV *movement*:
+
+  - **spill** copies only the ``ceil(length / page_size)`` valid pages;
+  - **restore** splices the first ``prefetch_pages`` pages synchronously
+    and queues the tail, which :meth:`~PagedInferenceEngine.decode_tick`
+    flushes before the next decode step — resume-after-prefetch, with
+    the tail transfer overlapping scheduler work between ticks;
+  - **commit** splices only the pages the batch's prompts actually fill;
+  - **growth** extends a lane's block table one page at a time as decode
+    crosses page boundaries.
+
+  Stale rows past a request's valid pages are never read: attention masks
+  ``kpos < length`` and decode writes position ``length`` before ever
+  attending it, which is the argument that page-granular motion cannot
+  change any output.  :attr:`~repro.serving.engine.InferenceEngine.
+  kv_bytes_moved` counts both engines' motion; the Part 8 benchmark
+  compares them.
+
+The matching device-compute story is the Pallas paged decode-attention
+kernel (:mod:`repro.kernels.paged_attention`), which consumes exactly the
+``(k_pages, v_pages, block_tables, lengths)`` layout
+:meth:`PagedInferenceEngine.paged_view` exposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import InferenceEngine, KVPartition, StagedPrefill
+
+__all__ = ["PagedInferenceEngine", "PagedKVPool", "PagedKVView"]
+
+
+class PagedKVPool:
+    """Refcounted physical pages + per-request block tables.
+
+    Pure bookkeeping: the pool tracks which physical page backs each
+    logical slot of each table, not the page contents (those live in
+    whatever array the caller pages — the engine's lane cache, a host
+    buffer).  ``alloc_table(key, pages=...)`` claims *specific* free
+    pages (the engine's identity frames); ``alloc_table(key, n=...)``
+    takes any ``n`` free pages, evicting least-recently-used unpinned
+    tables to :attr:`host_tables` (or the ``on_evict`` callback) when the
+    free list runs dry.  Pages are refcounted so :meth:`share` can alias
+    a prefix across tables; a page returns to the free list only when its
+    last table drops it.
+    """
+
+    def __init__(self, n_pages: int, page_size: int,
+                 on_evict: Optional[Callable[[object, list[int]], None]] = None):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("n_pages and page_size must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.on_evict = on_evict
+        self._free: list[int] = list(range(n_pages))
+        self._ref = [0] * n_pages
+        self._tables: "OrderedDict[object, list[int]]" = OrderedDict()
+        self._pinned: set = set()
+        self.host_tables: dict[object, list[int]] = {}
+        self.evicted = 0
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def n_free_pages(self) -> int:
+        """Pages on the free list right now (eviction can raise this)."""
+        return len(self._free)
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` token rows (0 for 0)."""
+        return -(-length // self.page_size)
+
+    # --------------------------------------------------------------- tables
+    def has_table(self, key) -> bool:
+        """Whether ``key`` currently owns a block table."""
+        return key in self._tables
+
+    def table(self, key) -> tuple[int, ...]:
+        """``key``'s physical pages in logical-slot order (LRU-touching)."""
+        self._tables.move_to_end(key)
+        return tuple(self._tables[key])
+
+    def block_table(self, key, max_pages: int) -> np.ndarray:
+        """``key``'s table as a fixed-width int32 row, padded with page 0
+        (padding slots are masked by length, never read — the layout the
+        paged attention kernel consumes)."""
+        pages = self.table(key)
+        out = np.zeros((max_pages,), np.int32)
+        out[: len(pages)] = pages
+        return out
+
+    def alloc_table(self, key, n: Optional[int] = None,
+                    pages: Optional[list[int]] = None) -> list[int]:
+        """Create ``key``'s table from ``n`` free pages (any; LRU-evicting
+        on pressure) or the explicitly named free ``pages``."""
+        if key in self._tables:
+            raise ValueError(f"table {key!r} already allocated")
+        got = self._claim(n, pages)
+        self._tables[key] = got
+        return list(got)
+
+    def extend_table(self, key, n: Optional[int] = None,
+                     pages: Optional[list[int]] = None) -> list[int]:
+        """Append pages to ``key``'s table (decode crossed a boundary)."""
+        new = self._claim(n, pages)
+        self._tables[key].extend(new)
+        self._tables.move_to_end(key)
+        return new
+
+    def free_table(self, key) -> None:
+        """Drop ``key``'s table; pages with no remaining owner are freed."""
+        self._pinned.discard(key)
+        for p in self._tables.pop(key):
+            self._decref(p)
+
+    def share(self, src, dst) -> list[int]:
+        """Alias ``src``'s pages under a new table ``dst`` (prefix
+        sharing): every page's refcount rises, nothing is copied."""
+        if dst in self._tables:
+            raise ValueError(f"table {dst!r} already allocated")
+        pages = list(self._tables[src])
+        for p in pages:
+            self._ref[p] += 1
+        self._tables[dst] = pages
+        return list(pages)
+
+    def pin(self, key) -> None:
+        """Exempt ``key`` from OOM eviction (an active decode lane)."""
+        self._pinned.add(key)
+
+    def unpin(self, key) -> None:
+        """Make ``key`` evictable again."""
+        self._pinned.discard(key)
+
+    def snapshot(self) -> dict:
+        """Occupancy + eviction counters (introspection/benchmarks)."""
+        return {"free_pages": len(self._free), "tables": len(self._tables),
+                "evicted": self.evicted, "host_tables": len(self.host_tables)}
+
+    # ------------------------------------------------------------- internals
+    def _claim(self, n: Optional[int], pages: Optional[list[int]]) -> list[int]:
+        if (n is None) == (pages is None):
+            raise ValueError("pass exactly one of n= / pages=")
+        if pages is not None:
+            for p in pages:
+                if self._ref[p] != 0:
+                    raise ValueError(f"page {p} is not free")
+                self._free.remove(p)
+                self._ref[p] = 1
+            return list(pages)
+        while len(self._free) < n:
+            self._evict_one()
+        got = [self._free.pop(0) for _ in range(n)]
+        for p in got:
+            self._ref[p] = 1
+        return got
+
+    def _evict_one(self) -> None:
+        for key in self._tables:  # OrderedDict order == LRU
+            if key not in self._pinned:
+                pages = self._tables.pop(key)
+                self.evicted += 1
+                if self.on_evict is not None:
+                    self.on_evict(key, list(pages))
+                else:
+                    self.host_tables[key] = list(pages)
+                for p in pages:
+                    self._decref(p)
+                return
+        raise RuntimeError("KV pool out of pages: every table is pinned")
+
+    def _decref(self, p: int) -> None:
+        self._ref[p] -= 1
+        if self._ref[p] == 0:
+            self._free.append(p)
+
+
+class PagedKVView:
+    """:class:`~repro.serving.kv.KVView` over (lane partition, page pool).
+
+    Allocation units stay lanes — per-template reservations, ``benefits``
+    and the free-lane snapshot all delegate to the dense
+    :class:`KVPartition` — but every capacity read is additionally
+    min-bounded by the page budget: a free lane is only admissible if the
+    pool could still back a full lane's worth of pages for it.  With the
+    engine's identity-frame pool (``n_pages = n_lanes * pages_per_lane``)
+    the bound is never the binding constraint, so paged admission behaves
+    exactly like dense admission; an under-provisioned pool degrades
+    gracefully by admitting less.
+    """
+
+    def __init__(self, partition: KVPartition, pool: PagedKVPool,
+                 pages_per_lane: int):
+        self.partition = partition
+        self.pool = pool
+        self.pages_per_lane = pages_per_lane
+
+    @property
+    def _page_bound(self) -> int:
+        return self.pool.n_free_pages // self.pages_per_lane
+
+    @property
+    def n_free(self) -> int:
+        """Free lanes, min-bounded by whole-lane page budgets."""
+        return min(self.partition.n_free, self._page_bound)
+
+    def n_free_for(self, template: Optional[str]) -> int:
+        """Free lanes ``template`` may take, page-budget-bounded."""
+        return min(self.partition.n_free_for(template), self._page_bound)
+
+    def alloc(self, template: Optional[str]) -> int:
+        """Take one lane for ``template`` (reserved pool first)."""
+        return self.partition.alloc(template)
+
+    def release(self, lane: int) -> None:
+        """Return a lane to its home pool."""
+        self.partition.release(lane)
+
+    def benefits(self, lane: int, template: Optional[str]) -> bool:
+        """Whether releasing ``lane`` raises ``n_free_for(template)``."""
+        return self.partition.benefits(lane, template)
+
+    @property
+    def free_lanes(self) -> list[int]:
+        """Sorted snapshot of every free lane (introspection)."""
+        return self.partition.free_lanes
+
+
+@dataclasses.dataclass
+class PagedInferenceEngine(InferenceEngine):
+    """Serving engine with page-granular KV motion (see module docstring).
+
+    ``page_size`` must divide ``max_len``; ``prefetch_pages`` is how many
+    pages a restore splices synchronously before resuming decode (the
+    tail streams in before the next tick).
+    """
+
+    page_size: int = 16
+    prefetch_pages: int = 2
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.max_len % self.page_size:
+            raise ValueError("page_size must divide max_len")
+        if self.prefetch_pages < 1:
+            raise ValueError("prefetch_pages must be >= 1")
+        self.pages_per_lane = self.max_len // self.page_size
+        self.pool = PagedKVPool(self.n_lanes * self.pages_per_lane,
+                                self.page_size)
+        self._kv_view = PagedKVView(self.partition, self.pool,
+                                    self.pages_per_lane)
+        # lane -> (host rows pytree, start_row, stop_row): restore tails
+        # not yet on device; flushed before the next decode step.
+        self._pending_restore: dict[int, tuple] = {}
+
+    @property
+    def kv(self) -> PagedKVView:
+        """The page-budget-bounded :class:`~repro.serving.kv.KVView`."""
+        return self._kv_view
+
+    # ---------------------------------------------------------- page frames
+    def _frames(self, lane: int, start: int, stop: int) -> list[int]:
+        """Identity physical frames for ``lane``'s logical pages
+        [start, stop) — page ``j`` of lane ``L`` lives in device frame
+        ``L * pages_per_lane + j`` (decode compute stays dense)."""
+        base = lane * self.pages_per_lane
+        return [base + j for j in range(start, stop)]
+
+    def _seq_leaf(self, dst) -> bool:
+        # KV leaves carry the sequence axis at position 2 ((L, B, S, H, d));
+        # SSM/conv state leaves do not and always move whole.
+        return dst.ndim >= 3 and dst.shape[2] == self.max_len
+
+    def _open_table(self, lane: int, length: int) -> None:
+        """(Re)create ``lane``'s pinned block table covering ``length``
+        written rows plus the next write position."""
+        n = min(self.pages_per_lane, length // self.page_size + 1)
+        self.pool.alloc_table(lane, pages=self._frames(lane, 0, n))
+        self.pool.pin(lane)
+
+    def _ensure_pages(self, lane: int, n: int) -> None:
+        n = min(n, self.pages_per_lane)
+        have = len(self.pool.table(lane))
+        if n > have:
+            self.pool.extend_table(lane, pages=self._frames(lane, have, n))
+
+    # ------------------------------------------------------------ admission
+    def commit_prefill(self, staged: StagedPrefill,
+                       n: Optional[int] = None) -> tuple[int, int]:
+        """Dense commit + a pinned identity-frame block table per lane."""
+        shape = super().commit_prefill(staged, n)
+        if staged.parts:
+            return shape  # parts recursed through here and built tables
+        k = len(staged.requests) if n is None else min(n, len(staged.requests))
+        for r, plen in zip(staged.requests[:k], staged.plens[:k]):
+            self._open_table(r.lane, int(plen))
+        return shape
+
+    def _insert_staged(self, staged: StagedPrefill, lanes: list[int]) -> None:
+        """Page-granular commit splice: move only the pages the batch's
+        prompts fill (bucket-max, still ≤ the dense full-lane copy)."""
+        ps = self.page_size
+        plen = int(np.max(staged.plens[: len(lanes)]))
+        n_rows = min(self.max_len, max(1, self.pool.pages_for(plen)) * ps)
+        idx = jnp.asarray(lanes)
+
+        def one(dst, src):
+            take = src[:, : len(lanes)]
+            if self._seq_leaf(dst):
+                return dst.at[:, idx, :n_rows].set(
+                    take[:, :, :n_rows].astype(dst.dtype))
+            return dst.at[:, idx].set(take.astype(dst.dtype))
+
+        self.cache = jax.tree_util.tree_map(one, self.cache, staged.cache)
+        for a in jax.tree_util.tree_leaves(staged.cache):
+            rows = n_rows if self._seq_leaf(a) else a.shape[2] if a.ndim >= 3 else 1
+            per_row = int(np.prod(a.shape[3:])) if a.ndim >= 3 else int(np.prod(a.shape[2:]))
+            self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                    * len(lanes) * rows * per_row)
+
+    # ----------------------------------------------------------------- tick
+    def decode_tick(self) -> dict[int, int]:
+        """Flush pending restore tails, grow block tables across page
+        boundaries, then run the ordinary dense decode step."""
+        self._flush_restores()
+        if self.active.any():
+            ln = np.asarray(self.lengths)
+            for lane in np.nonzero(self.active)[0]:
+                # decode writes position `length` this tick: its page must
+                # be in the table before the write.
+                self._ensure_pages(int(lane),
+                                   int(ln[lane]) // self.page_size + 1)
+        return super().decode_tick()
+
+    def retire(self, lane: int) -> None:
+        """Free the lane's block table along with the lane."""
+        self._pending_restore.pop(lane, None)
+        if self.pool.has_table(lane):
+            self.pool.free_table(lane)
+        super().retire(lane)
+
+    # ---------------------------------------------------------------- spill
+    def spill(self, lane: int, key, template: Optional[str] = None) -> bool:
+        """Stage only the lane's VALID pages to host (vs the dense
+        engine's full ``max_len`` rows) — the tentpole's bytes win."""
+        pool = self.partition.spill
+        if pool is None or not pool.accepts(template):
+            self.retire(lane)
+            return False
+        self._flush_restores(lane)  # device rows must be whole before copy
+        length = int(np.asarray(self.lengths)[lane])
+        n_rows = min(self.max_len,
+                     max(1, self.pool.pages_for(length)) * self.page_size)
+        entry = {
+            "rows": jax.tree_util.tree_map(
+                lambda a: np.asarray(a[:, lane, :n_rows])
+                if self._seq_leaf(a) else np.asarray(a[:, lane]), self.cache),
+            "n_rows": n_rows,
+            "length": length,
+            "last": int(np.asarray(self.last_token)[lane]),
+        }
+        self.kv_bytes_moved += sum(
+            a.nbytes for a in jax.tree_util.tree_leaves(entry["rows"]))
+        staged = pool.put(key, template, entry)
+        self.retire(lane)
+        return staged
+
+    def try_restore(self, key, template: Optional[str] = None) -> Optional[int]:
+        """Restore spilled pages: first ``prefetch_pages`` now, tail
+        queued for the next tick — decode resumes after the prefetch
+        instead of waiting for the whole lane."""
+        pool = self.partition.spill
+        if pool is None or key not in pool or self.n_free_for(template) <= 0:
+            return None
+        entry = pool.take(key)
+        if entry is None:  # raced away (defensive: tick loop is 1-threaded)
+            return None
+        lane = self.partition.alloc(template)
+        rows = entry["rows"]
+        n_rows = entry["n_rows"]
+        head = min(n_rows, self.prefetch_pages * self.page_size)
+
+        def one(dst, src):
+            src = jnp.asarray(src)
+            if self._seq_leaf(dst):
+                return dst.at[:, lane, :head].set(src[:, :head].astype(dst.dtype))
+            return dst.at[:, lane].set(src.astype(dst.dtype))
+
+        self.cache = jax.tree_util.tree_map(one, self.cache, rows)
+        moved = sum(
+            (a.dtype.itemsize * a.shape[0] * head * int(np.prod(a.shape[2:])))
+            if a.ndim >= 3 and a.shape[1] == n_rows else a.nbytes
+            for a in map(np.asarray, jax.tree_util.tree_leaves(rows)))
+        self.kv_bytes_moved += moved
+        if head < n_rows:
+            self._pending_restore[lane] = (rows, head, n_rows)
+        ln = np.array(self.lengths)
+        lt = np.array(self.last_token)
+        ln[lane] = entry["length"]
+        lt[lane] = entry["last"]
+        self.lengths = jnp.asarray(ln)
+        self.last_token = jnp.asarray(lt)
+        self.active[lane] = True
+        self._open_table(lane, entry["length"])
+        return lane
+
+    def _flush_restores(self, lane: Optional[int] = None) -> None:
+        """Splice queued restore tails into the lane cache (all lanes, or
+        one lane about to be copied out again)."""
+        if lane is not None:
+            items = ([(lane, self._pending_restore.pop(lane))]
+                     if lane in self._pending_restore else [])
+        else:
+            items = list(self._pending_restore.items())
+            self._pending_restore.clear()
+        for ln_, (rows, start, stop) in items:
+
+            def one(dst, src, ln_=ln_, start=start, stop=stop):
+                if self._seq_leaf(dst):
+                    return dst.at[:, ln_, start:stop].set(
+                        jnp.asarray(src)[:, start:stop].astype(dst.dtype))
+                return dst
+
+            self.cache = jax.tree_util.tree_map(one, self.cache, rows)
+            for a in map(np.asarray, jax.tree_util.tree_leaves(rows)):
+                if a.ndim >= 3 and a.shape[1] == stop:
+                    self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                            * (stop - start)
+                                            * int(np.prod(a.shape[2:])))
+
+    # ------------------------------------------------------------ paged view
+    def paged_view(self, stack: str = "layers") -> Optional[dict]:
+        """The active lanes' KV as the paged-kernel layout.
+
+        Returns ``{"k_pages", "v_pages", "block_tables", "lengths",
+        "lanes"}`` for one transformer ``stack`` (layer 0), with pages cut
+        from the dense lane cache at identity frames and block tables read
+        from the pool — the bridge the parity tests drive
+        :func:`repro.kernels.paged_attention.ops.paged_decode_op` with.
+        ``None`` when the stack has no k/v leaves or nothing is active.
+        """
+        entry = self.cache.get(stack) if hasattr(self.cache, "get") else None
+        if not entry or "k" not in entry or not self.active.any():
+            return None
+        lanes = [int(x) for x in np.nonzero(self.active)[0]]
+        ps, ppl = self.page_size, self.pages_per_lane
+        k0, v0 = entry["k"][0], entry["v"][0]  # (B, S, Hkv, hd) layer 0
+        hkv, hd = k0.shape[2], k0.shape[3]
+        k_pages = jnp.reshape(k0, (self.n_lanes * ppl, ps, hkv, hd))
+        v_pages = jnp.reshape(v0, (self.n_lanes * ppl, ps, hkv, hd))
+        tables = np.stack([self.pool.block_table(lane, ppl) for lane in lanes])
+        lengths = np.asarray(self.lengths)[lanes].astype(np.int32)
+        return {"k_pages": k_pages, "v_pages": v_pages,
+                "block_tables": jnp.asarray(tables),
+                "lengths": jnp.asarray(lengths), "lanes": lanes}

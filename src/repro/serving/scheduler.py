@@ -288,10 +288,14 @@ class ContinuousBatchingScheduler:
                 )
         self.spec_depth = spec_depth
         self.chunk_tokens = chunk_tokens
+        # The one capacity surface (:class:`repro.serving.kv.KVView`):
+        # engines expose it as ``engine.kv``; duck-typed bench/test engines
+        # without one are consumed directly (they mirror the same names).
+        self._kv = getattr(engine, "kv", None) or engine
         # Engines predating KV partitioning expose only the global n_free;
         # treat every template as drawing from one shared pool there.
-        self._free_for = getattr(engine, "n_free_for",
-                                 lambda tmpl: engine.n_free)
+        self._free_for = getattr(self._kv, "n_free_for",
+                                 lambda tmpl: self._kv.n_free)
         # template -> pending requests; insertion-ordered for round-robin
         self.queues: "OrderedDict[str, deque[Request]]" = OrderedDict()
         self.running: dict[int, Request] = {}  # lane -> request
@@ -571,11 +575,13 @@ class ContinuousBatchingScheduler:
         peek's candidate set — so one permanently-starved head lane
         cannot blind the speculator to dispatchable lanes behind it, in
         EITHER pick discipline, and declined lanes are never reordered.
-        A lane whose head prompt exceeds ``chunk_tokens`` dispatches that
-        prompt ALONE as a chunked bet; a lane whose next requests have
-        spilled KV staged is declined (the admission-time restore is
-        strictly cheaper than a re-prefill)."""
-        ben = getattr(self.engine, "lane_benefits", None)
+        A lane whose head prompt exceeds ``chunk_tokens`` dispatches the
+        whole run of consecutive oversized head prompts as one batched
+        chunked bet (one resumable part per prompt); a lane whose next
+        requests have spilled KV staged is declined (the admission-time
+        restore is strictly cheaper than a re-prefill)."""
+        ben = getattr(self._kv, "benefits",
+                      getattr(self.engine, "lane_benefits", None))
         has_spill = getattr(self.engine, "has_spill", None)
         consulted: set = set()
 
@@ -629,10 +635,21 @@ class ContinuousBatchingScheduler:
                            and len(q[0].prompt) > self.chunk_tokens)
                 strat = self._strategy_for(tmpl)
                 if chunked:
-                    # An oversized prompt dispatches alone (the chunk
-                    # pipeline is per-prompt); the strategy still gates
-                    # WHETHER the lane wants service now.
-                    take = min(strat.decide(len(q), self._producer_done), 1)
+                    # Consecutive oversized head prompts admit as ONE
+                    # batched chunk dispatch (each becomes its own
+                    # resumable part; see StagedPrefill.parts) — an
+                    # oversized burst no longer serializes one prompt
+                    # per bet.  The run stops at the first prompt that
+                    # fits a chunk so small prompts keep their ordinary
+                    # padded-batch path.
+                    n_over = 0
+                    for r in q:
+                        if len(r.prompt) > self.chunk_tokens:
+                            n_over += 1
+                        else:
+                            break
+                    take = min(strat.decide(len(q), self._producer_done),
+                               n_over, cap)
                 else:
                     take = min(strat.decide(len(q), self._producer_done),
                                len(q), cap)
@@ -691,7 +708,7 @@ class ContinuousBatchingScheduler:
         has_spill = getattr(self.engine, "has_spill", None)
         consulted: set = set()
         repush: list = []
-        while self.engine.n_free > 0:
+        while self._kv.n_free > 0:
             tmpl = self._ready.pop(select=select, block=False)
             if tmpl is None:
                 break

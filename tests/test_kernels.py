@@ -166,3 +166,144 @@ def test_ops_wrappers_fall_back_on_cpu():
     ids = jnp.arange(50) % 100
     np.testing.assert_array_equal(np.asarray(gather_op(t, ids, use_kernel=False)),
                                   np.asarray(gather_ref(t, ids)))
+
+# --------------------------------------------------------------- registry
+
+def test_registry_facade_exports():
+    """`import repro.kernels` populates the registry and re-exports every
+    public wrapper — the one entry point callers need."""
+    import repro.kernels as K
+
+    assert set(K.registry.names()) == {
+        "batched_gather", "decode_attention", "flash_attention",
+        "paged_decode_attention", "ssd_scan"}
+    for name in K.__all__:
+        assert getattr(K, name) is not None
+
+
+@pytest.mark.parametrize("name", [
+    "batched_gather", "decode_attention", "flash_attention",
+    "paged_decode_attention", "ssd_scan"])
+def test_registry_parity_sweep(name):
+    """Registry-driven ref-vs-kernel parity: every registered op's sample
+    agrees between its Pallas kernel (interpret mode) and its jnp oracle —
+    registering an op automatically buys it this gate."""
+    import repro.kernels as K
+
+    op = K.registry.get(name)
+    assert op.sample is not None, f"{name} registered without a parity sample"
+    for seed in (0, 1):
+        s = op.sample(jax.random.PRNGKey(seed))
+        ref = op.ref(*s.args, **s.common)
+        out = op.kernel(*s.args, **s.common, **s.kernel, interpret=True)
+        for r, o in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(out)):
+            if s.tol is None:
+                np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+            else:
+                np.testing.assert_allclose(
+                    np.asarray(o, np.float32), np.asarray(r, np.float32),
+                    rtol=s.tol[0], atol=s.tol[1])
+
+
+def test_registry_dispatch_policy():
+    """dispatch() falls back to the ref off-TPU without interpret, runs the
+    kernel under interpret, and respects the supports gate."""
+    from repro.kernels import registry
+    from repro.kernels.batched_gather.ref import gather_ref
+
+    table = jax.random.normal(KEY, (64, 16))
+    ids = jax.random.randint(KEY, (24,), 0, 64)
+    # 24 % min(16, 24) != 0 → supports rejects → ref even under interpret
+    out = registry.dispatch("batched_gather", (table, ids),
+                            kernel_kwargs={"bn": 16}, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(gather_ref(table, ids)))
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        registry.get("nope")
+    # conflicting re-registration is an error; identical one is a no-op
+    op = registry.get("batched_gather")
+    registry.register("batched_gather", ref=op.ref, kernel=op.kernel,
+                      supports=op.supports, sample=op.sample)
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("batched_gather", ref=lambda *a: None,
+                          kernel=lambda *a, **k: None)
+
+
+# --------------------------------------------------------- paged attention
+
+@pytest.mark.parametrize("b,hq,hkv,np_,ps,d", [
+    (2, 4, 2, 8, 16, 64),
+    (1, 8, 2, 4, 32, 64),
+    (3, 4, 4, 6, 8, 32),   # MHA, non-pow2 page count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(b, hq, hkv, np_, ps, d, dtype):
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+    from repro.kernels.paged_attention.ref import paged_decode_ref
+
+    n_pages = b * np_ + 1
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k_pages = jax.random.normal(ks[1], (n_pages, ps, hkv, d), dtype)
+    v_pages = jax.random.normal(ks[2], (n_pages, ps, hkv, d), dtype)
+    tables = jax.random.permutation(ks[3], jnp.arange(1, n_pages)
+                                    ).reshape(b, np_).astype(jnp.int32)
+    lengths = jax.random.randint(ks[4], (b,), 1, np_ * ps + 1)
+    out = paged_decode_attention_kernel(q, k_pages, v_pages, tables, lengths,
+                                        interpret=True)
+    ref = paged_decode_ref(q, k_pages, v_pages, tables, lengths)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=rtol, atol=atol)
+
+
+def test_paged_decode_matches_dense_decode():
+    """A paged cache whose tables are a permutation of a dense cache's
+    pages attends identically to the dense split-KV kernel — paging is a
+    layout change, not a numeric one."""
+    b, hq, hkv, t, d, ps = 2, 4, 2, 128, 64, 16
+    np_ = t // ps
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, t, hkv, d))
+    v = jax.random.normal(ks[2], (b, t, hkv, d))
+    lengths = jnp.array([37, 128])
+    # scatter the dense rows into a shuffled page pool
+    perm = np.asarray(jax.random.permutation(ks[3], np.arange(b * np_)))
+    k_pages = jnp.reshape(k, (b * np_, ps, hkv, d))[jnp.asarray(perm)]
+    v_pages = jnp.reshape(v, (b * np_, ps, hkv, d))[jnp.asarray(perm)]
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(b * np_)
+    tables = jnp.asarray(inv.reshape(b, np_), jnp.int32)
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+
+    paged = paged_decode_attention_kernel(q, k_pages, v_pages, tables, lengths,
+                                          interpret=True)
+    dense = decode_attention_kernel(q, k, v, lengths, bk=ps, interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_padded_table_slots_unread():
+    """Pages past ceil(length/ps) may alias ANY page (here: page 0 vs a
+    poison page) without changing the output — the masking guarantee
+    page-granular spill/restore relies on."""
+    from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+
+    b, hq, hkv, np_, ps, d = 1, 4, 2, 4, 16, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k_pages = jax.random.normal(ks[1], (np_ + 2, ps, hkv, d))
+    v_pages = jax.random.normal(ks[2], (np_ + 2, ps, hkv, d))
+    poison = np_ + 1
+    k_pages = k_pages.at[poison].set(1e9)
+    v_pages = v_pages.at[poison].set(1e9)
+    lengths = jnp.array([2 * ps - 3])  # two valid pages
+    t_pad0 = jnp.array([[1, 2, 0, 0]], jnp.int32)
+    t_poison = jnp.array([[1, 2, poison, poison]], jnp.int32)
+    out0 = paged_decode_attention_kernel(q, k_pages, v_pages, t_pad0, lengths,
+                                         interpret=True)
+    out1 = paged_decode_attention_kernel(q, k_pages, v_pages, t_poison,
+                                         lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(out1))

@@ -301,7 +301,7 @@ def test_spec_abort_requeues_and_feeds_observe_abort(setup):
     # whose speculations CAN miss.
     eng = InferenceEngine(arch, params, n_lanes=2, max_prompt_len=16,
                           max_len=48, kv_shares={"x": 2})
-    eng.lane_benefits = None  # instance attr shadows the method → optimistic
+    eng.kv.benefits = None  # instance attr shadows the method → optimistic
     strat = _AbortRecorder()
     sched = ContinuousBatchingScheduler(eng, strategy=strat, overlap=True)
     rng = np.random.default_rng(3)
@@ -326,12 +326,16 @@ def test_spec_abort_requeues_and_feeds_observe_abort(setup):
 
 
 class _SplitStubEngine:
-    """No-JAX engine with the full split dispatch surface (KVPartition
-    pools, dispatch/commit, lane_benefits) for scheduler-logic tests."""
+    """No-JAX engine with the full split dispatch surface (a KVPartition
+    exposed as ``kv``, dispatch/commit) for scheduler-logic tests."""
 
     def __init__(self, n_lanes=2, kv_shares=None):
         self.partition = KVPartition(n_lanes, kv_shares)
         self.active: dict = {}
+
+    @property
+    def kv(self):
+        return self.partition  # the KVView the scheduler binds
 
     @property
     def n_free(self):
@@ -339,9 +343,6 @@ class _SplitStubEngine:
 
     def n_free_for(self, template):
         return self.partition.n_free_for(template)
-
-    def lane_benefits(self, lane, template):
-        return self.partition.benefits(lane, template)
 
     def prefill_dispatch(self, requests, template=None):
         return dataclasses.make_dataclass("S", ["template", "requests"])(

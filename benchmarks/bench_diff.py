@@ -50,6 +50,11 @@ GATED_METRICS = {
     # actually regressed — gate it tightly, lower-is-better.
     "paged.tokens_per_s_ratio": {"allowance": 0.3},
     "paged.kv_bytes_moved_ratio": {"allowance": 0.1, "direction": "lower"},
+    # Part 8b paged decode compute: same sleep-based latency model as the
+    # motion ratio; the hard floor (>= 1.0x) and the deterministic gates
+    # (bit-identity, eviction count, fused dispatches) live in
+    # check_floors.py.
+    "paged_compute.tokens_per_s_ratio": {"allowance": 0.3},
 }
 
 

@@ -83,6 +83,19 @@ must be bit-identical (page granularity is a motion change, not a numeric
 one) and the deterministic ``kv_bytes_moved`` counters must show the
 paged engine at <= 0.5x the dense bytes (CI floors:
 ``paged.kv_bytes_moved_ratio``, ``paged.outputs_bit_identical``).
+
+Part 8b (paged decode compute) — the PR 7 tentpole A/B.  Decode itself
+now runs through the paged-attention kernel over the page pool, so the
+sim adds a per-row attention READ cost on top of Part 8's transfer cost:
+dense decode scans every active lane's full ``max_len`` backing rows per
+tick, paged decode gathers only the valid pages through the block table
+(CI floor: paged >= 1.0x dense tokens/s).  **Real side** gates three
+properties of the reduced-config engines: bit-identical outputs at equal
+page budgets, bit-identical outputs at an *oversubscribed* point
+(``n_pages`` below full provisioning, forcing >= 1 mid-decode LRU page
+eviction to host plus restore), and the fused prefill+decode megabatch
+issuing exactly one device dispatch per tick boundary
+(``paged_compute.fused_dispatches_per_boundary == 1``).
 """
 from __future__ import annotations
 
@@ -679,18 +692,50 @@ class KVMotionSimEngine(SimServeEngine):
         return lane
 
 
+class PagedComputeSimEngine(KVMotionSimEngine):
+    """Part 8b sim engine: adds the decode-side attention READ cost on top
+    of :class:`KVMotionSimEngine`'s transfer cost.  Dense decode streams
+    every active lane's full ``max_len`` KV backing rows through attention
+    each tick (the per-lane store is padded to capacity); paged decode
+    gathers only each lane's valid pages through its block table.
+    ``attn_row_cost`` is the per-row read tax paid before the tick."""
+
+    def __init__(self, *args, attn_row_cost=1.2e-5, **kw):
+        super().__init__(*args, **kw)
+        self.attn_row_cost = attn_row_cost
+
+    def decode_tick(self):
+        """Pay the attention read for every active lane, then decode."""
+        rows = 0
+        for lane in self.active:
+            if self.paged:
+                ps = self.page_size
+                r = self._rows.get(lane, ps)
+                rows += min(self.max_len, -(-r // ps) * ps)
+            else:
+                rows += self.max_len
+        time.sleep(rows * self.attn_row_cost)
+        return super().decode_tick()
+
+
 def run_paged(paged: bool, n_ticks: int, n_steady: int = 24,
-              n_long: int = 6) -> dict:
+              n_long: int = 6, attn_row_cost: float | None = None) -> dict:
     """One Part 8 sim side: the Part 7 straggler workload on a
     :class:`KVMotionSimEngine` — identical compute costs, identical
-    eviction pressure; only the KV transfer granularity differs."""
+    eviction pressure; only the KV transfer granularity differs.  With
+    ``attn_row_cost`` set, the Part 8b flavor runs instead: a
+    :class:`PagedComputeSimEngine` that also charges decode for the KV
+    rows attention reads (the paged-kernel win, not just the motion win).
+    """
     from repro.serving.engine import HostSpillPool
 
     profiles = {"steady": (1.5e-3, 1e-4), "long": (4e-3, 2e-4)}
-    eng = KVMotionSimEngine(8, profiles, kv_shares={"steady": 2},
-                            decode_base=1.5e-3,
-                            spill=HostSpillPool(max_entries=32),
-                            paged=paged)
+    cls = KVMotionSimEngine if attn_row_cost is None else PagedComputeSimEngine
+    extra = {} if attn_row_cost is None else {"attn_row_cost": attn_row_cost}
+    eng = cls(8, profiles, kv_shares={"steady": 2},
+              decode_base=1.5e-3,
+              spill=HostSpillPool(max_entries=32),
+              paged=paged, **extra)
     sched = ContinuousBatchingScheduler(eng, strategy=OneOrAll(),
                                         lane_timeout=4)
     reqs = [Request(rid=i, prompt=np.arange(6, dtype=np.int32),
@@ -766,6 +811,100 @@ def run_paged_real() -> dict:
         "paged_kv_bytes_moved": p_bytes,
         "kv_bytes_moved_ratio": p_bytes / max(d_bytes, 1),
         "outputs_bit_identical": d_out == p_out,
+    }
+
+
+def run_paged_compute_real() -> dict:
+    """Part 8b real-engine acceptance gates (reduced config, CPU): the
+    paged decode COMPUTE path, not just paged motion.
+
+    Three deterministic checks on the JAX engines:
+
+    * **equal page budgets** — the Part 8 straggler-spill workload with
+      the paged engine fully provisioned; decode now runs through the
+      paged-attention kernel path and must stay bit-identical to the
+      dense engine per request;
+    * **oversubscribed point** — ``n_pages`` below full provisioning
+      (5 pages for 2 lanes x 4 pages/lane) forces a mid-decode LRU
+      eviction to host and a later restore; outputs must STILL be
+      bit-identical and at least one page eviction must actually fire;
+    * **fused dispatch** — decode ticks that fold a staged prefill chunk
+      must issue exactly ONE jitted device program per tick boundary
+      (the megabatch gate, measured off the engine's dispatch counter).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.models.registry import get_arch
+    from repro.serving.engine import HostSpillPool, InferenceEngine
+    from repro.serving.paged_kv import PagedInferenceEngine
+
+    arch = get_arch("llama3-8b")
+    arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    params = arch.init(jax.random.PRNGKey(0))
+
+    def run(make_engine, prompts, max_new, **sched_kw):
+        eng = make_engine()
+        sched = ContinuousBatchingScheduler(eng, strategy=OneOrAll(),
+                                            **sched_kw)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            sched.submit(r)
+        sched.producer_done()
+        sched.run_until_drained()
+        return [list(r.generated) for r in reqs], eng, sched
+
+    # -- equal budgets: straggler spill workload, fully provisioned pool --
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 200, size=n).astype(np.int32)
+               for n in (5, 9, 13, 7)]
+    d_out, _, _ = run(lambda: InferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=48,
+        kv_spill=HostSpillPool(8)), prompts, 8, lane_timeout=2)
+    p_out, _, _ = run(lambda: PagedInferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=48,
+        kv_spill=HostSpillPool(8), page_size=8, prefetch_pages=1),
+        prompts, 8, lane_timeout=2)
+
+    # -- oversubscribed: n_pages=5 < 2 lanes * 4 pages/lane ---------------
+    rng = np.random.default_rng(23)
+    o_prompts = [rng.integers(1, 200, size=n).astype(np.int32)
+                 for n in (6, 5)]
+    od_out, _, _ = run(lambda: InferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=32),
+        o_prompts, 16)
+    op_out, op_eng, op_sched = run(lambda: PagedInferenceEngine(
+        arch, params, n_lanes=2, max_prompt_len=16, max_len=32,
+        page_size=8, n_pages=5, kv_spill=HostSpillPool(8),
+        prefetch_pages=1), o_prompts, 16)
+
+    # -- fused dispatch gate: deterministic manual drive ------------------
+    eng = PagedInferenceEngine(arch, params, n_lanes=2, max_prompt_len=16,
+                               max_len=32, page_size=8)
+    rng = np.random.default_rng(29)
+    r0 = Request(rid=0, prompt=rng.integers(1, 200, size=6)
+                 .astype(np.int32), max_new_tokens=12)
+    eng.admit([r0], None)
+    big = Request(rid=1, prompt=rng.integers(1, 200, size=13)
+                  .astype(np.int32), max_new_tokens=4)
+    staged = eng.prefill_dispatch([big], template=None, chunk=4)
+    per_boundary = []
+    while not staged.complete and eng.stage_chunk(staged):
+        before = eng.dispatches
+        eng.decode_tick()
+        per_boundary.append(eng.dispatches - before)
+
+    return {
+        "equal_budget_bit_identical": d_out == p_out,
+        "oversub_bit_identical": od_out == op_out,
+        "page_evictions": int(op_eng.page_evictions),
+        "oversub_kv_spilled": int(op_sched.stats.kv_spilled),
+        "oversub_kv_restored": int(op_sched.stats.kv_restored),
+        "fused_ticks": len(per_boundary),
+        "fused_folds": int(eng.fused_folds),
+        "fused_dispatches_per_boundary": int(max(per_boundary, default=0)),
     }
 
 
@@ -997,6 +1136,48 @@ def main(csv: CSV | None = None, quick: bool = False):
             f"{report['paged']['kv_bytes_moved_ratio']:.3f}", "ratio")
     csv.add("lanes.paged.bit_identical",
             str(int(real["outputs_bit_identical"])), "bool")
+
+    # -- paged decode compute: kernel path, oversubscription, fusion ------
+    def best_paged_compute(paged: bool) -> dict:
+        reps = [run_paged(paged, n_ticks, attn_row_cost=1.2e-5)
+                for _ in range(2)]
+        return max(reps, key=lambda r: r["tokens_per_s"])
+
+    pc_off = best_paged_compute(False)
+    pc_on = best_paged_compute(True)
+    real_pc = run_paged_compute_real()
+    report["paged_compute"] = {
+        "workload": f"Part 7 straggler workload, {n_ticks}-tick budget, "
+                    "plus a per-row attention READ cost (dense decode "
+                    "scans all max_len rows per active lane; paged decode "
+                    "gathers valid pages), best of 2 reps per side; "
+                    "real-engine gates on reduced llama3-8b (equal "
+                    "budgets, n_pages=5 oversubscribed point, fused "
+                    "chunk+decode drive)",
+        "dense": pc_off,
+        "paged": pc_on,
+        "tokens_per_s_ratio": (pc_on["tokens_per_s"]
+                               / max(pc_off["tokens_per_s"], 1e-9)),
+        "real_engine": real_pc,
+        "outputs_bit_identical": (real_pc["equal_budget_bit_identical"]
+                                  and real_pc["oversub_bit_identical"]),
+        "page_evictions": real_pc["page_evictions"],
+        "fused_dispatches_per_boundary":
+            real_pc["fused_dispatches_per_boundary"],
+    }
+    csv.add("lanes.paged_compute.dense.tokens_per_s",
+            f"{pc_off['tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.paged_compute.paged.tokens_per_s",
+            f"{pc_on['tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.paged_compute.tokens_per_s_ratio",
+            f"{report['paged_compute']['tokens_per_s_ratio']:.2f}", "x")
+    csv.add("lanes.paged_compute.bit_identical",
+            str(int(report["paged_compute"]["outputs_bit_identical"])),
+            "bool")
+    csv.add("lanes.paged_compute.page_evictions",
+            str(real_pc["page_evictions"]), "evictions")
+    csv.add("lanes.paged_compute.fused_dispatches",
+            str(real_pc["fused_dispatches_per_boundary"]), "per_boundary")
 
     out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
     out.parent.mkdir(exist_ok=True)

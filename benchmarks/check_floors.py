@@ -21,7 +21,12 @@ same-machine ratio with a physically-motivated minimum:
   scenario must actually restore (kv_restored > 0, hit ratio >= 0.5);
 * Part 8 — page-granular KV motion must deliver >= 1.0x tokens/s over
   lane-granular motion on the straggler workload, move <= 0.5x the KV
-  bytes on the real engine, and keep outputs bit-identical.
+  bytes on the real engine, and keep outputs bit-identical;
+* Part 8b — paged decode *compute* must deliver >= 1.0x tokens/s once
+  the attention read cost is charged, stay bit-identical at equal AND
+  oversubscribed page budgets (with >= 1 real mid-decode page eviction),
+  and the fused prefill+decode megabatch must issue exactly one device
+  dispatch per tick boundary.
 """
 from __future__ import annotations
 
@@ -129,6 +134,31 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
             "paged and dense engines must generate bit-identical outputs "
             "per request — page granularity is a motion change, not a "
             "numeric one")
+
+    pc = d["paged_compute"]
+    print("paged_compute.tokens_per_s_ratio", pc["tokens_per_s_ratio"])
+    print("paged_compute.outputs_bit_identical", pc["outputs_bit_identical"])
+    print("paged_compute.page_evictions", pc["page_evictions"],
+          "fused_dispatches_per_boundary",
+          pc["fused_dispatches_per_boundary"])
+    if pc["tokens_per_s_ratio"] < 1.0:
+        failures.append(
+            "paged decode compute must not lose tokens/s to dense decode "
+            "once the attention read cost is charged, got "
+            f"{pc['tokens_per_s_ratio']:.2f}")
+    if not pc["outputs_bit_identical"]:
+        failures.append(
+            "paged decode compute must stay bit-identical to dense decode "
+            "at equal AND oversubscribed page budgets")
+    if pc["page_evictions"] < 1:
+        failures.append(
+            "the oversubscribed run never evicted a page mid-decode "
+            "(page_evictions == 0) — page pressure was not exercised")
+    if pc["fused_dispatches_per_boundary"] != 1:
+        failures.append(
+            "the fused prefill+decode megabatch must issue exactly one "
+            "device dispatch per tick boundary, got "
+            f"{pc['fused_dispatches_per_boundary']}")
 
     return failures
 

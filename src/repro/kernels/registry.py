@@ -35,11 +35,26 @@ registering an op automatically buys it the parity gate.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Optional
 
 import jax
 
-__all__ = ["KernelOp", "OpSample", "register", "get", "names", "dispatch"]
+__all__ = ["KernelOp", "OpSample", "register", "get", "names", "dispatch",
+           "interpret_default"]
+
+
+def interpret_default() -> bool:
+    """Whether dispatch callers should default ``interpret=True``.
+
+    Controlled by the ``REPRO_KERNEL_INTERPRET`` environment variable
+    (``1``/``true``/``yes``): CI's CPU-only ``kernels`` job sets it so the
+    serving engine's decode ticks execute the Pallas kernel bodies under
+    interpret mode on every PR, instead of only on TPU.  Off by default —
+    off-TPU callers then take the pure-jnp reference path.
+    """
+    return os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower() in (
+        "1", "true", "yes")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,147 @@
+"""One-token decode reading KV directly from a paged physical pool.
+
+Mirrors :func:`repro.models.transformer.decode_step` exactly — same embed,
+norms, residuals, MLP/MoE blocks and head — while replacing the dense
+per-lane KV cache ``(L, B, S_max, Hkv, hd)`` with shared physical page
+arrays ``(L, P, page_size, Hkv, hd)`` addressed through per-request block
+tables (the vLLM PagedAttention layout).  Attention goes through
+``repro.kernels.registry.dispatch("paged_decode_attention", ...)``: the
+Pallas kernel runs on TPU (or under interpret mode), the pure-jnp paged
+reference everywhere else — the registry's one dispatch policy, so the
+serving engine never re-implements the fallback dance.
+
+Numerical contract: for lanes marked ``active``, the logits are the same
+computation the dense path performs — the gather of a lane's pages in
+logical order reproduces its dense cache rows exactly, and the masking
+(``kpos < length + 1``) admits exactly the rows dense decode admits — so
+greedy decode over paged KV is bit-identical at the token level.
+
+Physical page ``P - 1`` is a **trash page**: inactive lanes' KV scatter
+writes are routed there, so a fully-batched decode step can never corrupt
+a page owned by an active request.  Block tables never reference it, and
+the pool (``serving/paged_kv.py``) never allocates it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.models.attention import _project_qkv, _rope
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm
+from repro.models.mlp import mlp
+from repro.models.moe import moe
+from repro.models.transformer import (
+    _embed,
+    _head,
+    _layer_stacks,
+    _stack_names,
+)
+
+__all__ = ["supports_paged_decode", "paged_decode_step"]
+
+
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Whether this config's decode math can run over paged KV.
+
+    Paged decode covers full-context dense/MoE attention stacks —
+    sliding-window (ring-buffer) layers, SSM/hybrid state and
+    encoder-decoder cross KV keep the dense per-lane layout.
+    """
+    if cfg.is_encoder_decoder or cfg.attn_window > 0:
+        return False
+    return all(kind in ("dense", "moe")
+               for _name, kind, _n in _stack_names(cfg))
+
+
+def _paged_attention(p, cfg: ModelConfig, x, k_pages, v_pages, block_tables,
+                     lengths, active, *, use_kernel: bool, interpret: bool):
+    """One-token GQA attention over pages; mirrors ``decode_attention``.
+
+    ``x`` is (B, 1, d_model); ``k_pages``/``v_pages`` are one layer's
+    (P, page_size, Hkv, hd) physical pages (slot ``P - 1`` is the trash
+    page); ``block_tables`` is (B, max_pages) int32; ``lengths`` (B,)
+    int32; ``active`` (B,) bool.  The new token's KV is scattered into
+    the page backing logical position ``min(length, s_max - 1)`` for
+    active lanes (trash page otherwise), then attention reads positions
+    ``[0, length]`` through the registry's paged kernel/ref pair.
+    Returns ``(y, k_pages, v_pages)``.
+    """
+    cd = cfg.cdtype
+    b = x.shape[0]
+    n_phys, ps = k_pages.shape[0], k_pages.shape[1]
+    s_max = block_tables.shape[1] * ps
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    if cfg.rope != "none":
+        rope_pos = lengths[:, None]  # (B, 1) true positions
+        if cfg.rope == "mrope":
+            rope_pos = jnp.broadcast_to(rope_pos[None], (3, b, 1))
+        q, k_new = _rope(cfg, q, k_new, rope_pos)
+
+    # Same write position as the dense path (min(lengths, s_max-1)),
+    # translated to (physical page, in-page offset).  Inactive lanes write
+    # the trash page so the batched scatter cannot clobber live pages.
+    slot = jnp.minimum(lengths, s_max - 1)
+    logical = slot // ps
+    phys = jnp.where(active, block_tables[jnp.arange(b), logical], n_phys - 1)
+    off = slot % ps
+    k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype))
+
+    # Valid rows per lane: [0, length] inclusive of the token just written
+    # (identical to the dense mask idx <= min(lengths, s_max-1)); inactive
+    # lanes attend nothing and their output rows are discarded.
+    att_len = jnp.where(active, jnp.minimum(lengths + 1, s_max), 0)
+    out = registry.dispatch(
+        "paged_decode_attention",
+        (q[:, 0], k_pages, v_pages, block_tables, att_len),
+        use_kernel=use_kernel, interpret=interpret)
+    out = out.reshape(b, 1, cfg.n_heads, cfg.hd)
+    y = jnp.einsum("bshd,hdm->bsm", out.astype(cd), p["wo"].astype(cd),
+                   preferred_element_type=jnp.float32).astype(cd)
+    return y, k_pages, v_pages
+
+
+def _paged_block_decode(p, cfg: ModelConfig, kind: str, x, k_pages, v_pages,
+                        block_tables, lengths, active, *,
+                        use_kernel: bool, interpret: bool):
+    """One transformer block's decode step over paged KV (dense/moe only)."""
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    a, k_pages, v_pages = _paged_attention(
+        p["attn"], cfg, h, k_pages, v_pages, block_tables, lengths, active,
+        use_kernel=use_kernel, interpret=interpret)
+    x = x + a
+    h2 = apply_norm(cfg.norm, p["ln2"], x)
+    y = moe(p["moe"], cfg, h2)[0] if kind == "moe" else mlp(p["mlp"], cfg, h2)
+    return x + y, k_pages, v_pages
+
+
+def paged_decode_step(cfg: ModelConfig, params, token, cache: dict,
+                      block_tables, lengths, active, *,
+                      use_kernel: bool = True, interpret: bool = False):
+    """Batched one-token decode over paged KV.
+
+    ``token``/``lengths`` are (B,) int32, ``active`` (B,) bool; ``cache``
+    is ``{stack: {"k": (L, P, ps, Hkv, hd), "v": ...}}`` and
+    ``block_tables`` (B, max_pages) int32 shared by every layer.  Returns
+    ``(logits (B, V), new_cache)`` — the same contract as
+    :func:`~repro.models.transformer.decode_step`, over pages.
+    """
+    x = _embed(cfg, params, token[:, None])
+    new_caches = {}
+    for (name, kind, _n), (stacked, _k2, _n2) in zip(
+        _stack_names(cfg), _layer_stacks(cfg, params)
+    ):
+        def body(h, inp, kind=kind):
+            lp, slc = inp
+            h, kp, vp = _paged_block_decode(
+                lp, cfg, kind, h, slc["k"], slc["v"], block_tables, lengths,
+                active, use_kernel=use_kernel, interpret=interpret)
+            return h, {"k": kp, "v": vp}
+
+        x, new_c = jax.lax.scan(body, x, (stacked, cache[name]))
+        new_caches[name] = new_c
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, new_caches

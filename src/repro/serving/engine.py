@@ -352,6 +352,13 @@ class InferenceEngine:
         # how many are valid); the paged engine moves only valid pages —
         # this counter is what the Part 8 A/B compares.
         self.kv_bytes_moved = 0
+        # Jitted model-step device programs launched (decode ticks, prefill
+        # batches, chunk extends, fused ticks).  The fused-dispatch gate
+        # asserts a paged decode tick that also folds a staged prefill
+        # chunk raises this by exactly 1 — one device program, not two.
+        # Lock-guarded: the speculative prefill thread dispatches too.
+        self.dispatches = 0
+        self._dispatch_lock = threading.Lock()
         # template -> pinned (batch, prompt) prefill bucket: each template
         # converges on ONE compiled prefill shape (monotone max of what it
         # has needed), so a template burst stops recompiling per batch size.
@@ -397,6 +404,11 @@ class InferenceEngine:
             return logits[-1], cache, lengths
 
         self._extend = _extend
+
+    def _count_dispatch(self, n: int = 1) -> None:
+        """Record ``n`` jitted model-step dispatches (thread-safe)."""
+        with self._dispatch_lock:
+            self.dispatches += n
 
     # ------------------------------------------------------------- admission
     def admit(self, requests: Sequence, template: Optional[str] = None
@@ -488,6 +500,7 @@ class InferenceEngine:
         first, cache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(plens), self.max_len
         )
+        self._count_dispatch()
         return StagedPrefill(template, list(requests), first, cache,
                              plens, (bsz, plen))
 
@@ -509,6 +522,7 @@ class InferenceEngine:
         first, cache = self._prefill(
             self.params, jnp.asarray(prompt[None, :c0]),
             jnp.asarray([c0], jnp.int32), self.max_len)
+        self._count_dispatch()
         pending = [prompt[None, i: i + chunk] for i in range(c0, S, chunk)]
         return StagedPrefill(
             template, [r], None if pending else first, cache,
@@ -540,6 +554,7 @@ class InferenceEngine:
         toks = staged.pending.pop(0)
         logits, staged.cache, staged.lengths_dev = self._extend(
             self.params, staged.cache, jnp.asarray(toks), staged.lengths_dev)
+        self._count_dispatch()
         if not staged.pending:
             staged.first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return staged.complete
@@ -607,6 +622,7 @@ class InferenceEngine:
         nxt, self.cache = self._decode(
             self.params, self.last_token, self.cache, self.lengths
         )
+        self._count_dispatch()
         self.lengths = jnp.where(
             jnp.asarray(self.active), jnp.minimum(self.lengths + 1, self.max_len - 1),
             self.lengths,

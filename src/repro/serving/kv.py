@@ -16,7 +16,11 @@ back to the engine itself, so duck-typed bench/test engines keep working
 unchanged.
 
 The contract (all in *allocation units* — lanes today; a paged backend
-reports lane-equivalents bounded by its page budget):
+reports lane-equivalents bounded by its instantaneous page budget, and
+under oversubscription ``n_free_for`` additionally subtracts the pages
+still owed to other templates' quotas — a reservation is a floor on
+*pages*, not just lanes, so a shared-pool burst can never starve a
+reserved template's page budget):
 
 * ``n_free`` — total free units.
 * ``n_free_for(template)`` — units ``template`` may allocate right now

@@ -1,4 +1,4 @@
-"""Paged KV cache: fixed-size pages, block tables, page-granular motion.
+"""Paged KV cache: fixed-size pages, block tables, paged decode compute.
 
 The dense engine treats a lane as the unit of KV residency: spill copies
 all ``max_len`` rows to host, restore copies them all back, commit splices
@@ -14,33 +14,47 @@ vLLM-style:
 * :class:`PagedKVView` — the :class:`~repro.serving.kv.KVView` the
   scheduler consumes: lane allocation delegated to the dense
   :class:`~repro.serving.engine.KVPartition` (reservations keep working),
-  capacity additionally min-bounded by the page budget.
+  capacity additionally min-bounded by the page budget, and — under
+  paged compute — per-template lane reservations translated into **page
+  quotas** (a template's guaranteed share of physical pages).
 * :class:`PagedInferenceEngine` — the serving engine at page granularity.
-  Decode compute keeps the dense per-lane cache (so paged and dense
-  decode are *bit-identical* per request — same jitted ``decode_step``
-  on the same rows), with pages mapped to identity frames
-  ``lane * pages_per_lane + j``; what changes is every KV *movement*:
+  For eligible architectures (:func:`~repro.models.paged_decode.
+  supports_paged_decode` — full-context dense/MoE stacks) the dense
+  per-lane backing store is **dropped**: KV lives only in shared physical
+  page arrays ``(L, n_pages + 1, page_size, Hkv, hd)`` and every decode
+  tick dispatches :func:`~repro.models.paged_decode.paged_decode_step`,
+  whose attention goes through the registry's ``paged_decode_attention``
+  kernel/ref pair (Pallas on TPU or under interpret mode, pure-jnp ref
+  elsewhere).  Outputs stay bit-identical to the dense engine at the
+  greedy-token level.  Three consequences:
 
-  - **spill** copies only the ``ceil(length / page_size)`` valid pages;
-  - **restore** splices the first ``prefetch_pages`` pages synchronously
-    and queues the tail, which :meth:`~PagedInferenceEngine.decode_tick`
-    flushes before the next decode step — resume-after-prefetch, with
-    the tail transfer overlapping scheduler work between ticks;
-  - **commit** splices only the pages the batch's prompts actually fill;
-  - **growth** extends a lane's block table one page at a time as decode
-    crosses page boundaries.
+  - **oversubscription** — ``n_pages`` decouples from
+    ``n_lanes * max_len / page_size``: an under-provisioned pool admits
+    on instantaneous page budgets, and mid-decode growth past the pool's
+    capacity evicts the least-recently-touched lane's KV to the host
+    spill pool (``page_evictions``), notifying the scheduler through
+    ``on_lane_evicted`` / :meth:`~PagedInferenceEngine.drain_evictions`
+    so the victim re-queues and later restores;
+  - **spill/restore/commit** move pages through arbitrary physical
+    frames (no identity mapping), still page-granular: spill copies only
+    the ``ceil(length / page_size)`` valid pages, restore splices the
+    first ``prefetch_pages`` now and queues the tail, commit splices
+    only the pages each prompt actually fills;
+  - **fused megabatch dispatch** — :meth:`~PagedInferenceEngine.
+    stage_chunk` lets the scheduler fold the next staged chunked-prefill
+    chunk *into* the decode tick's device program: one dispatch covers
+    the decode batch (over shared block tables) plus the chunk's scan,
+    so overlap mode stops paying two dispatches per tick boundary.
 
-  Stale rows past a request's valid pages are never read: attention masks
-  ``kpos < length`` and decode writes position ``length`` before ever
-  attending it, which is the argument that page-granular motion cannot
-  change any output.  :attr:`~repro.serving.engine.InferenceEngine.
-  kv_bytes_moved` counts both engines' motion; the Part 8 benchmark
-  compares them.
+  Architectures paged decode cannot cover (sliding-window, SSM/hybrid
+  state) keep PR 6's dense-compute mode: identity page frames
+  (``lane * pages_per_lane + j``), page-granular *motion* only, and the
+  ordinary dense decode step — bit-identical by construction.
 
-The matching device-compute story is the Pallas paged decode-attention
-kernel (:mod:`repro.kernels.paged_attention`), which consumes exactly the
-``(k_pages, v_pages, block_tables, lengths)`` layout
-:meth:`PagedInferenceEngine.paged_view` exposes.
+Stale rows past a request's valid pages are never read: attention masks
+``kpos < length + 1`` and decode writes position ``length`` before ever
+attending it; inactive lanes scatter into a reserved trash page (physical
+slot ``n_pages``) that no block table references.
 """
 from __future__ import annotations
 
@@ -52,6 +66,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import registry
+from repro.models.paged_decode import paged_decode_step, supports_paged_decode
 from repro.serving.engine import InferenceEngine, KVPartition, StagedPrefill
 
 __all__ = ["PagedInferenceEngine", "PagedKVPool", "PagedKVView"]
@@ -62,14 +78,14 @@ class PagedKVPool:
 
     Pure bookkeeping: the pool tracks which physical page backs each
     logical slot of each table, not the page contents (those live in
-    whatever array the caller pages — the engine's lane cache, a host
+    whatever array the caller pages — the engine's page arrays, a host
     buffer).  ``alloc_table(key, pages=...)`` claims *specific* free
-    pages (the engine's identity frames); ``alloc_table(key, n=...)``
-    takes any ``n`` free pages, evicting least-recently-used unpinned
-    tables to :attr:`host_tables` (or the ``on_evict`` callback) when the
-    free list runs dry.  Pages are refcounted so :meth:`share` can alias
-    a prefix across tables; a page returns to the free list only when its
-    last table drops it.
+    pages (the dense-compute engine's identity frames);
+    ``alloc_table(key, n=...)`` takes any ``n`` free pages, evicting
+    least-recently-used unpinned tables to :attr:`host_tables` (or the
+    ``on_evict`` callback) when the free list runs dry.  Pages are
+    refcounted so :meth:`share` can alias a prefix across tables; a page
+    returns to the free list only when its last table drops it.
     """
 
     def __init__(self, n_pages: int, page_size: int,
@@ -105,6 +121,16 @@ class PagedKVPool:
         """``key``'s physical pages in logical-slot order (LRU-touching)."""
         self._tables.move_to_end(key)
         return tuple(self._tables[key])
+
+    def pages(self, key) -> tuple[int, ...]:
+        """``key``'s physical pages WITHOUT touching LRU order — for bulk
+        snapshots (device block tables each tick) that must not mask the
+        recency signal eviction relies on."""
+        return tuple(self._tables[key])
+
+    def lru_tables(self) -> list:
+        """Table keys from least- to most-recently touched (victim scan)."""
+        return list(self._tables)
 
     def block_table(self, key, max_pages: int) -> np.ndarray:
         """``key``'s table as a fixed-width int32 row, padded with page 0
@@ -208,22 +234,43 @@ class PagedKVView:
     and the free-lane snapshot all delegate to the dense
     :class:`KVPartition` — but every capacity read is additionally
     min-bounded by the page budget: a free lane is only admissible if the
-    pool could still back a full lane's worth of pages for it.  With the
-    engine's identity-frame pool (``n_pages = n_lanes * pages_per_lane``)
-    the bound is never the binding constraint, so paged admission behaves
-    exactly like dense admission; an under-provisioned pool degrades
-    gracefully by admitting less.
+    pool could still back a full lane's worth of pages for it.  With a
+    fully-provisioned pool (``n_pages = n_lanes * pages_per_lane``) the
+    bound is never the binding constraint, so paged admission behaves
+    exactly like dense admission; an **oversubscribed** pool
+    (``n_pages`` below that) admits on instantaneous free-page budgets
+    and relies on the engine's mid-decode eviction for growth pressure.
+
+    ``page_quota`` (template → guaranteed pages, derived from the
+    partition's lane shares) carries reservations to page granularity:
+    :meth:`n_free_for` subtracts every OTHER template's unmet quota from
+    the free-page budget before bounding, so a shared-pool burst cannot
+    consume the pages a reserved template is owed.  ``used_pages`` is the
+    engine callback reporting a template's currently-held pages.
     """
 
     def __init__(self, partition: KVPartition, pool: PagedKVPool,
-                 pages_per_lane: int):
+                 pages_per_lane: int,
+                 page_quota: Optional[dict] = None,
+                 used_pages: Optional[Callable[[Optional[str]], int]] = None):
         self.partition = partition
         self.pool = pool
         self.pages_per_lane = pages_per_lane
+        self.page_quota = dict(page_quota or {})
+        self.used_pages = used_pages
 
     @property
     def _page_bound(self) -> int:
         return self.pool.n_free_pages // self.pages_per_lane
+
+    def _quota_bound(self, template: Optional[str]) -> int:
+        """Free-lane bound after honoring other templates' page quotas."""
+        free = self.pool.n_free_pages
+        if self.page_quota and self.used_pages is not None:
+            owed = sum(max(0, q - self.used_pages(t))
+                       for t, q in self.page_quota.items() if t != template)
+            free = max(0, free - owed)
+        return free // self.pages_per_lane
 
     @property
     def n_free(self) -> int:
@@ -231,8 +278,10 @@ class PagedKVView:
         return min(self.partition.n_free, self._page_bound)
 
     def n_free_for(self, template: Optional[str]) -> int:
-        """Free lanes ``template`` may take, page-budget-bounded."""
-        return min(self.partition.n_free_for(template), self._page_bound)
+        """Free lanes ``template`` may take, page-budget- and
+        page-quota-bounded."""
+        return min(self.partition.n_free_for(template),
+                   self._quota_bound(template))
 
     def alloc(self, template: Optional[str]) -> int:
         """Take one lane for ``template`` (reserved pool first)."""
@@ -254,15 +303,24 @@ class PagedKVView:
 
 @dataclasses.dataclass
 class PagedInferenceEngine(InferenceEngine):
-    """Serving engine with page-granular KV motion (see module docstring).
+    """Serving engine with paged KV compute + motion (module docstring).
 
     ``page_size`` must divide ``max_len``; ``prefetch_pages`` is how many
     pages a restore splices synchronously before resuming decode (the
-    tail streams in before the next tick).
+    tail streams in before the next tick).  ``n_pages`` sizes the
+    physical pool — default ``n_lanes * max_len / page_size`` (full
+    provisioning); smaller values oversubscribe (paged-compute archs
+    only) and lean on mid-decode eviction.  ``use_kernel``/``interpret``
+    feed the registry dispatch policy for the paged attention op;
+    ``interpret=None`` reads ``REPRO_KERNEL_INTERPRET`` (the CI kernels
+    job's switch).
     """
 
     page_size: int = 16
     prefetch_pages: int = 2
+    n_pages: Optional[int] = None
+    use_kernel: bool = True
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         super().__post_init__()
@@ -271,13 +329,85 @@ class PagedInferenceEngine(InferenceEngine):
         if self.prefetch_pages < 1:
             raise ValueError("prefetch_pages must be >= 1")
         self.pages_per_lane = self.max_len // self.page_size
-        self.pool = PagedKVPool(self.n_lanes * self.pages_per_lane,
-                                self.page_size)
+        self.paged_compute = supports_paged_decode(self.arch.cfg)
+        full = self.n_lanes * self.pages_per_lane
+        if self.n_pages is None:
+            self.n_pages = full
+        if self.n_pages != full and not self.paged_compute:
+            raise ValueError(
+                "n_pages decoupled from n_lanes * max_len / page_size needs "
+                "a paged-decode-capable arch (dense/MoE, full context)")
+        if self.n_pages < self.pages_per_lane:
+            raise ValueError(
+                "n_pages must cover at least one lane "
+                f"({self.pages_per_lane} pages)")
+        self.pool = PagedKVPool(self.n_pages, self.page_size)
+        quota = None
+        if self.paged_compute and self.partition.shares:
+            quota = {t: k * self.n_pages // self.n_lanes
+                     for t, k in self.partition.shares.items()}
         self._kv_view = PagedKVView(self.partition, self.pool,
-                                    self.pages_per_lane)
+                                    self.pages_per_lane, page_quota=quota,
+                                    used_pages=self._pages_used_by)
         # lane -> (host rows pytree, start_row, stop_row): restore tails
         # not yet on device; flushed before the next decode step.
         self._pending_restore: dict[int, tuple] = {}
+        # lane -> (request key, template): identity for mid-decode eviction.
+        self._lane_meta: dict[int, tuple] = {}
+        # (lane, key, template, spilled) records for drain_evictions();
+        # a registered on_lane_evicted callback bypasses the list.
+        self._evicted: list[tuple] = []
+        self.on_lane_evicted: Optional[Callable] = None
+        self.page_evictions = 0   # lanes evicted by page pressure
+        self.fused_folds = 0      # prefill chunks folded into decode ticks
+        self._fused_chunk: Optional[StagedPrefill] = None
+        if not self.paged_compute:
+            return
+        # Drop the dense per-lane backing store: KV lives in shared page
+        # arrays (L, n_pages + 1, page_size, Hkv, hd).  Slot n_pages is
+        # the trash page inactive lanes scatter into; block tables never
+        # reference it and the pool never allocates it.
+        P, ps = self.n_pages + 1, self.page_size
+
+        def pageify(a):
+            return jnp.zeros((a.shape[0], P, ps) + a.shape[3:], a.dtype)
+
+        self.cache = jax.tree_util.tree_map(pageify, self.cache)
+        self._interpret = (self.interpret if self.interpret is not None
+                           else registry.interpret_default())
+        cfg, uk, itp = self.arch.cfg, self.use_kernel, self._interpret
+
+        @jax.jit
+        def _paged(params, token, cache, lengths, tables, active):
+            logits, new_cache = paged_decode_step(
+                cfg, params, token, cache, tables, lengths, active,
+                use_kernel=uk, interpret=itp)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._paged_decode = _paged
+
+        @jax.jit
+        def _fused(params, token, cache, lengths, tables, active,
+                   ctoks, ccache, clens):
+            # Chunk side: the same lax.scan of decode_step the standalone
+            # _extend performs, over the staged (dense, batch-1) cache —
+            # fused into ONE device program with the paged decode batch.
+            def step(carry, tok):
+                c, ln = carry
+                logits, c = self.arch.decode_step(params, tok, c, ln)
+                return (c, ln + 1), logits
+
+            (ccache, clens), clogits = jax.lax.scan(
+                step, (ccache, clens), jnp.swapaxes(ctoks, 0, 1))
+            cfirst = jnp.argmax(clogits[-1], axis=-1).astype(jnp.int32)
+            logits, new_cache = paged_decode_step(
+                cfg, params, token, cache, tables, lengths, active,
+                use_kernel=uk, interpret=itp)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache, cfirst, ccache, clens
+
+        self._fused = _fused
 
     @property
     def kv(self) -> PagedKVView:
@@ -287,8 +417,8 @@ class PagedInferenceEngine(InferenceEngine):
     # ---------------------------------------------------------- page frames
     def _frames(self, lane: int, start: int, stop: int) -> list[int]:
         """Identity physical frames for ``lane``'s logical pages
-        [start, stop) — page ``j`` of lane ``L`` lives in device frame
-        ``L * pages_per_lane + j`` (decode compute stays dense)."""
+        [start, stop) — dense-compute mode only, where page ``j`` of lane
+        ``L`` lives in device frame ``L * pages_per_lane + j``."""
         base = lane * self.pages_per_lane
         return [base + j for j in range(start, stop)]
 
@@ -297,25 +427,80 @@ class PagedInferenceEngine(InferenceEngine):
         # SSM/conv state leaves do not and always move whole.
         return dst.ndim >= 3 and dst.shape[2] == self.max_len
 
-    def _open_table(self, lane: int, length: int) -> None:
+    def _pages_used_by(self, template: Optional[str]) -> int:
+        """Physical pages currently held by ``template``'s lanes (the
+        page-quota accounting hook the :class:`PagedKVView` consults)."""
+        return sum(len(self.pool.pages(lane))
+                   for lane, (_key, t) in self._lane_meta.items()
+                   if t == template and self.pool.has_table(lane))
+
+    def _open_table(self, lane: int, length: int, avoid=frozenset()) -> None:
         """(Re)create ``lane``'s pinned block table covering ``length``
-        written rows plus the next write position."""
+        written rows plus the next write position.  Paged-compute mode
+        takes any free frames (evicting other lanes under pressure, never
+        one in ``avoid``); dense-compute mode uses identity frames."""
         n = min(self.pages_per_lane, length // self.page_size + 1)
-        self.pool.alloc_table(lane, pages=self._frames(lane, 0, n))
+        if self.paged_compute:
+            self._make_room(n, avoid=set(avoid) | {lane})
+            self.pool.alloc_table(lane, n=n)
+        else:
+            self.pool.alloc_table(lane, pages=self._frames(lane, 0, n))
         self.pool.pin(lane)
 
     def _ensure_pages(self, lane: int, n: int) -> None:
         n = min(n, self.pages_per_lane)
         have = len(self.pool.table(lane))
         if n > have:
-            self.pool.extend_table(lane, pages=self._frames(lane, have, n))
+            if self.paged_compute:
+                self._make_room(n - have, avoid={lane})
+                self.pool.extend_table(lane, n=n - have)
+            else:
+                self.pool.extend_table(lane, pages=self._frames(lane, have, n))
+
+    # --------------------------------------------------- page-pressure evict
+    def _make_room(self, need: int, avoid=frozenset()) -> None:
+        """Free pages until ``need`` are available, spilling the least-
+        recently-touched lanes (their decode resumes after a restore) —
+        the oversubscription pressure valve.  Raises when every table
+        belongs to ``avoid`` (the requesting lanes themselves)."""
+        while self.pool.n_free_pages < need:
+            victim = next((k for k in self.pool.lru_tables()
+                           if k not in avoid), None)
+            if victim is None:
+                raise RuntimeError(
+                    "KV pool out of pages: every table is pinned by the "
+                    "lanes requesting growth")
+            self._evict_lane(int(victim))
+
+    def _evict_lane(self, lane: int) -> None:
+        """Spill one active lane to host under page pressure and record
+        the eviction for the scheduler (callback or drain list)."""
+        key, template = self._lane_meta.get(lane, (lane, None))
+        spilled = self.spill(lane, key, template)
+        self.page_evictions += 1
+        cb = self.on_lane_evicted
+        if cb is not None:
+            cb(lane, key, template, spilled)
+        else:
+            self._evicted.append((lane, key, template, spilled))
+
+    def drain_evictions(self) -> list[tuple]:
+        """Return and clear ``(lane, key, template, spilled)`` records of
+        page-pressure evictions since the last drain.  Schedulers that
+        registered :attr:`on_lane_evicted` are notified synchronously at
+        eviction time instead (before the lane can be reused) and never
+        see these."""
+        out, self._evicted = self._evicted, []
+        return out
 
     # ------------------------------------------------------------ admission
     def commit_prefill(self, staged: StagedPrefill,
                        n: Optional[int] = None) -> tuple[int, int]:
-        """Dense commit + a pinned identity-frame block table per lane."""
+        """Commit + a pinned block table per lane (identity frames in
+        dense-compute mode; paged-compute opens tables inside the splice,
+        which needs them before any page write)."""
         shape = super().commit_prefill(staged, n)
-        if staged.parts:
+        if self.paged_compute or staged.parts:
             return shape  # parts recursed through here and built tables
         k = len(staged.requests) if n is None else min(n, len(staged.requests))
         for r, plen in zip(staged.requests[:k], staged.plens[:k]):
@@ -323,44 +508,146 @@ class PagedInferenceEngine(InferenceEngine):
         return shape
 
     def _insert_staged(self, staged: StagedPrefill, lanes: list[int]) -> None:
-        """Page-granular commit splice: move only the pages the batch's
-        prompts fill (bucket-max, still ≤ the dense full-lane copy)."""
+        """Page-granular commit splice.
+
+        Paged-compute: per-request tables are opened (never evicting a
+        batch-mate) and exactly the pages each prompt fills are scattered
+        into physical frames.  Dense-compute keeps PR 6's bucket-max row
+        splice into the per-lane cache.
+        """
         ps = self.page_size
-        plen = int(np.max(staged.plens[: len(lanes)]))
-        n_rows = min(self.max_len, max(1, self.pool.pages_for(plen)) * ps)
-        idx = jnp.asarray(lanes)
+        if not self.paged_compute:
+            plen = int(np.max(staged.plens[: len(lanes)]))
+            n_rows = min(self.max_len, max(1, self.pool.pages_for(plen)) * ps)
+            idx = jnp.asarray(lanes)
 
-        def one(dst, src):
-            take = src[:, : len(lanes)]
-            if self._seq_leaf(dst):
-                return dst.at[:, idx, :n_rows].set(
-                    take[:, :, :n_rows].astype(dst.dtype))
-            return dst.at[:, idx].set(take.astype(dst.dtype))
+            def one(dst, src):
+                take = src[:, : len(lanes)]
+                if self._seq_leaf(dst):
+                    return dst.at[:, idx, :n_rows].set(
+                        take[:, :, :n_rows].astype(dst.dtype))
+                return dst.at[:, idx].set(take.astype(dst.dtype))
 
-        self.cache = jax.tree_util.tree_map(one, self.cache, staged.cache)
-        for a in jax.tree_util.tree_leaves(staged.cache):
-            rows = n_rows if self._seq_leaf(a) else a.shape[2] if a.ndim >= 3 else 1
-            per_row = int(np.prod(a.shape[3:])) if a.ndim >= 3 else int(np.prod(a.shape[2:]))
-            self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
-                                    * len(lanes) * rows * per_row)
+            self.cache = jax.tree_util.tree_map(one, self.cache, staged.cache)
+            for a in jax.tree_util.tree_leaves(staged.cache):
+                rows = n_rows if self._seq_leaf(a) else a.shape[2] if a.ndim >= 3 else 1
+                per_row = int(np.prod(a.shape[3:])) if a.ndim >= 3 else int(np.prod(a.shape[2:]))
+                self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                        * len(lanes) * rows * per_row)
+            return
+        avoid = set(lanes)
+        for i, lane in enumerate(lanes):
+            r = staged.requests[i]
+            plen = int(staged.plens[i])
+            self._open_table(lane, plen, avoid=avoid)
+            self._lane_meta[lane] = (getattr(r, "rid", lane), staged.template)
+            npg = max(1, self.pool.pages_for(plen))
+            n_rows = npg * ps
+            idx = jnp.asarray(self.pool.pages(lane)[:npg])
+
+            def one(dst, src, i=i, idx=idx, npg=npg, n_rows=n_rows):
+                s = src[:, i, :n_rows]
+                return dst.at[:, idx].set(
+                    s.reshape(s.shape[0], npg, ps, *s.shape[2:])
+                    .astype(dst.dtype))
+
+            self.cache = jax.tree_util.tree_map(one, self.cache, staged.cache)
+            for a in jax.tree_util.tree_leaves(staged.cache):
+                self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                        * n_rows * int(np.prod(a.shape[3:])))
+
+    # ------------------------------------------------------- fused dispatch
+    def stage_chunk(self, staged: StagedPrefill) -> bool:
+        """Adopt ``staged``'s next pending chunk into this tick's decode
+        dispatch (fused megabatch): the chunk's decode-path scan and the
+        paged decode batch compile into ONE device program, so overlap
+        mode pays one dispatch per tick boundary instead of two.  Returns
+        ``False`` when fusion does not apply (dense-compute mode, a chunk
+        already staged, nothing pending, or no active decode batch to
+        fuse with) — the caller then advances the chunk on its own.
+        """
+        if not self.paged_compute or self._fused_chunk is not None:
+            return False
+        part = staged
+        if staged.parts:
+            part = next((p for p in staged.parts if not p.complete), None)
+        if part is None or part.complete or not part.pending:
+            return False
+        if not self.active.any():
+            return False
+        self._fused_chunk = part
+        return True
 
     # ----------------------------------------------------------------- tick
     def decode_tick(self) -> dict[int, int]:
-        """Flush pending restore tails, grow block tables across page
-        boundaries, then run the ordinary dense decode step."""
+        """One paged decode step: flush restore tails, grow block tables
+        (evicting under page pressure), then dispatch the paged kernel —
+        fused with any staged prefill chunk.  Dense-compute mode runs the
+        ordinary dense decode step instead."""
+        if not self.paged_compute:
+            self._flush_restores()
+            if self.active.any():
+                ln = np.asarray(self.lengths)
+                for lane in np.nonzero(self.active)[0]:
+                    # decode writes position `length` this tick: its page
+                    # must be in the table before the write.
+                    self._ensure_pages(int(lane),
+                                       int(ln[lane]) // self.page_size + 1)
+            return super().decode_tick()
         self._flush_restores()
-        if self.active.any():
-            ln = np.asarray(self.lengths)
-            for lane in np.nonzero(self.active)[0]:
-                # decode writes position `length` this tick: its page must
-                # be in the table before the write.
-                self._ensure_pages(int(lane),
-                                   int(ln[lane]) // self.page_size + 1)
-        return super().decode_tick()
+        part, self._fused_chunk = self._fused_chunk, None
+        if not self.active.any():
+            if part is not None:  # nothing to fuse with: plain resume
+                self.prefill_resume(part)
+            return {}
+        for lane in np.nonzero(self.active)[0]:
+            lane = int(lane)
+            if not self.active[lane]:
+                continue  # evicted by an earlier lane's growth this tick
+            length = int(np.asarray(self.lengths)[lane])
+            self._ensure_pages(lane, length // self.page_size + 1)
+        if not self.active.any():  # growth pressure evicted every lane
+            if part is not None:
+                self.prefill_resume(part)
+            return {}
+        tables = self._device_tables()
+        active_dev = jnp.asarray(self.active)
+        if part is None:
+            nxt, self.cache = self._paged_decode(
+                self.params, self.last_token, self.cache, self.lengths,
+                tables, active_dev)
+        else:
+            toks = part.pending.pop(0)
+            nxt, self.cache, cfirst, part.cache, part.lengths_dev = \
+                self._fused(self.params, self.last_token, self.cache,
+                            self.lengths, tables, active_dev,
+                            jnp.asarray(toks), part.cache, part.lengths_dev)
+            if not part.pending:
+                part.first = cfirst
+            self.fused_folds += 1
+        self._count_dispatch()
+        self.lengths = jnp.where(
+            jnp.asarray(self.active),
+            jnp.minimum(self.lengths + 1, self.max_len - 1), self.lengths)
+        self.last_token = nxt
+        self.decode_steps += 1
+        out = np.asarray(nxt)
+        return {lane: int(out[lane]) for lane in np.nonzero(self.active)[0]}
+
+    def _device_tables(self):
+        """All lanes' block tables as one (n_lanes, pages_per_lane) int32
+        device array (tableless lanes read page 0, masked by length)."""
+        tabs = np.zeros((self.n_lanes, self.pages_per_lane), np.int32)
+        for lane in range(self.n_lanes):
+            if self.pool.has_table(lane):
+                pages = self.pool.pages(lane)
+                tabs[lane, : len(pages)] = pages
+        return jnp.asarray(tabs)
 
     def retire(self, lane: int) -> None:
         """Free the lane's block table along with the lane."""
         self._pending_restore.pop(lane, None)
+        self._lane_meta.pop(lane, None)
         if self.pool.has_table(lane):
             self.pool.free_table(lane)
         super().retire(lane)
@@ -368,19 +655,31 @@ class PagedInferenceEngine(InferenceEngine):
     # ---------------------------------------------------------------- spill
     def spill(self, lane: int, key, template: Optional[str] = None) -> bool:
         """Stage only the lane's VALID pages to host (vs the dense
-        engine's full ``max_len`` rows) — the tentpole's bytes win."""
+        engine's full ``max_len`` rows) — the page-granularity bytes win.
+        Paged-compute gathers the pages from their physical frames; the
+        host entry layout (contiguous rows) is shared with dense mode."""
         pool = self.partition.spill
         if pool is None or not pool.accepts(template):
             self.retire(lane)
             return False
         self._flush_restores(lane)  # device rows must be whole before copy
         length = int(np.asarray(self.lengths)[lane])
-        n_rows = min(self.max_len,
-                     max(1, self.pool.pages_for(length)) * self.page_size)
-        entry = {
-            "rows": jax.tree_util.tree_map(
+        ps = self.page_size
+        npg = max(1, self.pool.pages_for(length))
+        n_rows = min(self.max_len, npg * ps)
+        if self.paged_compute:
+            idx = jnp.asarray(self.pool.pages(lane)[:npg])
+            rows = jax.tree_util.tree_map(
+                lambda a: np.asarray(
+                    a[:, idx].reshape(a.shape[0], npg * ps, *a.shape[3:])
+                    [:, :n_rows]),
+                self.cache)
+        else:
+            rows = jax.tree_util.tree_map(
                 lambda a: np.asarray(a[:, lane, :n_rows])
-                if self._seq_leaf(a) else np.asarray(a[:, lane]), self.cache),
+                if self._seq_leaf(a) else np.asarray(a[:, lane]), self.cache)
+        entry = {
+            "rows": rows,
             "n_rows": n_rows,
             "length": length,
             "last": int(np.asarray(self.last_token)[lane]),
@@ -394,30 +693,45 @@ class PagedInferenceEngine(InferenceEngine):
     def try_restore(self, key, template: Optional[str] = None) -> Optional[int]:
         """Restore spilled pages: first ``prefetch_pages`` now, tail
         queued for the next tick — decode resumes after the prefetch
-        instead of waiting for the whole lane."""
+        instead of waiting for the whole lane.  Paged-compute additionally
+        requires the pages to be free RIGHT NOW (a restore never evicts —
+        that would thrash against the eviction that spilled it)."""
         pool = self.partition.spill
         if pool is None or key not in pool or self.n_free_for(template) <= 0:
             return None
         entry = pool.take(key)
         if entry is None:  # raced away (defensive: tick loop is 1-threaded)
             return None
-        lane = self.partition.alloc(template)
         rows = entry["rows"]
         n_rows = entry["n_rows"]
         head = min(n_rows, self.prefetch_pages * self.page_size)
+        if self.paged_compute:
+            need = min(self.pages_per_lane,
+                       entry["length"] // self.page_size + 1)
+            if self.pool.n_free_pages < need:
+                pool.put(key, template, entry)  # not enough pages yet
+                return None
+            lane = self.partition.alloc(template)
+            self._open_table(lane, entry["length"])
+            self._lane_meta[lane] = (key, template)
+            self._write_rows(lane, rows, 0, head)
+        else:
+            lane = self.partition.alloc(template)
 
-        def one(dst, src):
-            src = jnp.asarray(src)
-            if self._seq_leaf(dst):
-                return dst.at[:, lane, :head].set(src[:, :head].astype(dst.dtype))
-            return dst.at[:, lane].set(src.astype(dst.dtype))
+            def one(dst, src):
+                src = jnp.asarray(src)
+                if self._seq_leaf(dst):
+                    return dst.at[:, lane, :head].set(
+                        src[:, :head].astype(dst.dtype))
+                return dst.at[:, lane].set(src.astype(dst.dtype))
 
-        self.cache = jax.tree_util.tree_map(one, self.cache, rows)
-        moved = sum(
-            (a.dtype.itemsize * a.shape[0] * head * int(np.prod(a.shape[2:])))
-            if a.ndim >= 3 and a.shape[1] == n_rows else a.nbytes
-            for a in map(np.asarray, jax.tree_util.tree_leaves(rows)))
-        self.kv_bytes_moved += moved
+            self.cache = jax.tree_util.tree_map(one, self.cache, rows)
+            moved = sum(
+                (a.dtype.itemsize * a.shape[0] * head * int(np.prod(a.shape[2:])))
+                if a.ndim >= 3 and a.shape[1] == n_rows else a.nbytes
+                for a in map(np.asarray, jax.tree_util.tree_leaves(rows)))
+            self.kv_bytes_moved += moved
+            self._open_table(lane, entry["length"])
         if head < n_rows:
             self._pending_restore[lane] = (rows, head, n_rows)
         ln = np.array(self.lengths)
@@ -427,11 +741,31 @@ class PagedInferenceEngine(InferenceEngine):
         self.lengths = jnp.asarray(ln)
         self.last_token = jnp.asarray(lt)
         self.active[lane] = True
-        self._open_table(lane, entry["length"])
         return lane
 
+    def _write_rows(self, lane: int, rows, start: int, stop: int) -> None:
+        """Scatter host ``rows[start:stop]`` (page-aligned bounds) into
+        ``lane``'s physical frames, with byte accounting (paged-compute)."""
+        if stop <= start:
+            return
+        ps = self.page_size
+        p0, p1 = start // ps, stop // ps
+        idx = jnp.asarray(self.pool.pages(lane)[p0:p1])
+
+        def one(dst, src, idx=idx, p0=p0, p1=p1):
+            s = jnp.asarray(src)[:, start:stop]
+            return dst.at[:, idx].set(
+                s.reshape(s.shape[0], p1 - p0, ps, *s.shape[2:])
+                .astype(dst.dtype))
+
+        self.cache = jax.tree_util.tree_map(one, self.cache, rows)
+        for a in map(np.asarray, jax.tree_util.tree_leaves(rows)):
+            self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                    * (stop - start)
+                                    * int(np.prod(a.shape[2:])))
+
     def _flush_restores(self, lane: Optional[int] = None) -> None:
-        """Splice queued restore tails into the lane cache (all lanes, or
+        """Splice queued restore tails into the page arrays (all lanes, or
         one lane about to be copied out again)."""
         if lane is not None:
             items = ([(lane, self._pending_restore.pop(lane))]
@@ -440,6 +774,9 @@ class PagedInferenceEngine(InferenceEngine):
             items = list(self._pending_restore.items())
             self._pending_restore.clear()
         for ln_, (rows, start, stop) in items:
+            if self.paged_compute:
+                self._write_rows(ln_, rows, start, stop)
+                continue
 
             def one(dst, src, ln_=ln_, start=start, stop=stop):
                 if self._seq_leaf(dst):
@@ -459,21 +796,24 @@ class PagedInferenceEngine(InferenceEngine):
         """The active lanes' KV as the paged-kernel layout.
 
         Returns ``{"k_pages", "v_pages", "block_tables", "lengths",
-        "lanes"}`` for one transformer ``stack`` (layer 0), with pages cut
-        from the dense lane cache at identity frames and block tables read
-        from the pool — the bridge the parity tests drive
-        :func:`repro.kernels.paged_attention.ops.paged_decode_op` with.
-        ``None`` when the stack has no k/v leaves or nothing is active.
+        "lanes"}`` for one transformer ``stack`` (layer 0).  Paged-compute
+        mode returns the live page arrays directly (decode_tick consumes
+        exactly this layout); dense-compute mode cuts pages from the
+        per-lane cache at identity frames.  ``None`` when the stack has
+        no k/v leaves or nothing is active.
         """
         entry = self.cache.get(stack) if hasattr(self.cache, "get") else None
         if not entry or "k" not in entry or not self.active.any():
             return None
         lanes = [int(x) for x in np.nonzero(self.active)[0]]
         ps, ppl = self.page_size, self.pages_per_lane
-        k0, v0 = entry["k"][0], entry["v"][0]  # (B, S, Hkv, hd) layer 0
-        hkv, hd = k0.shape[2], k0.shape[3]
-        k_pages = jnp.reshape(k0, (self.n_lanes * ppl, ps, hkv, hd))
-        v_pages = jnp.reshape(v0, (self.n_lanes * ppl, ps, hkv, hd))
+        if self.paged_compute:
+            k_pages, v_pages = entry["k"][0], entry["v"][0]
+        else:
+            k0, v0 = entry["k"][0], entry["v"][0]  # (B, S, Hkv, hd) layer 0
+            hkv, hd = k0.shape[2], k0.shape[3]
+            k_pages = jnp.reshape(k0, (self.n_lanes * ppl, ps, hkv, hd))
+            v_pages = jnp.reshape(v0, (self.n_lanes * ppl, ps, hkv, hd))
         tables = np.stack([self.pool.block_table(lane, ppl) for lane in lanes])
         lengths = np.asarray(self.lengths)[lanes].astype(np.int32)
         return {"k_pages": k_pages, "v_pages": v_pages,

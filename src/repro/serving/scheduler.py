@@ -292,6 +292,13 @@ class ContinuousBatchingScheduler:
         # engines expose it as ``engine.kv``; duck-typed bench/test engines
         # without one are consumed directly (they mirror the same names).
         self._kv = getattr(engine, "kv", None) or engine
+        # Page-pressure evictions (paged engine oversubscription): the
+        # engine notifies synchronously AT eviction time — before the freed
+        # lane can be reallocated to a new request — so the victim's
+        # running-table entry is cleared while it still refers to the
+        # evicted request.  Engines without the hook never evict mid-decode.
+        if hasattr(engine, "on_lane_evicted"):
+            engine.on_lane_evicted = self._lane_evicted
         # Engines predating KV partitioning expose only the global n_free;
         # treat every template as drawing from one shared pool there.
         self._free_for = getattr(self._kv, "n_free_for",
@@ -365,6 +372,35 @@ class ContinuousBatchingScheduler:
                     "or kv_shares leaves its template no admissible lane."
                 )
         return done
+
+    def _lane_evicted(self, lane: int, rid, template, spilled: bool) -> None:
+        """Engine callback: ``lane``'s KV was evicted mid-decode by page
+        pressure (oversubscribed paged pool).  The engine already spilled
+        the KV to host (when a spill pool accepts it) and retired the
+        lane; this hook re-queues the request at the head of its template
+        lane — exactly the straggler re-queue path, minus the retire the
+        engine performed itself.  With staged KV the re-admission restores
+        and RESUMES; without, the partial generation is cleared and the
+        re-admission re-prefills from scratch (greedy decode regenerates
+        the same tokens, so end-to-end output is unchanged)."""
+        r = self.running.pop(lane, None)
+        if r is None:
+            return
+        if r.rid != rid:  # stale identity: not the request we were told of
+            self.running[lane] = r
+            return
+        self._lane_age.pop(lane, None)
+        if spilled:
+            self.stats.kv_spilled += 1
+        else:
+            r.generated.clear()
+        r.lane = None
+        q = self.queues.get(r.template)
+        if q is None:
+            q = self.queues[r.template] = deque()
+        q.appendleft(r)
+        self._ready.push(r.template)
+        self.stats.requeued += 1
 
     # ------------------------------------------------- speculative pipeline
     def _strategy_for(self, tmpl: str) -> BatchingStrategy:
@@ -524,7 +560,15 @@ class ContinuousBatchingScheduler:
                 self._staged.extend(keep)
                 raise task.error
             if not task.complete:  # chunked: fold the next chunk this tick
-                task.advance(self.engine)
+                # Fused megabatch first: a paged engine can adopt the next
+                # chunk INTO this tick's decode dispatch (one device
+                # program per boundary instead of decode + spec-thread
+                # resume); engines without stage_chunk — or ticks it
+                # declines (no active decode batch) — keep the
+                # spec-thread resume path.
+                stage = getattr(self.engine, "stage_chunk", None)
+                if stage is None or not stage(task.staged):
+                    task.advance(self.engine)
                 self.stats.spec_chunks += 1
                 keep.append(task)
                 blocked = True

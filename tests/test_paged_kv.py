@@ -236,18 +236,22 @@ def test_batched_oversized_prompts_admit_together(setup):
 
 
 def test_paged_view_feeds_paged_kernel(setup):
-    """paged_view() exposes the lane cache as (pages, block tables); the
-    Pallas paged kernel over that view agrees with the dense oracle on the
-    same rows — the end-to-end bridge from pool bookkeeping to kernel."""
+    """paged_view() exposes live KV as (pages, block tables); the Pallas
+    paged kernel over that view agrees with the dense oracle over a DENSE
+    engine's cache rows for the same requests — the end-to-end bridge from
+    pool bookkeeping through page contents to the kernel."""
     from repro.kernels.decode_attention.ref import decode_ref
     from repro.kernels.paged_attention.ops import paged_decode_op
 
     arch, params = setup
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, 200, size=6 + 4 * i).astype(np.int32)
+               for i in range(2)]
     eng = PagedInferenceEngine(arch, params, n_lanes=2, max_prompt_len=16,
                                max_len=32, page_size=8)
-    rng = np.random.default_rng(17)
-    reqs = [Request(rid=i, prompt=rng.integers(1, 200, size=6 + 4 * i)
-                    .astype(np.int32), max_new_tokens=4) for i in range(2)]
+    assert eng.paged_compute  # reduced llama3 is a full-context dense stack
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
     eng.admit(reqs, None)
     for _ in range(2):
         eng.decode_tick()
@@ -258,9 +262,18 @@ def test_paged_view_feeds_paged_kernel(setup):
     paged = paged_decode_op(q, view["k_pages"], view["v_pages"],
                             view["block_tables"], view["lengths"],
                             interpret=True)
-    # dense oracle over the same lanes' raw cache rows
-    k = eng.cache["layers"]["k"][0][jnp.asarray(view["lanes"])]
-    v = eng.cache["layers"]["v"][0][jnp.asarray(view["lanes"])]
+    # Dense oracle: an ordinary dense engine run of the same requests —
+    # its per-lane cache rows must equal what the pages hold.
+    dense = InferenceEngine(arch, params, n_lanes=2, max_prompt_len=16,
+                            max_len=32)
+    dreqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+             for i, p in enumerate(prompts)]
+    dense.admit(dreqs, None)
+    for _ in range(2):
+        dense.decode_tick()
+    lanes = jnp.asarray([r.lane for r in dreqs])
+    k = dense.cache["layers"]["k"][0][lanes]
+    v = dense.cache["layers"]["v"][0][lanes]
     ref = decode_ref(q, k, v, view["lengths"])
     np.testing.assert_allclose(np.asarray(paged), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)

@@ -55,6 +55,10 @@ GATED_METRICS = {
     # (bit-identity, eviction count, fused dispatches) live in
     # check_floors.py.
     "paged_compute.tokens_per_s_ratio": {"allowance": 0.3},
+    # Part 9 degraded mode: the ratio rides the same sleep-based latency
+    # model; the hard floors (>= 0.7x, zero lost requests, faults
+    # actually injected) live in check_floors.py.
+    "degraded.tokens_per_s_ratio": {"allowance": 0.3},
 }
 
 

@@ -26,7 +26,12 @@ same-machine ratio with a physically-motivated minimum:
   the attention read cost is charged, stay bit-identical at equal AND
   oversubscribed page budgets (with >= 1 real mid-decode page eviction),
   and the fused prefill+decode megabatch must issue exactly one device
-  dispatch per tick boundary.
+  dispatch per tick boundary;
+* Part 9 — under ~5% injected decode/prefill faults the recovery
+  machinery (quarantine + KV salvage + requeue + bounded retry) must
+  hold >= 0.7x the fault-free tokens/s, lose ZERO requests, and the
+  chaos schedule must actually fire (>= 1 injected fault, >= 1
+  quarantine).
 """
 from __future__ import annotations
 
@@ -159,6 +164,31 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
             "the fused prefill+decode megabatch must issue exactly one "
             "device dispatch per tick boundary, got "
             f"{pc['fused_dispatches_per_boundary']}")
+
+    dg = d["degraded"]
+    print("degraded.tokens_per_s_ratio", dg["tokens_per_s_ratio"])
+    print("degraded.lost_requests", dg["lost_requests"],
+          "quarantined", dg["degraded"]["quarantined"],
+          "injected", dg["degraded"]["injected_decode_faults"],
+          "+", dg["degraded"]["injected_prefill_faults"])
+    if dg["tokens_per_s_ratio"] < 0.7:
+        failures.append(
+            "degraded mode (~5% injected faults) must hold >= 0.7x the "
+            "fault-free tokens/s — recovery overhead is budgeted, got "
+            f"{dg['tokens_per_s_ratio']:.2f}")
+    if dg["lost_requests"] != 0:
+        failures.append(
+            "degraded mode must lose ZERO requests — every crashed lane's "
+            f"request must requeue and finish, lost "
+            f"{dg['lost_requests']}")
+    if dg["degraded"]["injected_decode_faults"] < 1:
+        failures.append(
+            "degraded run injected no decode faults — the chaos schedule "
+            "is not engaging, the floor would be vacuous")
+    if dg["degraded"]["quarantined"] < 1:
+        failures.append(
+            "degraded run never quarantined a lane — injected crashes are "
+            "not reaching the recovery path")
 
     return failures
 

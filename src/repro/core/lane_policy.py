@@ -263,6 +263,15 @@ class LanePolicy:
         :meth:`~repro.core.strategies.BatchingStrategy.observe_abort`)."""
         self.strategy_for(lane).observe_abort(duration, depth=depth)
 
+    def observe_failure(self, lane: str, duration: float) -> None:
+        """Route one failed service call (or serving submission) to the
+        lane's own model: the wasted ``duration`` enters the lane's fixed
+        cost as a failure penalty (see
+        :meth:`~repro.core.strategies.BatchingStrategy.observe_failure`),
+        so a flaky lane batches later while healthy lanes' models stay
+        untouched."""
+        self.strategy_for(lane).observe_failure(duration)
+
     # --------------------------------------------------------------- spill
     def spill_budget_for(self, lane: Optional[str]) -> Optional[int]:
         """Max host-spilled KV entries for ``lane`` — the named override,

@@ -98,6 +98,8 @@ from typing import Any, Optional
 
 from repro.core.concurrency import QuotaGate, ReadyLanes, ShardedCounter
 from repro.core.lane_policy import LanePolicy
+from repro.core.resilience import (DeadlineExceeded, FailureDomain,
+                                   Resilience, ServiceCardinalityError)
 from repro.core.services import QueryService
 from repro.core.strategies import BatchingStrategy, PureAsync
 
@@ -136,6 +138,13 @@ class RuntimeStats:
         "cache_expired",  # LRU entries dropped because their TTL lapsed
         "shared",       # submissions rerouted onto a canonical lane (projection)
         "quota_waits",  # submissions that blocked on a quota / back-pressure bound
+        # failure domain (resilience=Resilience(...)):
+        "failures",     # service calls that raised (before any retry verdict)
+        "retries",      # re-executions after a retryable failure
+        "fissions",     # failed batches split to isolate failing params
+        "breaker_trips",      # circuit breakers tripped closed -> open
+        "shed_submissions",   # requests executed on the breaker's shed path
+        "deadline_expired",   # handles resolved with DeadlineExceeded at fetch
     )
 
     def __init__(self):
@@ -213,15 +222,18 @@ class _HandleStripe:
 
 class _Pending:
     """Per-handle metadata while unresolved: where it runs, how to project
-    its result, and which quota slots to release on delivery."""
+    its result, which quota slots to release on delivery, and the absolute
+    monotonic deadline (``None`` = no deadline) after which ``fetch``
+    resolves the handle with :class:`DeadlineExceeded`."""
 
-    __slots__ = ("lane_query", "params", "projector", "slots")
+    __slots__ = ("lane_query", "params", "projector", "slots", "deadline")
 
-    def __init__(self, lane_query, params, projector, slots):
+    def __init__(self, lane_query, params, projector, slots, deadline=None):
         self.lane_query = lane_query
         self.params = params
         self.projector = projector
         self.slots = slots
+        self.deadline = deadline
 
 
 class _ReqStripe:
@@ -330,6 +342,7 @@ class AsyncQueryRuntime:
         policy: Optional[LanePolicy] = None,
         n_stripes: int = 16,
         result_cache_stripes: int = 1,
+        resilience: Optional[Resilience] = None,
     ):
         if policy is not None and strategy is not None:
             raise ValueError(
@@ -380,6 +393,19 @@ class AsyncQueryRuntime:
         self._drain_waiters = 0
         self.stats = RuntimeStats()
 
+        # Failure domain (None = legacy semantics: no retries, a failed
+        # batch delivers its one exception to every waiter).  With a
+        # Resilience config the worker path retries with backoff under a
+        # per-lane budget, fissions failed batches to isolate failing
+        # params, sheds breaker-open lanes to direct synchronous
+        # execution, and fetch enforces per-request deadlines.
+        self.resilience = resilience
+        self._fd = (
+            FailureDomain(resilience,
+                          on_trip=lambda: self.stats.breaker_trips.add())
+            if resilience is not None else None
+        )
+
         self._threads = [
             threading.Thread(target=self._worker, name=f"aqr-worker-{i}", daemon=True)
             for i in range(n_threads)
@@ -389,7 +415,8 @@ class AsyncQueryRuntime:
 
     # ------------------------------------------------------------------ API
     def submit(self, query_name: str, params: tuple,
-               tenant: Optional[str] = None) -> Handle:
+               tenant: Optional[str] = None,
+               deadline: Optional[float] = None) -> Handle:
         """Non-blocking query submission (``submitQuery``).  Blocks only at an
         admission bound: the global ``max_pending`` (§8 producer back-off), or
         — with a :class:`LanePolicy` — this tenant's / this lane's quota.
@@ -400,6 +427,12 @@ class AsyncQueryRuntime:
         auto-detected from ``policy.describe`` metadata) are canonicalized
         onto their shared lane here; the submission's own projection is
         applied at result fan-out.
+
+        ``deadline`` (seconds, relative; default the resilience config's
+        ``deadline``) bounds how long this handle's ``fetch`` waits: past
+        it the handle resolves with a typed
+        :class:`~repro.core.resilience.DeadlineExceeded` at its fetch
+        point — the exception-semantics-preserving way to time out.
         """
         policy = self.policy
         if policy is None:
@@ -442,7 +475,11 @@ class AsyncQueryRuntime:
         # Register pending metadata BEFORE the key can become discoverable
         # through an entry, so a racing delivery always finds the projector
         # and the quota slots to release.
-        meta = _Pending(lane_query, params, projector, slots)
+        eff = deadline
+        if eff is None and self.resilience is not None:
+            eff = self.resilience.deadline
+        meta = _Pending(lane_query, params, projector, slots,
+                        time.monotonic() + eff if eff is not None else None)
         with stripe.lock:
             stripe.pending[key] = meta
 
@@ -509,6 +546,10 @@ class AsyncQueryRuntime:
             if self.straggler_timeout is not None
             else None
         )
+        t_start = time.monotonic()
+        with stripe.lock:
+            meta = stripe.pending.get(key)
+            req_deadline = meta.deadline if meta is not None else None
         while True:
             with stripe.lock:
                 if key in stripe.errors:
@@ -517,13 +558,46 @@ class AsyncQueryRuntime:
                     return stripe.results[key]
                 if self._shutdown:
                     raise RuntimeError("runtime is shut down")
-                if deadline is None:
-                    stripe.cv.wait()
-                    continue
-                remaining = deadline - time.monotonic()
-                if remaining > 0:
-                    stripe.cv.wait(timeout=remaining)
-                    continue
+                now = time.monotonic()
+                if req_deadline is not None and now >= req_deadline:
+                    # Resolve the handle with a typed error AT ITS FETCH
+                    # POINT (the paper's exception-semantics discipline
+                    # applied to timeouts).  First resolver wins: pop the
+                    # pending meta so a late worker delivery becomes an
+                    # idempotent no-op and slots are released exactly once.
+                    meta = stripe.pending.pop(key, None)
+                    if meta is None:
+                        continue  # delivery raced us; loop re-checks
+                    err = DeadlineExceeded(handle.query_name, req_deadline,
+                                           now - t_start)
+                    stripe.errors[key] = err
+                    stripe.cv.notify_all()
+                else:
+                    timeout = None
+                    if deadline is not None:
+                        timeout = deadline - now
+                    if req_deadline is not None:
+                        rem = req_deadline - now
+                        timeout = rem if timeout is None else min(timeout, rem)
+                    if timeout is None:
+                        stripe.cv.wait()
+                        continue
+                    if timeout > 0:
+                        stripe.cv.wait(timeout=timeout)
+                        continue
+                    if req_deadline is not None and deadline is not None \
+                            and req_deadline <= deadline:
+                        continue  # deadline branch handles it next pass
+                    err = None
+            if err is not None:
+                # Deadline fired: release admission slots and account the
+                # handle as completed (errored) outside the stripe lock.
+                if meta.slots is not None:
+                    self._release_slots(meta.slots)
+                self.stats.deadline_expired.add()
+                self.stats.completed.add()
+                self._notify_drain()
+                raise err
             # Straggler: re-enqueue OUTSIDE the stripe lock so the duplicate
             # goes through the normal lane path, then restart the clock
             # against the handle's own (canonical) lane from the moment the
@@ -848,6 +922,162 @@ class AsyncQueryRuntime:
         else:
             self.strategy.observe(batch_size, duration)
 
+    def _observe_failure(self, lane_key: str, duration: float) -> None:
+        """Route a failed-call observation to the deciding cost model (it
+        feeds the adaptive threshold's failure penalty, not the service-time
+        estimate — failed calls are often fast-failing and would corrupt
+        the latter)."""
+        if self.policy is not None:
+            self.policy.observe_failure(lane_key, duration)
+        else:
+            self.strategy.observe_failure(duration)
+
+    # ------------------------------------------------- resilient execution
+    def _execute_once(self, query_name: str, picked: list) -> list:
+        """One service call for the picked entries; normalizes the batch /
+        single split and validates result cardinality (a service returning
+        the wrong number of rows is a non-retryable contract violation —
+        guessing an alignment would deliver values to the wrong handles)."""
+        if len(picked) == 1:
+            out = [self.service.execute(query_name, picked[0].params)]
+        else:
+            out = self.service.execute_batch(
+                query_name, [e.params for e in picked]
+            )
+            out = list(out)
+        if len(out) != len(picked):
+            raise ServiceCardinalityError(query_name, len(picked), len(out))
+        return out
+
+    def _call_with_retry(self, lane_key: str, query_name: str, picked: list,
+                         breaker) -> tuple:
+        """Execute with bounded retry + exponential backoff + deterministic
+        jitter, spending the lane's retry budget (earned back by successes,
+        so a persistent failure can't turn into a retry storm).  Returns
+        ``(out, None)`` on success, ``(None, last_exception)`` on final
+        failure.  Success/failure is reported to the breaker and to the
+        cost model's failure penalty."""
+        fd = self._fd
+        policy = fd.retry
+        budget = fd.budget(lane_key)
+        last: Optional[BaseException] = None
+        for attempt in range(max(1, policy.max_attempts)):
+            if attempt > 0:
+                self.stats.retries.add()
+                policy.sleep_backoff(attempt, lane_key)
+            t0 = time.perf_counter()
+            try:
+                out = self._execute_once(query_name, picked)
+            except BaseException as e:  # noqa: BLE001 — propagate via fetch
+                last = e
+                self.stats.failures.add()
+                self._observe_failure(lane_key, time.perf_counter() - t0)
+                if breaker is not None:
+                    breaker.record_failure()
+                if not policy.is_retryable(e):
+                    break
+                # The budget caps retry *amplification*: re-executing an
+                # n-entry batch multiplies load n-fold, so batch retries
+                # spend tokens.  A single entry's bounded retries can't
+                # amplify beyond max_attempts and must stay available even
+                # with a dry budget — otherwise a first-attempt transient
+                # leaks to a fetcher that fault-free semantics say succeeds.
+                if len(picked) > 1 and not budget.try_spend():
+                    break
+                continue
+            self._observe(lane_key, len(picked), time.perf_counter() - t0)
+            budget.earn()
+            if breaker is not None:
+                breaker.record_success()
+            return out, None
+        return None, last
+
+    def _execute_shed(self, lane_key: str, query_name: str,
+                      picked: list) -> tuple:
+        """Tripped-breaker degraded mode: per-entry direct synchronous
+        execution (no batching) so each request still resolves — with its
+        own value or its own error — while the lane's batch path cools
+        down.  Transient faults are still retried per entry (bounded by
+        ``max_attempts``, exempt from the budget: single-entry retries
+        can't amplify into a storm, and exception semantics must survive
+        degradation), and successes earn the budget back so the bucket is
+        refilled by the time the breaker closes.  No breaker feedback is
+        recorded: shed traffic must not hold the breaker open — the
+        half-open probes decide recovery."""
+        fd = self._fd
+        policy = fd.retry
+        budget = fd.budget(lane_key)
+        self.stats.shed_submissions.add(len(picked))
+        out: list = []
+        errs: list = []
+        any_err = False
+        for entry in picked:
+            err: Optional[BaseException] = None
+            value = None
+            for attempt in range(max(1, policy.max_attempts)):
+                if attempt > 0:
+                    self.stats.retries.add()
+                    policy.sleep_backoff(attempt, (lane_key, "shed"))
+                try:
+                    value, err = self.service.execute(
+                        query_name, entry.params), None
+                    budget.earn()
+                    break
+                except BaseException as e:  # noqa: BLE001 — own delivery
+                    err = e
+                    self.stats.failures.add()
+                    if not policy.is_retryable(e):
+                        break
+            out.append(value)
+            errs.append(err)
+            any_err = any_err or err is not None
+        return out, (errs if any_err else None)
+
+    def _execute_resilient(self, lane_key: str, query_name: str,
+                           picked: list) -> tuple:
+        """Execute one picked batch under the failure domain: breaker-gated,
+        retried with backoff, and — on final batch failure — fission-split
+        so each param's own exception reaches exactly its own handles while
+        innocent co-batched params still get values.  Returns ``(out,
+        errs)`` in :meth:`_complete`'s per-entry format.  Without a
+        resilience config this is the legacy one-shot path."""
+        fd = self._fd
+        if fd is None:
+            t0 = time.perf_counter()
+            try:
+                out = self._execute_once(query_name, picked)
+            except BaseException as e:  # noqa: BLE001 — propagate via fetch
+                return None, [e] * len(picked)
+            self._observe(lane_key, len(picked), time.perf_counter() - t0)
+            return out, None
+        breaker = fd.breaker(lane_key)
+        if breaker is not None and breaker.allow() == "shed":
+            return self._execute_shed(lane_key, query_name, picked)
+        out, exc = self._call_with_retry(lane_key, query_name, picked, breaker)
+        if exc is None:
+            return out, None
+        if len(picked) == 1 or not fd.config.fission:
+            return None, [exc] * len(picked)
+        # Batch fission-retry: binary split and recurse.  Each half re-enters
+        # the resilient path (re-checking the breaker — repeated failures
+        # during fission can trip it and degrade the rest to shed mode), so
+        # a single poisoned param is isolated at batch-size 1, where its own
+        # exception is delivered to exactly its own handles.
+        self.stats.fissions.add()
+        mid = len(picked) // 2
+        out_lo, errs_lo = self._execute_resilient(
+            lane_key, query_name, picked[:mid])
+        out_hi, errs_hi = self._execute_resilient(
+            lane_key, query_name, picked[mid:])
+        if errs_lo is None and errs_hi is None:
+            return (out_lo or []) + (out_hi or []), None
+        out = ((out_lo if out_lo is not None else [None] * mid)
+               + (out_hi if out_hi is not None else [None] * (len(picked) - mid)))
+        errs = ((errs_lo if errs_lo is not None else [None] * mid)
+                + (errs_hi if errs_hi is not None
+                   else [None] * (len(picked) - mid)))
+        return out, errs
+
     def _deliver_into(self, stripe: _HandleStripe, key: int, value: Any,
                       projector) -> None:
         """Resolve one handle (stripe lock held), applying its projection."""
@@ -874,20 +1104,33 @@ class AsyncQueryRuntime:
         self.stats.completed.add()
         self._notify_drain()
 
-    def _complete(self, picked: list, out, err) -> None:
+    def _complete(self, picked: list, out, errs) -> None:
         """Fan one service call's results out to every attached handle —
-        per handle stripe, outside any lane lock.  Straggler duplicates may
-        already be resolved: first result wins, idempotently."""
+        per handle stripe, outside any lane lock.  ``errs`` is ``None``
+        (all succeeded) or a list aligned with ``picked`` holding each
+        entry's own exception (``None`` for entries that succeeded) — an
+        error reaches exactly the handles attached to ITS entry, and every
+        dedup'd waiter of an entry gets that entry's outcome exactly once.
+        Straggler duplicates (and deadline-expired handles) may already be
+        resolved: first result wins, idempotently.  The stripe CV is
+        signalled in a ``finally`` so no fault between delivery and wakeup
+        can strand a fetcher."""
         per_stripe: dict[int, list] = {}
         for i, entry in enumerate(picked):
-            value = out[i] if err is None else None
+            err = errs[i] if errs is not None else None
+            value = out[i] if err is None and out is not None else None
             rk = self._req_key(entry.query_name, entry.params)
             if err is None and rk is not None and self._cache is not None:
                 # Cache before unregistering from the dedup registry: paired
                 # with submit's cache re-probe under the req-stripe lock, a
                 # racing identical submission sees either the live entry or
-                # the cached value — never a gap that re-executes.
-                self._cache.put(rk, value)
+                # the cached value — never a gap that re-executes.  A cache
+                # fault must not poison delivery (the result still reaches
+                # its waiters; only reuse is lost).
+                try:
+                    self._cache.put(rk, value)
+                except BaseException:  # noqa: BLE001 — best-effort reuse
+                    pass
             if rk is not None and self.dedup:
                 rs = self._req_stripe(rk)
                 with rs.lock:
@@ -898,25 +1141,28 @@ class AsyncQueryRuntime:
                 keys = list(entry.keys)
             for key in keys:
                 per_stripe.setdefault(key & self._stripe_mask, []).append(
-                    (key, value))
+                    (key, value, err))
         released: list = []
         n_done = 0
         for idx, items in per_stripe.items():
             stripe = self._stripes[idx]
             with stripe.lock:
-                for key, value in items:
-                    if key in stripe.results or key in stripe.errors:
-                        continue  # straggler duplicate: first result won
-                    meta = stripe.pending.pop(key, None)
-                    projector = meta.projector if meta is not None else None
-                    if err is not None:
-                        stripe.errors[key] = err
-                    else:
-                        self._deliver_into(stripe, key, value, projector)
-                    n_done += 1
-                    if meta is not None:
-                        released.append(meta)
-                stripe.cv.notify_all()
+                try:
+                    for key, value, err in items:
+                        if key in stripe.results or key in stripe.errors:
+                            continue  # straggler duplicate: first result won
+                        meta = stripe.pending.pop(key, None)
+                        projector = (meta.projector
+                                     if meta is not None else None)
+                        if err is not None:
+                            stripe.errors[key] = err
+                        else:
+                            self._deliver_into(stripe, key, value, projector)
+                        n_done += 1
+                        if meta is not None:
+                            released.append(meta)
+                finally:
+                    stripe.cv.notify_all()
         for meta in released:
             self._release_slots(meta.slots)
         if n_done:
@@ -961,25 +1207,16 @@ class AsyncQueryRuntime:
                 continue
             query_name, picked = work
 
-            t0 = time.perf_counter()
+            out, errs = self._execute_resilient(lane_key, query_name, picked)
             try:
-                if len(picked) == 1:
-                    out = [self.service.execute(query_name, picked[0].params)]
-                else:
-                    out = self.service.execute_batch(
-                        query_name, [e.params for e in picked]
-                    )
-                err = None
-            except BaseException as e:  # noqa: BLE001 — propagate via fetch
-                out, err = None, e
-            if err is None:
-                # Failed calls (often fast-failing) would corrupt a learned
-                # cost model — only successful durations are evidence.  The
-                # observation goes to the model that made the decision: the
-                # lane's own under a policy, the global strategy otherwise.
-                self._observe(lane_key, len(picked), time.perf_counter() - t0)
-
-            self._complete(picked, out, err)
+                self._complete(picked, out, errs)
+            except BaseException as e:  # noqa: BLE001 — never strand fetchers
+                # A fault in fan-out itself (e.g. a poisoned cache or dedup
+                # registry) must still resolve every attached handle — an
+                # exception mid-_complete would otherwise strand fetchers on
+                # an unsignalled CV forever.  Deliveries are idempotent, so
+                # re-completing the already-resolved prefix is a no-op.
+                self._complete(picked, None, [e] * len(picked))
             # Sticky: keep draining this lane while it has work — the next
             # _take re-checks under the lane lock, so no ready-queue round
             # trip (lock + wakeup) is paid per batch on a busy lane.  The

@@ -163,6 +163,8 @@ class SimulatedDBService(_StatsMixin):
         batch_fixed: float = 1e-3,
         concurrency: int = 8,
         compute_fn: Optional[Callable[[str, tuple], Any]] = None,
+        fail_rate: float = 0.0,
+        fail_seed: int = 0,
     ):
         super().__init__()
         self.rtt = rtt
@@ -171,11 +173,27 @@ class SimulatedDBService(_StatsMixin):
         self.batch_fixed = batch_fixed
         self._server = threading.Semaphore(concurrency)
         self.compute_fn = compute_fn or (lambda q, p: (q, p))
+        self.fail_rate = fail_rate
+        self.fail_seed = fail_seed
+
+    def _check_fault(self, query_name: str, params: tuple) -> None:
+        """Deterministic failure injection for degraded-mode benchmarks: a
+        ``fail_rate`` fraction of ``(query_name, params)`` identities always
+        fails — pure in the seed, so A/B runs poison the same requests
+        regardless of batching or thread interleaving."""
+        if self.fail_rate <= 0.0:
+            return
+        from repro.core.faults import InjectedParamError
+        from repro.core.resilience import hash_unit
+        if hash_unit(self.fail_seed, "db", query_name,
+                     params) < self.fail_rate:
+            raise InjectedParamError(query_name, params)
 
     def execute(self, query_name: str, params: tuple) -> Any:
         """One simulated request: 1 round trip + single-query processing."""
         t0 = time.perf_counter()
         time.sleep(self.rtt / 2)
+        self._check_fault(query_name, params)
         with self._server:
             time.sleep(self.single_proc)
             out = self.compute_fn(query_name, params)
@@ -184,11 +202,17 @@ class SimulatedDBService(_StatsMixin):
         return out
 
     def execute_batch(self, query_name: str, params_list: Sequence[tuple]) -> list:
-        """One simulated set-oriented call: 3 round trips + batch costs."""
+        """One simulated set-oriented call: 3 round trips + batch costs.
+
+        With ``fail_rate`` set, a batch containing any poisoned param fails
+        as a whole (statement-level poisoning) — the runtime's
+        fission-retry isolates the culprits."""
         n = len(params_list)
         t0 = time.perf_counter()
         # 3 round trips: parameter insert, batched query, cleanup (§5.2.3).
         time.sleep(self.rtt * 1.5)
+        for p in params_list:
+            self._check_fault(query_name, p)
         with self._server:
             time.sleep(self.batch_fixed + n * self.batch_proc)
             out = [self.compute_fn(query_name, p) for p in params_list]

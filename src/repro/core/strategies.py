@@ -96,6 +96,17 @@ class BatchingStrategy:
         speculations keep missing batches later instead of speculating
         harder."""
 
+    def observe_failure(self, duration: float) -> None:
+        """Failure feedback: a service call (or serving submission) for
+        this strategy's lane failed after ``duration`` seconds.  Failed
+        calls never feed :meth:`observe` (a fast-failing service would
+        corrupt the learned latencies), but they are not free either —
+        the time was spent and the work must be redone.  Static
+        strategies ignore the call; adaptive ones fold the wasted time
+        into the lane's fixed cost (like the abort penalty), so a flaky
+        lane demands a deeper backlog before batching — each batch risks
+        a larger redo."""
+
 
 @dataclasses.dataclass
 class PureAsync(BatchingStrategy):
@@ -245,9 +256,11 @@ class AdaptiveCost(BatchingStrategy):
             self._d: Optional[float] = None  # EWMA decode-tick latency (serving)
             self._ab: Optional[float] = None  # EWMA wasted spec-prefill time
             self._ab_depth: Optional[float] = None  # EWMA aborted-bet depth
+            self._fl: Optional[float] = None  # EWMA wasted failed-call time
             self._n_single = 0
             self._n_batch = 0
             self.aborts = 0  # speculative prefills wasted (observe_abort calls)
+            self.failures = 0  # failed service calls (observe_failure calls)
             # decayed least-squares moments for T(n) = F + n*c
             self._w = self._sn = self._st = self._snt = self._snn = 0.0
             self._explore_flip = False
@@ -271,6 +284,8 @@ class AdaptiveCost(BatchingStrategy):
             self._n_batch += 1
             if self._ab:
                 self._ab *= 1 - self.alpha  # a landed batch: decay the penalty
+            if self._fl:
+                self._fl *= 1 - self.alpha  # a healthy call: decay the penalty
             d = 1 - self.alpha  # decay old evidence
             self._w = self._w * d + 1.0
             self._sn = self._sn * d + batch_size
@@ -313,6 +328,29 @@ class AdaptiveCost(BatchingStrategy):
                 float(depth) if self._ab_depth is None
                 else (1 - self.alpha) * self._ab_depth + self.alpha * depth
             )
+
+    def observe_failure(self, duration: float) -> None:
+        """Charge one failed service call's wasted time to the model.
+
+        Failure feedback enters the same way abort feedback does: an EWMA
+        ``fl`` added to the fixed cost in :attr:`threshold`
+        (``(F + d + ab + fl)/(s + d − c)``), so a flaky lane batches
+        later — every batch on it risks ``fl`` seconds of redone work —
+        and successful calls decay the penalty back toward zero
+        (:meth:`observe`)."""
+        with self._lock:
+            self.failures += 1
+            self._fl = (
+                duration if self._fl is None
+                else (1 - self.alpha) * self._fl + self.alpha * duration
+            )
+
+    @property
+    def failure_penalty(self) -> float:
+        """Current EWMA of wasted failed-call time (0.0 when no failure
+        has been observed, or once healthy calls decayed it away)."""
+        with self._lock:
+            return self._fl or 0.0
 
     @property
     def abort_penalty(self) -> float:
@@ -357,21 +395,23 @@ class AdaptiveCost(BatchingStrategy):
 
     @property
     def threshold(self) -> Optional[float]:
-        """The learned batching threshold ``(F + d + ab)/(s + d − c)`` —
-        decode occupancy ``d`` and the speculative-abort penalty ``ab``
-        are amortized by the batch like the fixed cost, each individual
-        submission paying its own (``F/(s − c)`` while no decode ticks or
-        aborts have been observed).  ``inf`` when batching never pays;
-        ``None`` while still exploring."""
+        """The learned batching threshold ``(F + d + ab + fl)/(s + d − c)``
+        — decode occupancy ``d``, the speculative-abort penalty ``ab``
+        and the failure penalty ``fl`` are amortized by the batch like
+        the fixed cost, each individual submission paying its own
+        (``F/(s − c)`` while no decode ticks, aborts or failures have
+        been observed).  ``inf`` when batching never pays; ``None`` while
+        still exploring."""
         est = self.estimates()
         if est is None:
             return None
         f, c, s = est
         d = self.decode_latency or 0.0
         ab = self.abort_penalty
+        fl = self.failure_penalty
         if s + d <= c:
             return float("inf")
-        return (f + d + ab) / (s + d - c)
+        return (f + d + ab + fl) / (s + d - c)
 
     # ------------------------------------------------------------- decision
     def decide(self, n_pending: int, producer_done: bool) -> int:

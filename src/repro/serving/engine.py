@@ -233,6 +233,33 @@ class KVPartition:
                 self._home[lane] = t
             self._free[t] = pool
         self._free[_SHARED] = lanes
+        self._quarantined: set[int] = set()
+
+    def quarantine(self, lane: int) -> None:
+        """Remove ``lane`` from circulation: it will not be allocated again
+        until :meth:`unquarantine` returns it to its home pool.  Used by
+        crash recovery — a lane whose device step faulted sits out a
+        cooldown instead of immediately hosting the next request.  The
+        lane must currently be free (retire/release it first)."""
+        for pool in self._free.values():
+            if lane in pool:
+                pool.remove(lane)
+                self._quarantined.add(lane)
+                return
+        if lane in self._quarantined:
+            return
+        raise ValueError(f"lane {lane} is not free; cannot quarantine")
+
+    def unquarantine(self, lane: int) -> None:
+        """Return a quarantined lane to its home pool (no-op otherwise)."""
+        if lane in self._quarantined:
+            self._quarantined.discard(lane)
+            self.release(lane)
+
+    @property
+    def quarantined(self) -> frozenset:
+        """Snapshot of lanes currently held out of circulation."""
+        return frozenset(self._quarantined)
 
     @property
     def n_free(self) -> int:

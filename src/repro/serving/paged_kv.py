@@ -295,6 +295,19 @@ class PagedKVView:
         """Whether releasing ``lane`` raises ``n_free_for(template)``."""
         return self.partition.benefits(lane, template)
 
+    def quarantine(self, lane: int) -> None:
+        """Hold a crashed lane out of circulation (crash recovery)."""
+        self.partition.quarantine(lane)
+
+    def unquarantine(self, lane: int) -> None:
+        """Return a quarantined lane to its home pool."""
+        self.partition.unquarantine(lane)
+
+    @property
+    def quarantined(self) -> frozenset:
+        """Snapshot of lanes currently held out of circulation."""
+        return self.partition.quarantined
+
     @property
     def free_lanes(self) -> list[int]:
         """Sorted snapshot of every free lane (introspection)."""

@@ -116,6 +116,12 @@ from typing import Optional
 
 from repro.core.concurrency import ReadyLanes
 from repro.core.lane_policy import LanePolicy
+from repro.core.resilience import (
+    FailureDomain,
+    LaneError,
+    LaneFailedError,
+    Resilience,
+)
 from repro.core.strategies import BatchingStrategy, PureAsync
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
@@ -141,6 +147,12 @@ class SchedulerStats:
     # host KV spill (engine kv_spill=HostSpillPool)
     kv_spilled: int = 0       # evicted lanes whose KV was staged to host
     kv_restored: int = 0      # re-admissions served by a restore (no prefill)
+    # failure domain (resilience=Resilience(...))
+    quarantined: int = 0      # lanes held out after a device-step crash
+    decode_retries: int = 0   # decode ticks re-run after a transient fault
+    prefill_retries: int = 0  # admit() calls re-run after a transient fault
+    spec_crashes: int = 0     # spec-thread dispatches that raised (aborted)
+    breaker_trips: int = 0    # per-template circuit-breaker trips
 
 
 class _SpecTask:
@@ -246,6 +258,19 @@ class ContinuousBatchingScheduler:
         (one per tick boundary) so a single huge prompt overlaps decode
         instead of stalling the commit boundary.  Needs ``overlap=True``
         and an engine with ``prefill_resume``; ``None`` disables.
+    resilience:
+        A :class:`~repro.core.resilience.Resilience` config enabling the
+        failure domain: transient admit/decode faults are retried with
+        backoff, a device-step :class:`~repro.core.resilience.LaneError`
+        quarantines the crashed lane (KV salvaged via the spill pool when
+        one exists) and re-queues its request at the head, a spec-thread
+        crash aborts that bet cleanly instead of wedging the pipeline,
+        and a per-template circuit breaker sheds chronically-failing
+        lanes' speculation.  A template whose submissions fail
+        ``lane_fail_threshold`` times consecutively raises a typed
+        :class:`~repro.core.resilience.LaneFailedError` naming the
+        template and last exception.  ``None`` (default) keeps the
+        legacy fail-fast behavior: any engine exception propagates.
     """
 
     def __init__(
@@ -257,6 +282,7 @@ class ContinuousBatchingScheduler:
         overlap: bool = False,
         spec_depth: int = 1,
         chunk_tokens: Optional[int] = None,
+        resilience: Optional[Resilience] = None,
     ):
         if policy is not None and strategy is not None:
             raise ValueError(
@@ -319,6 +345,16 @@ class ContinuousBatchingScheduler:
         # The speculation pipeline: up to spec_depth in-flight bets,
         # oldest first (index 0 settles at the next tick boundary).
         self._staged: "deque[_SpecTask]" = deque()
+        # Failure domain (resilience=Resilience(...)): breakers + retry
+        # budgets per template, consecutive-failure records, and lanes
+        # held in quarantine until a decode-tick deadline.
+        self.resilience = resilience
+        self._fd = (
+            FailureDomain(resilience, on_trip=self._on_breaker_trip)
+            if resilience is not None else None
+        )
+        self._lane_failures: dict[str, tuple] = {}  # tmpl -> (n, last exc)
+        self._quarantine_release: dict[int, int] = {}  # lane -> release tick
 
     # ------------------------------------------------------------------ api
     def submit(self, request: Request) -> None:
@@ -353,6 +389,13 @@ class ContinuousBatchingScheduler:
             done.extend(self.tick())
         else:
             if self.n_queued or self.running or self._staged:
+                if self._lane_failures:
+                    # An all-failing lane is a NAMED condition, not a
+                    # generic stuck-lane timeout: surface which template
+                    # is down and the exception its submissions die with.
+                    tmpl, (n, exc) = max(self._lane_failures.items(),
+                                         key=lambda kv: kv[1][0])
+                    raise LaneFailedError(tmpl, n, exc)
                 stuck_queued = {t: len(q) for t, q in self.queues.items() if q}
                 stuck_running = {
                     lane: r.template for lane, r in sorted(self.running.items())
@@ -401,6 +444,152 @@ class ContinuousBatchingScheduler:
         q.appendleft(r)
         self._ready.push(r.template)
         self.stats.requeued += 1
+
+    # ------------------------------------------------------- failure domain
+    def _on_breaker_trip(self) -> None:
+        self.stats.breaker_trips += 1
+
+    def _record_lane_failure(self, tmpl, exc: BaseException) -> None:
+        """Count a consecutive submission failure against ``tmpl`` (with
+        its last exception, for the typed lane-down diagnosis)."""
+        if tmpl is None:
+            tmpl = "default"
+        n, _ = self._lane_failures.get(tmpl, (0, None))
+        self._lane_failures[tmpl] = (n + 1, exc)
+
+    def _record_lane_success(self, tmpl) -> None:
+        """A successful submission resets ``tmpl``'s consecutive-failure
+        record."""
+        self._lane_failures.pop(tmpl if tmpl is not None else "default", None)
+
+    def _check_lane_health(self) -> None:
+        """Raise a typed :class:`LaneFailedError` for any template whose
+        consecutive submission failures crossed the threshold — the named
+        all-failing-lane diagnosis, instead of requeueing forever and
+        dying as a generic stuck-lane timeout."""
+        if self.resilience is None:
+            return
+        limit = self.resilience.lane_fail_threshold
+        if limit is None:
+            return
+        for tmpl, (n, exc) in self._lane_failures.items():
+            if n >= limit:
+                raise LaneFailedError(tmpl, n, exc)
+
+    def _release_quarantine(self) -> None:
+        """Return quarantined lanes whose cooldown (in decode ticks) has
+        elapsed to their home pools."""
+        if not self._quarantine_release:
+            return
+        unq = getattr(self._kv, "unquarantine", None)
+        due = [lane for lane, t in self._quarantine_release.items()
+               if self.stats.decode_ticks >= t]
+        for lane in due:
+            del self._quarantine_release[lane]
+            if unq is not None:
+                unq(lane)
+
+    def _quarantine_lane(self, err: LaneError) -> None:
+        """Crash-safe lane recovery: the device step raised for one lane.
+        Salvage the request's KV through the spill pool when one exists
+        (re-admission restores and RESUMES — no token restart), re-queue
+        the request at the head of its lane, and hold the lane itself out
+        of circulation for ``quarantine_ticks`` decode ticks so a
+        lane-correlated fault (bad page, wedged stream) doesn't
+        immediately poison the next admission."""
+        lane = err.lane
+        self.stats.quarantined += 1
+        r = self.running.pop(lane, None)
+        self._lane_age.pop(lane, None)
+        if r is not None:
+            spill = getattr(self.engine, "spill", None)
+            if spill is not None:
+                spilled = spill(lane, key=r.rid, template=r.template)
+            else:
+                self.engine.retire(lane)
+                spilled = False
+            if spilled:
+                self.stats.kv_spilled += 1
+            else:
+                r.generated.clear()
+            r.lane = None
+            self._requeue_front(r.template, [r])
+            self.stats.requeued += 1
+            self._record_lane_failure(r.template, err)
+        else:
+            try:
+                self.engine.retire(lane)
+            except Exception:  # noqa: BLE001 — lane may already be free
+                pass
+        ticks = self.resilience.quarantine_ticks
+        quarantine = getattr(self._kv, "quarantine", None)
+        if ticks and quarantine is not None:
+            try:
+                quarantine(lane)
+            except ValueError:
+                return  # lane not free (engine state diverged): no holdout
+            self._quarantine_release[lane] = self.stats.decode_ticks + ticks
+
+    def _decode_with_recovery(self) -> dict:
+        """One decode step under the failure domain: a
+        :class:`LaneError` quarantines the named lane and re-runs the
+        step for the surviving lanes (the crash consumed no tick — other
+        requests lose no token); any other exception is retried with
+        backoff while the policy allows, then propagates."""
+        fd = self._fd
+        if fd is None:
+            return self.engine.decode_tick()
+        policy = fd.retry
+        crashes = 0
+        attempt = 0
+        while True:
+            try:
+                return self.engine.decode_tick()
+            except LaneError as e:
+                crashes += 1
+                self.stats.decode_retries += 1
+                self._quarantine_lane(e)
+                if crashes > len(self.running) + 8:
+                    raise  # runaway: every retry crashes a new lane
+                continue
+            except BaseException as e:  # noqa: BLE001 — bounded retry
+                attempt += 1
+                if (not policy.is_retryable(e)
+                        or attempt >= max(1, policy.max_attempts)):
+                    raise
+                self.stats.decode_retries += 1
+                policy.sleep_backoff(attempt, "decode")
+
+    def _admit_with_retry(self, fresh: list, tmpl):
+        """Synchronous admission under the failure domain: transient
+        faults retry with backoff; success/failure feeds the template's
+        breaker and consecutive-failure record.  Raises the last
+        exception on final failure (the caller re-queues the batch)."""
+        fd = self._fd
+        if fd is None:
+            return self.engine.admit(fresh, template=tmpl)
+        policy = fd.retry
+        breaker = fd.breaker(tmpl)
+        last = None
+        for attempt in range(max(1, policy.max_attempts)):
+            if attempt > 0:
+                self.stats.prefill_retries += 1
+                policy.sleep_backoff(attempt, tmpl)
+            try:
+                shape = self.engine.admit(fresh, template=tmpl)
+            except BaseException as e:  # noqa: BLE001 — bounded retry
+                last = e
+                if breaker is not None:
+                    breaker.record_failure()
+                if not policy.is_retryable(e):
+                    break
+                continue
+            if breaker is not None:
+                breaker.record_success()
+            self._record_lane_success(tmpl)
+            return shape
+        self._record_lane_failure(tmpl, last)
+        raise last
 
     # ------------------------------------------------- speculative pipeline
     def _strategy_for(self, tmpl: str) -> BatchingStrategy:
@@ -554,6 +743,20 @@ class ContinuousBatchingScheduler:
                 blocked = True
                 continue
             if task.error is not None:
+                if self._fd is not None:
+                    # Spec-thread crash: abort THIS bet cleanly (requests
+                    # back to their queue head, abort-time charged to the
+                    # lane's cost model, breaker fed) and keep settling —
+                    # the pipeline must not wedge on one dead thread.
+                    self.stats.spec_crashes += 1
+                    breaker = self._fd.breaker(task.template)
+                    if breaker is not None:
+                        breaker.record_failure()
+                    self._record_lane_failure(task.template, task.error)
+                    self._abort_task(task, requeues)
+                    missed = True
+                    blocked = True
+                    continue
                 requeues.append((task.template, task.batch))
                 self._flush_requeues(requeues)
                 keep.extend(tasks[i + 1:])
@@ -594,6 +797,11 @@ class ContinuousBatchingScheduler:
                 self._land_batch(tmpl, strat, committed, shape,
                                  task.duration + commit_dt)
                 self.stats.spec_committed += fit
+                if self._fd is not None:
+                    breaker = self._fd.breaker(tmpl)
+                    if breaker is not None:
+                        breaker.record_success()
+                    self._record_lane_success(tmpl)
             if fit < len(task.batch):
                 self._abort_task(task, requeues, n_committed=fit)
                 # Younger bets stop committing at this boundary: the
@@ -649,6 +857,13 @@ class ContinuousBatchingScheduler:
                 # the targeted pop removes exactly this key.
                 self._ready.pop(select=lambda keys, t=tmpl: t, block=False)
                 continue
+            if self._fd is not None:
+                breaker = self._fd.breaker(tmpl)
+                if breaker is not None and breaker.allow() == "shed":
+                    # Tripped breaker: no speculative bets on this
+                    # template — it degrades to the synchronous admission
+                    # path (whose successes/probes close the breaker).
+                    continue
             # The speculative capacity: lanes free now, plus lanes whose
             # request reaches max_new_tokens within the pipeline's horizon
             # (``spec_depth`` decode ticks — a bet staged behind j older
@@ -732,7 +947,13 @@ class ContinuousBatchingScheduler:
         """One scheduling round: commit the staged speculative prefill,
         admit per strategy (per lane), dispatch the next speculation, run
         one decode step."""
-        # 0) tick boundary: the previous tick's speculative prefill lands
+        # 0) failure domain first: quarantined lanes whose cooldown has
+        # elapsed rejoin their pools before admission counts free lanes,
+        # and a template whose submissions keep failing surfaces as a
+        # typed LaneFailedError rather than spinning forever.
+        self._release_quarantine()
+        self._check_lane_health()
+        # 0.5) tick boundary: the previous tick's speculative prefill lands
         # (or aborts) before admission sees the free-lane picture.
         if self.overlap:
             self._commit_speculative()
@@ -828,7 +1049,18 @@ class ContinuousBatchingScheduler:
             for r in fresh:
                 r.metrics.admitted = now
             t0 = time.perf_counter()
-            shape = self.engine.admit(fresh, template=tmpl)
+            try:
+                shape = self._admit_with_retry(fresh, tmpl)
+            except BaseException:
+                if self._fd is None:
+                    raise
+                # Persistent admission failure: the batch goes back to the
+                # head of its lane (it was next in line) and the failure
+                # record / breaker absorb the feedback — _check_lane_health
+                # names the template if this never recovers.
+                self._requeue_front(tmpl, fresh)
+                self.stats.requeued += len(fresh)
+                continue
             # Feedback goes to the deciding model (the lane's own under a
             # policy); warm-shape guarding and the landing bookkeeping are
             # shared with the speculative commit path.
@@ -846,7 +1078,7 @@ class ContinuousBatchingScheduler:
         # 2) one batched decode step over all active lanes
         finished: list[Request] = []
         t0 = time.perf_counter()
-        tokens = self.engine.decode_tick()
+        tokens = self._decode_with_recovery()
         decode_dt = time.perf_counter() - t0
         self.stats.decode_ticks += 1
         if self.policy is not None and tokens:

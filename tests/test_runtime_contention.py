@@ -602,3 +602,61 @@ def test_baseline_module_is_importable_from_bench():
     from benchmarks.bench_lanes import run_contention  # noqa: F401
     src = inspect.getsource(concurrency_mod)
     assert "time.sleep" not in src  # primitives are signal-driven, too
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos: the multi-producer invariants must survive injected faults
+# (REPRO_CHAOS_SEED selects the schedule; the CI chaos job runs two seeds)
+# ---------------------------------------------------------------------------
+
+
+def test_stress_invariants_hold_under_seeded_chaos():
+    from repro.core.faults import ChaosPlan, ChaosService, chaos_seed
+    from repro.core.faults import InjectedParamError
+    from repro.core.resilience import Resilience
+
+    plan = ChaosPlan(seed=chaos_seed(0), fail_rate=0.08, transient_rate=0.15,
+                     transient_repeats=1, latency_rate=0.05, latency=0.0005)
+    svc = ChaosService(TableService(TABLES), plan)
+    policy = LanePolicy(tenant_quotas={f"w{i}": 8 for i in range(8)})
+    rt = AsyncQueryRuntime(svc, n_threads=4, policy=policy,
+                           resilience=Resilience())
+    results: dict = {}
+    lock = threading.Lock()
+
+    def producer(w: int):
+        handles = []
+        for j in range(24):
+            t, k = (w + j) % N_TEMPLATES, (w * 24 + j) % 4096
+            handles.append((t, k, rt.submit(f"t{t}.lookup", (k,),
+                                            tenant=f"w{w}")))
+        for t, k, h in handles:
+            try:
+                out = ("ok", rt.fetch(h))
+            except InjectedParamError as e:
+                out = ("poisoned", e.params)
+            with lock:
+                results[(w, t, k)] = out
+
+    threads = [threading.Thread(target=producer, args=(w,), daemon=True)
+               for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+        assert not t.is_alive(), "a producer hung under chaos"
+    rt.drain()
+    rt.shutdown()
+    # no lost/duplicated deliveries; every failure is its own injection
+    assert len(results) == 8 * 24
+    assert int(rt.stats.completed) == int(rt.stats.submitted)
+    for (w, t, k), (kind, val) in results.items():
+        if plan.poisoned(f"t{t}.lookup", (k,)):
+            assert kind == "poisoned" and val == (k,), (w, t, k, kind, val)
+        else:
+            assert kind == "ok" and val == k * (t + 1), (w, t, k, kind, val)
+    # every admission slot returned: quota gates read zero
+    for gate in rt._tenant_gates.values():
+        assert gate.count == 0
+    for gate in rt._lane_gates.values():
+        assert gate.count == 0

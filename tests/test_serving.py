@@ -876,3 +876,49 @@ def test_engine_pins_one_prefill_shape_per_template(setup):
     # an unrelated template sizes its own bucket from scratch
     shape_c = eng.admit(reqs[4:5], template="embed")
     assert shape_c[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos: serving output must be bit-identical under injected faults
+# (REPRO_CHAOS_SEED selects the schedule; the CI chaos job runs two seeds)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_decode_faults_preserve_outputs_bit_identical(setup):
+    """Acceptance: with seeded decode-tick crashes injected into the real
+    engine, every request completes with EXACTLY the tokens the
+    fault-free run produces — crashed lanes are quarantined, their KV
+    salvaged through the spill pool (or re-prefilled), and the requests
+    resume with no token lost, duplicated, or changed."""
+    from repro.core.faults import ChaosEngine, ChaosPlan, chaos_seed
+    from repro.core.resilience import Resilience
+    from repro.serving.engine import HostSpillPool
+
+    arch, params = setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 200, size=rng.integers(3, 12)).astype(np.int32)
+               for _ in range(6)]
+
+    def run(chaos: bool):
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        eng = InferenceEngine(arch, params, n_lanes=3, max_prompt_len=16,
+                              max_len=48, kv_spill=HostSpillPool(max_entries=16))
+        if chaos:
+            eng = ChaosEngine(eng, ChaosPlan(seed=chaos_seed(0),
+                                             decode_fault_rate=0.25))
+        sched = ContinuousBatchingScheduler(
+            eng, strategy=OneOrAll(),
+            resilience=Resilience(quarantine_ticks=1) if chaos else None)
+        for r in reqs:
+            sched.submit(r)
+        sched.producer_done()
+        done = sched.run_until_drained(max_ticks=2000)
+        assert len(done) == len(reqs)
+        return {r.rid: list(r.generated) for r in reqs}, eng, sched
+
+    baseline, _, _ = run(chaos=False)
+    chaotic, eng, sched = run(chaos=True)
+    assert eng.injected_decode_faults > 0, "chaos never bit: rate too low"
+    assert sched.stats.quarantined > 0
+    assert chaotic == baseline  # bit-identical to the fault-free run

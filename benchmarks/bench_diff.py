@@ -59,6 +59,13 @@ GATED_METRICS = {
     # model; the hard floors (>= 0.7x, zero lost requests, faults
     # actually injected) live in check_floors.py.
     "degraded.tokens_per_s_ratio": {"allowance": 0.3},
+    # Part 10 app traces: tokens/s ratio rides the sleep-based latency
+    # model (hard floor >= 1.3x in check_floors.py); the drive count is
+    # fully deterministic, so ANY growth in the round-trip ratio means the
+    # transformer stopped batching something — gate it tightly,
+    # lower-is-better.
+    "app_traces.tokens_per_s_ratio": {"allowance": 0.3},
+    "app_traces.round_trip_ratio": {"allowance": 0.05, "direction": "lower"},
 }
 
 

@@ -31,7 +31,11 @@ same-machine ratio with a physically-motivated minimum:
   machinery (quarantine + KV salvage + requeue + bounded retry) must
   hold >= 0.7x the fault-free tokens/s, lose ZERO requests, and the
   chaos schedule must actually fire (>= 1 injected fault, >= 1
-  quarantine).
+  quarantine);
+* Part 10 — the auto-transformed app traces must deliver >= 1.3x the
+  synchronous tokens/s through the serving scheduler, pay strictly
+  fewer scheduler drives (round_trip_ratio < 1, lower is better), and
+  keep per-request outputs bit-identical to the synchronous oracle.
 """
 from __future__ import annotations
 
@@ -189,6 +193,33 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
         failures.append(
             "degraded run never quarantined a lane — injected crashes are "
             "not reaching the recovery path")
+
+    app = d["app_traces"]
+    print("app_traces.tokens_per_s_ratio", app["tokens_per_s_ratio"])
+    print("app_traces.round_trip_ratio", app["round_trip_ratio"],
+          f"({app['async_drives']}/{app['sync_drives']} drives)")
+    print("app_traces.outputs_bit_identical", app["outputs_bit_identical"])
+    if app["tokens_per_s_ratio"] < 1.3:
+        failures.append(
+            "auto-transformed app traces must deliver >= 1.3x the "
+            "synchronous tokens/s through the serving scheduler, got "
+            f"{app['tokens_per_s_ratio']:.2f}")
+    if app["round_trip_ratio"] >= 1.0:
+        failures.append(
+            "auto-transformed app traces must pay strictly fewer scheduler "
+            "drives than one-per-query synchronous submission, got ratio "
+            f"{app['round_trip_ratio']:.3f}")
+    if not app["outputs_bit_identical"]:
+        failures.append(
+            "transformed app traces diverged from the synchronous oracle — "
+            "per-request generations must be bit-identical")
+    bad_traces = [name for name, t in app["traces"].items()
+                  if not t["outputs_bit_identical"]
+                  or t["async_drives"] >= t["sync_drives"]]
+    if bad_traces:
+        failures.append(
+            "every individual app trace must be bit-identical with strictly "
+            f"fewer drives; violated by {bad_traces}")
 
     return failures
 

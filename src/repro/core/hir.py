@@ -46,6 +46,8 @@ __all__ = [
     "Query",
     "If",
     "Loop",
+    "Proc",
+    "Call",
     "Program",
     "DepKind",
     "DepEdge",
@@ -56,8 +58,12 @@ __all__ = [
     "FissionError",
     "apply_rule_a",
     "fission_loop",
+    "can_inline",
+    "inline_call",
     "transform_program",
+    "enumerate_fission_sites",
     "analyze_applicability",
+    "collect_names",
     "Interpreter",
 ]
 
@@ -285,6 +291,66 @@ class Loop(Stmt):
 
 
 @dataclasses.dataclass
+class Proc:
+    """A named procedure definition (Guravannavar thesis, ch. on procedure
+    boundaries): formal parameters, a statement body executed in its OWN
+    scope (callees cannot read caller variables — every body read must be a
+    formal or a previously-written local), and an optional ``result`` local
+    returned to the caller.
+
+    ``Proc`` is a definition, not a statement: it only runs when a
+    :class:`Call` names it.  Because callee scopes are isolated, a call's
+    dataflow summary is exact — reads = args, writes = {target} — which is
+    what lets :func:`inline_call` rename the body into the caller without
+    changing any dependence.
+    """
+
+    name: str = "proc"
+    formals: tuple[str, ...] = ()
+    body: list[Stmt] = dataclasses.field(default_factory=list)
+    result: Optional[str] = None
+
+    def __repr__(self) -> str:
+        return (
+            f"proc {self.name}({', '.join(self.formals)}) "
+            f"{{ {len(self.body)} stmts }} -> {self.result}"
+        )
+
+
+@dataclasses.dataclass
+class Call(Stmt):
+    """``target = proc(args...)`` — procedure invocation by direct reference.
+
+    The callee runs in a fresh scope seeded only with ``formals`` bound to
+    the caller's ``args`` values; on return, the callee's ``result`` local
+    (if any) is assigned to ``target``.  External effects (queries, logs)
+    inside the body happen against the shared service, so the call's
+    external read/write summary is the body's.
+    """
+
+    target: Optional[str] = None
+    proc: Proc = None  # type: ignore[assignment]
+    args: tuple[str, ...] = ()
+
+    def reads(self) -> frozenset[str]:
+        return frozenset(self.args) | self._guard_reads()
+
+    def writes(self) -> frozenset[str]:
+        return frozenset([self.target]) if self.target else frozenset()
+
+    def external_reads(self) -> bool:
+        return any(s.external_reads() for s in self.proc.body)
+
+    def external_writes(self) -> bool:
+        return any(s.external_writes() for s in self.proc.body)
+
+    def __repr__(self) -> str:
+        g = f"[{'!' if self.guard_negated else ''}{self.guard}] " if self.guard else ""
+        t = f"{self.target} = " if self.target else ""
+        return f"{g}{t}{self.proc.name}({', '.join(self.args)})"
+
+
+@dataclasses.dataclass
 class _ProducerConsumer(Stmt):
     """Result of Rule A: producer loop + consumer loop over a context table.
 
@@ -314,6 +380,15 @@ class _ProducerConsumer(Stmt):
 
     def external_reads(self) -> bool:
         return True
+
+    def external_writes(self) -> bool:
+        # A fissioned loop still performs whatever external writes (logs,
+        # effects) its statements perform — an enclosing loop's dependence
+        # analysis must keep seeing them or nested fission would reorder
+        # emissions it may not.
+        return self.producer.external_writes() or any(
+            s.external_writes() for s in self.consumer_body
+        )
 
     def __repr__(self) -> str:
         mode = "overlap" if self.overlap else "two-phase"
@@ -475,20 +550,34 @@ def build_ddg(body: Sequence[Stmt], loop_body: bool = True) -> DataDependenceGra
 # ---------------------------------------------------------------------------
 
 
-def apply_rule_b(body: Sequence[Stmt]) -> list[Stmt]:
+def apply_rule_b(
+    body: Sequence[Stmt],
+    *,
+    reserved: Sequence[str] = (),
+    _fresh: Optional["_FreshNames"] = None,
+) -> list[Stmt]:
     """Flatten ``If`` statements into guarded statements (paper Rule B).
 
     ``if (p) {ss1} else {ss2}`` becomes ``cv = p; [cv] ss1; [!cv] ss2``.
     The predicate is already a variable in our IR, so no fresh assignment is
     needed unless the branch bodies might overwrite it — we always introduce
     the fresh ``cv`` for fidelity with the rule (and safety).
+
+    ``reserved`` holds names that fresh guard variables must additionally
+    avoid — callers transforming a whole program pass every name the
+    program uses anywhere, so a generated ``cv_N`` can never collide with a
+    user variable outside this body (see :class:`_FreshNames`).
     """
     out: list[Stmt] = []
-    fresh = _FreshNames(body)
+    # One namer is shared across the whole recursion: If.reads()/writes()
+    # aggregate their branch bodies, so the top-level namer already knows
+    # every nested name, and sharing it keeps sibling/nested scopes from
+    # reusing each other's generated guards.
+    fresh = _fresh if _fresh is not None else _FreshNames(body, reserved=reserved)
     for s in body:
         if isinstance(s, If):
-            inner_then = apply_rule_b(s.then_body)
-            inner_else = apply_rule_b(s.else_body)
+            inner_then = apply_rule_b(s.then_body, _fresh=fresh)
+            inner_else = apply_rule_b(s.else_body, _fresh=fresh)
             cv = fresh("cv")
             # cv = p  (possibly itself guarded — nested Ifs come pre-flattened
             # by the recursive call, so s.guard is from an outer construct)
@@ -528,11 +617,60 @@ def _conjoin_guard(
     return t
 
 
+def collect_names(stmts: Sequence[Stmt]) -> set[str]:
+    """Every variable name a statement sequence mentions anywhere: reads,
+    writes, loop binders, guards — recursing into ``If``/``Loop`` bodies and
+    into the bodies of procedures reachable through :class:`Call` (callee
+    locals live in their own scope, but counting them keeps fresh names
+    unique program-wide, which inlining relies on)."""
+    names: set[str] = set()
+    seen_procs: set[int] = set()
+
+    def visit(seq: Sequence[Stmt]) -> None:
+        for s in seq:
+            names.update(s.reads() | s.writes())
+            if s.guard:
+                names.add(s.guard)
+            if isinstance(s, If):
+                visit(s.then_body)
+                visit(s.else_body)
+            elif isinstance(s, Loop):
+                names.add(s.item_var)
+                names.add(s.iter_var)
+                visit(s.body)
+            elif isinstance(s, _ProducerConsumer):
+                names.update(s.split_vars)
+                names.update((s.table_var, s.record_var))
+                visit([s.producer])
+                visit(s.consumer_body)
+            elif isinstance(s, Call):
+                names.update(s.args)
+                if id(s.proc) not in seen_procs:
+                    seen_procs.add(id(s.proc))
+                    names.update(s.proc.formals)
+                    visit(s.proc.body)
+
+    visit(stmts)
+    names.discard(None)  # unguarded / targetless statements
+    return names
+
+
 class _FreshNames:
-    def __init__(self, body: Sequence[Stmt]):
-        self._used = set()
-        for s in body:
-            self._used |= s.reads() | s.writes()
+    """Fresh-name allocator seeded with every name the given body mentions
+    plus an explicit ``reserved`` set.
+
+    The ``reserved`` parameter exists because seeding from one loop body is
+    not enough: Rule A's generated names (``handle_N``, ``cv_N``, …) land in
+    the shared environment at run time, so they must avoid collision with
+    *program-wide* names, not just the body being fissioned — a program
+    using ``handle_0`` outside the loop would otherwise be silently
+    clobbered (a real miscompile the differential harness pinned down).
+    Whole-program callers pass :func:`collect_names` of the full program.
+    """
+
+    def __init__(self, body: Sequence[Stmt], reserved: Sequence[str] = ()):
+        self._used = set(reserved)
+        self._used |= collect_names(body)
         self._n = 0
 
     def __call__(self, prefix: str) -> str:
@@ -632,6 +770,17 @@ def _check_rule_a_preconditions(body: Sequence[Stmt], qi: int) -> None:
     i.e. src ∈ after-side, dst ∈ before-side.  (Plain loop-carried anti /
     output deps on program variables are *allowed* to cross — that is the
     paper's improvement over [1]; the loop context table renames them away.)
+
+    A third check guards the context-table capture itself:
+
+    (c) a split variable written by the consumer side must have at least one
+        *unconditional* producer-side write.  The table captures split
+        variables unconditionally after each producer iteration; when every
+        producer write of ``v`` is guarded and the guard is off for
+        iteration ``i``, the captured value is whatever the producer phase
+        last left in ``v`` — NOT the consumer's iteration ``i-1`` write that
+        the synchronous program would observe.  (Found by the differential
+        harness; see test_hir_rules.py's minimized regression.)
     """
     ddg = build_ddg(body, loop_body=True)
     before = set(range(qi + 1))  # ss1 ∪ {s}
@@ -652,6 +801,19 @@ def _check_rule_a_preconditions(body: Sequence[Stmt], qi: int) -> None:
                 f"split: {e!r} (precondition (b) of Rule A)"
             )
 
+    after_writes: set[str] = set()
+    for i in after:
+        after_writes |= body[i].writes()
+    for v in sorted(set(_split_variables(body, qi)) & after_writes):
+        writers = [body[i] for i in before if v in body[i].writes()]
+        if writers and all(s.guard is not None for s in writers):
+            raise FissionError(
+                f"split variable {v!r} is written only conditionally by the "
+                f"producer side but rewritten by the consumer side — the "
+                f"unconditional context-table restore would clobber the "
+                f"consumer's previous-iteration value (precondition (c))"
+            )
+
 
 def _split_variables(body: Sequence[Stmt], qi: int) -> tuple[str, ...]:
     """SV of Rule A: variables with an LCAD or LCOD edge crossing the split
@@ -664,12 +826,21 @@ def _split_variables(body: Sequence[Stmt], qi: int) -> tuple[str, ...]:
     (the producer of a *later* iteration would otherwise clobber the value
     the consumer of an *earlier* iteration needs — exactly the LCAD case).
     Variables the consumer both writes before reading are still captured
-    when a producer write may reach a consumer read (conditional writes —
-    Rule A item 3 restores only non-null attributes; we capture
-    conservatively and restore unconditionally, which is equivalent because
-    capture happens after the producer's write of the same iteration).
+    when a producer write may reach a consumer read.  Capture happens after
+    the producer's write of the same iteration and restore is unconditional,
+    which is equivalent as long as precondition (c) of
+    :func:`_check_rule_a_preconditions` holds (some producer-side write of
+    the variable is unconditional whenever the consumer side rewrites it).
+
+    The query statement itself is *excluded* from the producer-side write
+    set: its target is written by the consumer's ``_Fetch``, never by the
+    producer (the submit writes the handle), so capturing it would snapshot
+    a stale pre-loop value — and the unconditional restore would clobber
+    the loop-carried previous-iteration value the consumer relies on when
+    the query is guarded and the guard is false (fuzz-found miscompile).
+    The query's guard variable is added back by :func:`apply_rule_a`.
     """
-    before = list(body[: qi + 1])
+    before = list(body[:qi])
     after = list(body[qi + 1 :])
     written_before: set[str] = set()
     for s in before:
@@ -687,14 +858,19 @@ def apply_rule_a(
     *,
     overlap: bool = False,
     reorder: bool = True,
+    reserved: Sequence[str] = (),
 ) -> _ProducerConsumer:
     """Split ``loop`` at its first Query statement (paper Rule A).
 
     ``overlap=True`` produces the §5.1 variant (producer in its own thread,
     blocking-queue context table).  ``reorder=True`` first applies the
     statement-reordering algorithm when the preconditions fail.
+    ``reserved`` names are kept out of the generated fresh variables
+    (``handle_N``, ``cv_N``, …); whole-program callers pass every name the
+    surrounding program uses so the handle variable cannot clobber a program
+    variable outside this loop.
     """
-    body = apply_rule_b(loop.body)
+    body = apply_rule_b(loop.body, reserved=reserved)
     qi = _find_query(body)
     if qi is None:
         raise FissionError("loop contains no query execution statement")
@@ -715,7 +891,7 @@ def apply_rule_a(
             "the conservative external-dependence model (paper §8)"
         )
 
-    fresh = _FreshNames(body)
+    fresh = _FreshNames(body, reserved=reserved)
     table_var = fresh("t")
     record_var = fresh("r")
     handle_attr = fresh("handle")
@@ -766,8 +942,201 @@ def fission_loop(loop: Loop, **kw) -> Stmt:
     return apply_rule_a(loop, **kw)
 
 
+# ---------------------------------------------------------------------------
+# Procedure inlining (Guravannavar thesis: inline-then-fission)
+# ---------------------------------------------------------------------------
+
+
+def _proc_has_query(proc: Proc, _seen: Optional[set[int]] = None) -> bool:
+    """Whether the procedure (transitively) executes any query."""
+    seen = _seen if _seen is not None else set()
+    if id(proc) in seen:
+        return False
+    seen.add(id(proc))
+
+    def visit(stmts: Sequence[Stmt]) -> bool:
+        for s in stmts:
+            if isinstance(s, (Query, _Submit)):
+                return True
+            if isinstance(s, If) and (visit(s.then_body) or visit(s.else_body)):
+                return True
+            if isinstance(s, Loop) and visit(s.body):
+                return True
+            if isinstance(s, Call) and _proc_has_query(s.proc, seen):
+                return True
+        return False
+
+    return visit(proc.body)
+
+
+def _proc_local_names(proc: Proc) -> set[str]:
+    """Names bound inside the procedure's scope: formals, every write
+    target, and loop binders — exactly the names :func:`inline_call` must
+    rename to keep the inlined body out of the caller's namespace."""
+    local = set(proc.formals)
+
+    def visit(stmts: Sequence[Stmt]) -> None:
+        for s in stmts:
+            local.update(s.writes())
+            if isinstance(s, If):
+                visit(s.then_body)
+                visit(s.else_body)
+            elif isinstance(s, Loop):
+                local.add(s.item_var)
+                visit(s.body)
+
+    visit(proc.body)
+    return local
+
+
+def can_inline(proc: Proc) -> tuple[bool, str]:
+    """§6.2-style applicability check for inline-then-fission.
+
+    Refuses (with a reason) when inlining would be unsound or undefined:
+
+    * **recursion** — a procedure (transitively) calling itself cannot be
+      inlined by substitution;
+    * **free variables** — a body read that is neither a formal nor a
+      procedure-local write has no value in the callee scope (the program
+      is invalid; refusing keeps the transformer from "fixing" it by
+      capturing caller state the synchronous semantics never read);
+    * **undefined result** — ``result`` must be a formal or a body write.
+    """
+    # Recursion: can `proc` reach itself over the static call graph?
+    def callees(p: Proc) -> list[Proc]:
+        found: list[Proc] = []
+
+        def walk(stmts: Sequence[Stmt]) -> None:
+            for s in stmts:
+                if isinstance(s, Call):
+                    found.append(s.proc)
+                elif isinstance(s, If):
+                    walk(s.then_body)
+                    walk(s.else_body)
+                elif isinstance(s, Loop):
+                    walk(s.body)
+
+        walk(p.body)
+        return found
+
+    stack, seen = [proc], set()
+    while stack:
+        p = stack.pop()
+        if id(p) in seen:
+            continue
+        seen.add(id(p))
+        for callee in callees(p):
+            if callee is proc:
+                return False, (
+                    f"procedure {proc.name!r} is (transitively) recursive"
+                )
+            stack.append(callee)
+
+    local = _proc_local_names(proc)
+    free: set[str] = set()
+    for s in proc.body:
+        free |= s.reads()
+    free -= local
+    if free:
+        return False, (
+            f"procedure {proc.name!r} reads undefined (free) variables "
+            f"{sorted(free)} — callee scopes are isolated"
+        )
+    if proc.result is not None and proc.result not in local:
+        return False, (
+            f"procedure {proc.name!r} result {proc.result!r} is never bound"
+        )
+    return True, ""
+
+
+def _rename_stmt(s: Stmt, ren: Mapping[str, str]) -> Stmt:
+    """Alpha-rename one statement (recursively) under ``ren``; names not in
+    the map — including ``Assign.effect`` resource names — pass through."""
+
+    def r(name: Optional[str]) -> Optional[str]:
+        return ren.get(name, name) if name is not None else None
+
+    t = dataclasses.replace(s)
+    t.guard = r(s.guard)
+    if isinstance(t, Assign):
+        t.target = r(t.target)
+        t.args = tuple(r(a) for a in t.args)
+    elif isinstance(t, (Query, _Submit)):
+        t.target = r(t.target)
+        t.params = tuple(r(p) for p in t.params)
+    elif isinstance(t, _Fetch):
+        t.target = r(t.target)
+        t.handle = r(t.handle)
+    elif isinstance(t, If):
+        t.pred = r(t.pred)
+        t.then_body = [_rename_stmt(b, ren) for b in s.then_body]
+        t.else_body = [_rename_stmt(b, ren) for b in s.else_body]
+    elif isinstance(t, Loop):
+        t.item_var = r(t.item_var)
+        t.iter_var = r(t.iter_var)
+        t.body = [_rename_stmt(b, ren) for b in s.body]
+    elif isinstance(t, Call):
+        t.target = r(t.target)
+        t.args = tuple(r(a) for a in t.args)
+        # the callee's own scope is untouched: its locals are not ours
+    else:
+        raise TypeError(f"cannot rename statement {type(s)}")
+    return t
+
+
+def _identity(v: Any) -> Any:
+    return v
+
+
+def _negate(v: Any) -> bool:
+    return not bool(v)
+
+
+def inline_call(call: Call, fresh: _FreshNames) -> list[Stmt]:
+    """Substitute a :class:`Call` with its procedure body (thesis
+    inline-then-fission, step 1).
+
+    Every callee-scope name is alpha-renamed to a fresh caller name
+    (``<proc>_<var>_N``), formals become explicit copy assignments from the
+    caller's argument variables, and ``target = result`` closes the call.  A
+    guarded call wraps the whole expansion in an ``If`` on the (possibly
+    freshly negated) guard so Rule B can later flatten it — callee
+    statements keep their own inner guards, and nested guards are illegal.
+
+    Callers must have verified :func:`can_inline` first.
+    """
+    proc = call.proc
+    ren = {
+        v: fresh(f"{proc.name}_{v}")
+        for v in sorted(_proc_local_names(proc))
+    }
+    stmts: list[Stmt] = []
+    for formal, arg in zip(proc.formals, call.args):
+        stmts.append(
+            Assign(target=ren[formal], fn=_identity, args=(arg,))
+        )
+    stmts.extend(_rename_stmt(s, ren) for s in proc.body)
+    if call.target is not None and proc.result is not None:
+        stmts.append(
+            Assign(target=call.target, fn=_identity, args=(ren[proc.result],))
+        )
+    if call.guard is None:
+        return stmts
+    pred = call.guard
+    out: list[Stmt] = []
+    if call.guard_negated:
+        pred = fresh("cv")
+        out.append(Assign(target=pred, fn=_negate, args=(call.guard,)))
+    out.append(If(pred=pred, then_body=stmts))
+    return out
+
+
 def transform_program(
-    prog: Program, *, overlap: bool = False, max_depth: int = 8
+    prog: Program,
+    *,
+    overlap: bool = False,
+    max_depth: int = 8,
+    sites: Optional[Sequence[int]] = None,
 ) -> Program:
     """Transform every fissionable loop in ``prog`` (nested loops §3.4:
     innermost-first, then the outer loop sees the fissioned inner statement
@@ -775,18 +1144,67 @@ def transform_program(
     preconditions hold — matching the paper's nested-table construction
     conceptually, executed here via the runtime queue which is shared).
     Loops whose preconditions fail are left untouched (rule application can
-    stop at any point — §3)."""
+    stop at any point — §3).
+
+    Query-bearing :class:`Call` statements are inlined first (thesis
+    inline-then-fission) when :func:`can_inline` approves, so Rule A/B and
+    reordering apply across procedure boundaries; unsafe inlines (recursion,
+    free variables) leave the call in place.
+
+    ``sites`` optionally restricts Rule A to a subset of loop sites, named
+    by their preorder index over the post-inline traversal (the numbering
+    :func:`enumerate_fission_sites` reports) — the handle the synthesis
+    search in :mod:`repro.core.equivalence` uses to enumerate *which*
+    queries to asynchronize.
+    """
+    return _transform(prog, overlap=overlap, max_depth=max_depth, sites=sites)
+
+
+def _transform(
+    prog: Program,
+    *,
+    overlap: bool = False,
+    max_depth: int = 8,
+    sites: Optional[Sequence[int]] = None,
+    report: Optional[list] = None,
+) -> Program:
+    """Shared engine behind :func:`transform_program` and
+    :func:`enumerate_fission_sites`: one deterministic traversal that
+    numbers loop sites in preorder (post-inline), optionally restricted to
+    ``sites``, optionally appending ``(site, fissioned, reason)`` triples
+    to ``report``."""
+    fresh = _FreshNames(prog.body, reserved=prog.inputs)
+    allowed = None if sites is None else set(sites)
+    counter = itertools.count()
 
     def rewrite(stmts: list[Stmt], depth: int) -> list[Stmt]:
         out: list[Stmt] = []
         for s in stmts:
+            if (
+                isinstance(s, Call)
+                and depth < max_depth
+                and _proc_has_query(s.proc)
+                and can_inline(s.proc)[0]
+            ):
+                out.extend(rewrite(inline_call(s, fresh), depth + 1))
+                continue
             if isinstance(s, Loop) and depth < max_depth:
+                site = next(counter)
                 s = dataclasses.replace(s, body=rewrite(s.body, depth + 1))
-                try:
-                    out.append(apply_rule_a(s, overlap=overlap))
-                    continue
-                except FissionError:
-                    pass
+                if allowed is None or site in allowed:
+                    try:
+                        out.append(
+                            apply_rule_a(
+                                s, overlap=overlap,
+                                reserved=frozenset(fresh._used),
+                            )
+                        )
+                        if report is not None:
+                            report.append((site, True, ""))
+                        continue
+                    except FissionError as e:
+                        if report is not None:
+                            report.append((site, False, str(e)))
             if isinstance(s, If):
                 s = dataclasses.replace(
                     s,
@@ -799,6 +1217,19 @@ def transform_program(
     return Program(body=rewrite(list(prog.body), 0), inputs=prog.inputs)
 
 
+def enumerate_fission_sites(
+    prog: Program, *, overlap: bool = False, max_depth: int = 8
+) -> list[tuple[int, bool, str]]:
+    """Attempt Rule A at every loop site of the (inlined) program; return
+    ``(site_index, fissioned, reason)`` per site in the same deterministic
+    preorder numbering ``transform_program(sites=...)`` accepts.  The
+    synthesis-lite search enumerates subsets of the fissioned sites and
+    re-checks equivalence per candidate."""
+    report: list[tuple[int, bool, str]] = []
+    _transform(prog, overlap=overlap, max_depth=max_depth, report=report)
+    return report
+
+
 # ---------------------------------------------------------------------------
 # Applicability analysis (§6.2, Table 1)
 # ---------------------------------------------------------------------------
@@ -806,16 +1237,44 @@ def transform_program(
 
 def analyze_applicability(prog: Program) -> dict[str, Any]:
     """Count query-in-loop opportunities and how many Rule A (with Rule B +
-    reordering) can transform — the paper's Table 1."""
+    reordering + procedure inlining) can transform — the paper's Table 1.
+
+    The analysis runs over the *inlined* program so opportunities inside
+    procedures called from loops are visited exactly as
+    :func:`transform_program` would see them; query-bearing calls whose
+    inline is refused (recursion, free variables) are reported in
+    ``failures`` and their internal opportunities are not counted — the
+    transformer will not enter them either, so the counts and the rewrite
+    agree."""
     opportunities = 0
     transformed = 0
     failures: list[str] = []
 
-    def visit(stmts: Sequence[Stmt]):
-        nonlocal opportunities, transformed
+    fresh = _FreshNames(prog.body, reserved=prog.inputs)
+
+    def inline_visible(stmts: Sequence[Stmt], depth: int = 0) -> list[Stmt]:
+        out: list[Stmt] = []
         for s in stmts:
+            if (
+                isinstance(s, Call)
+                and depth < 8
+                and _proc_has_query(s.proc)
+            ):
+                ok, reason = can_inline(s.proc)
+                if ok:
+                    out.extend(inline_call(s, fresh))
+                    continue
+                failures.append(f"inline refused: {reason}")
+            out.append(s)
+        return out
+
+    def visit(stmts: Sequence[Stmt], depth: int = 0):
+        nonlocal opportunities, transformed
+        for s in inline_visible(stmts, depth):
             if isinstance(s, Loop):
-                flat = apply_rule_b(s.body)
+                body = inline_visible(s.body, depth + 1)
+                s = dataclasses.replace(s, body=body)
+                flat = apply_rule_b(body)
                 n_queries = sum(1 for t in flat if isinstance(t, Query))
                 opportunities += n_queries
                 probe = s
@@ -832,10 +1291,10 @@ def analyze_applicability(prog: Program) -> dict[str, Any]:
                     except FissionError as e:
                         failures.append(str(e))
                         break
-                visit(s.body)
+                visit(body, depth + 1)
             elif isinstance(s, If):
-                visit(s.then_body)
-                visit(s.else_body)
+                visit(s.then_body, depth)
+                visit(s.else_body, depth)
 
     visit(prog.body)
     pct = 100.0 * transformed / opportunities if opportunities else 100.0
@@ -913,6 +1372,19 @@ class Interpreter:
             for item in list(env[s.iter_var]):
                 env[s.item_var] = item
                 self._exec_block(s.body, env)
+        elif isinstance(s, Call):
+            # Callee scopes are isolated: the local environment holds ONLY
+            # the formals (bound to the caller's argument values); a body
+            # read of anything else is a KeyError in the callee, same as in
+            # the inlined form where the free variable was never assigned.
+            local = {
+                f: env[a] for f, a in zip(s.proc.formals, s.args)
+            }
+            self._exec_block(s.proc.body, local)
+            if s.target is not None:
+                env[s.target] = (
+                    local[s.proc.result] if s.proc.result is not None else None
+                )
         elif isinstance(s, _ProducerConsumer):
             self._exec_fissioned(s, env)
         else:

@@ -1,0 +1,406 @@
+"""Seeded random HIR program generator for the differential harness.
+
+The core generator is plain-``random`` (fully deterministic from a seed, no
+third-party dependency) so the equivalence harness runs as tier-1 tests in
+any environment; :mod:`hypothesis` strategies are layered on top when the
+library is installed (``hir_programs()`` below), giving shrinking for free
+in dev environments.
+
+Generated programs mix every surface the transformer handles:
+
+* straight-line arithmetic over a small integer domain,
+* ``If`` guards (data-dependent predicates, both branches),
+* (nested) ``Loop`` s over list inputs,
+* queries with data-dependent and loop-carried parameters,
+* ``Proc``/``Call`` — including procedures containing queries and whole
+  query loops, so inline-then-fission gets exercised end to end,
+* occasional effectful assigns (ordered observable emissions) that force
+  the transformer to *refuse* fission — negative coverage.
+
+Construction maintains a defined-variable scope so every read is preceded
+by a write on every path (guarded writes to fresh names are followed by an
+unconditional default first), keeping both the synchronous oracle and the
+transformed program crash-free.  Query-bearing loops iterate lists of
+8–12 items of which at least six pass the parity guards the generator
+emits, so a fissioned loop always executes >= 4 queries — what makes the
+"strictly fewer round trips" assertion non-vacuous (a batch costs 3 round
+trips; see services.SimulatedDBService).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Optional
+
+from repro.core.hir import (
+    Assign,
+    Call,
+    If,
+    Loop,
+    Proc,
+    Program,
+    Query,
+    collect_names,
+)
+
+__all__ = ["GeneratedProgram", "gen_program", "QUERY_NAMES", "db_compute"]
+
+QUERY_NAMES = ("qa", "qb", "qc")
+
+
+# ---------------------------------------------------------------------------
+# Deterministic value domain
+# ---------------------------------------------------------------------------
+#
+# All program values are small ints (lists of ints as loop iterables); all
+# functions are total over ints and named, so program repr()s stay readable
+# in failure reports.  The modulus keeps values bounded under repeated
+# multiplication without ever colliding to a constant.
+
+_MOD = 10007
+
+
+def db_compute(query_name: str, params: tuple) -> int:
+    """The simulated database's deterministic compute function: a distinct
+    total function of (query, params) so result mix-ups are visible."""
+    base = sum((i + 3) * int(v) for i, v in enumerate(params))
+    off = {name: j + 1 for j, name in enumerate(QUERY_NAMES)}
+    return (base * 7 + off.get(query_name, 0)) % _MOD
+
+
+def _add(a: int, b: int) -> int:
+    return (a + b) % _MOD
+
+
+def _sub(a: int, b: int) -> int:
+    return (a - b) % _MOD
+
+
+def _mul(a: int, b: int) -> int:
+    return (a * b) % _MOD
+
+
+def _mix(a: int, b: int) -> int:
+    return (a * 31 + b * 17 + 5) % _MOD
+
+
+def _inc(a: int) -> int:
+    return (a + 1) % _MOD
+
+
+def _is_even(a: int) -> bool:
+    return int(a) % 2 == 0
+
+
+def _is_small(a: int) -> bool:
+    return int(a) % 16 < 11
+
+
+def _zero() -> int:
+    return 0
+
+
+_BINOPS = (_add, _sub, _mul, _mix)
+_PREDS = (_is_even, _is_small)
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GeneratedProgram:
+    """One generated trial: the program, concrete inputs, and the variable
+    names whose final environment values are the observable output."""
+
+    program: Program
+    inputs: dict[str, Any]
+    observe: tuple[str, ...]
+    seed_note: str = ""
+
+
+class _Gen:
+    """Stateful single-program builder (one instance per generated program)."""
+
+    def __init__(self, rng: random.Random, allow_procs: bool = True,
+                 allow_effects: bool = True):
+        self.rng = rng
+        self.allow_procs = allow_procs
+        self.allow_effects = allow_effects
+        self.n_vars = 0
+        self.n_queries = 0
+        self.procs: list[Proc] = []
+
+    def fresh_int(self) -> str:
+        self.n_vars += 1
+        return f"v{self.n_vars - 1}"
+
+    def fresh_query_target(self) -> str:
+        # q_-prefixed on purpose: programs must survive sharing the
+        # transformer's own fresh-name shapes (regression: _FreshNames).
+        self.n_queries += 1
+        return f"q_{self.n_queries - 1}"
+
+    # -- leaf statements ----------------------------------------------------
+    def assign(self, scope: list[str], target: Optional[str] = None,
+               guard: Optional[str] = None) -> Assign:
+        rng = self.rng
+        if target is None:
+            target = self.fresh_int()
+        if rng.random() < 0.15 or not scope:
+            return Assign(target=target, fn=_zero, args=(), guard=guard)
+        if rng.random() < 0.25:
+            return Assign(target=target, fn=_inc,
+                          args=(rng.choice(scope),), guard=guard)
+        fn = rng.choice(_BINOPS)
+        return Assign(target=target, fn=fn,
+                      args=(rng.choice(scope), rng.choice(scope)),
+                      guard=guard)
+
+    def pred_assign(self, scope: list[str],
+                    parity_only: bool = False) -> Assign:
+        # Query guards are parity-only: generated lists carry >= 6 even
+        # elements, so a guarded query still executes >= 4 times and the
+        # round-trip win over the 3-trip batch stays strict.
+        target = self.fresh_int()
+        fn = _is_even if parity_only else self.rng.choice(_PREDS)
+        return Assign(target=target, fn=fn,
+                      args=(self.rng.choice(scope),))
+
+    def query(self, scope: list[str], guard: Optional[str] = None) -> Query:
+        rng = self.rng
+        n_params = rng.choice((1, 1, 2))
+        params = tuple(rng.choice(scope) for _ in range(n_params))
+        return Query(target=self.fresh_query_target(),
+                     query_name=rng.choice(QUERY_NAMES),
+                     params=params, guard=guard)
+
+    def effect(self, scope: list[str]) -> Assign:
+        return Assign(target=None, fn=_inc, args=(self.rng.choice(scope),),
+                      effect="log")
+
+    # -- procedures ---------------------------------------------------------
+    def make_scalar_proc(self, idx: int) -> Proc:
+        """Straight-line proc: arithmetic around a query, scalar result."""
+        rng = self.rng
+        body: list = [Assign(target="t0", fn=_mix, args=("a", "b"))]
+        if rng.random() < 0.5:
+            body.append(Assign(target="t1", fn=_inc, args=("t0",)))
+        else:
+            body.append(Assign(target="t1", fn=rng.choice(_BINOPS),
+                               args=("t0", "a")))
+        body.append(Query(target="pr", query_name=rng.choice(QUERY_NAMES),
+                          params=("t1",)))
+        body.append(Assign(target="out", fn=_add, args=("pr", "t0")))
+        return Proc(name=f"p{idx}", formals=("a", "b"), body=body,
+                    result="out")
+
+    def make_loop_proc(self, idx: int) -> Proc:
+        """Proc whose body is a whole query loop over a list formal —
+        inlining it inside (or outside) a caller loop is the thesis's
+        procedure-boundary fission case."""
+        rng = self.rng
+        body: list = [
+            Assign(target="acc", fn=_zero, args=()),
+            Loop(item_var="k", iter_var="ks", body=[
+                Query(target="r", query_name=rng.choice(QUERY_NAMES),
+                      params=("k",)),
+                Assign(target="acc", fn=_add, args=("acc", "r")),
+            ]),
+        ]
+        return Proc(name=f"p{idx}", formals=("ks",), body=body, result="acc")
+
+    # -- compound statements ------------------------------------------------
+    def loop_body(self, item: str, outer_scope: list[str],
+                  depth: int, lists: list[str]) -> list:
+        """A loop body: guard computation, query (usually), accumulator
+        updates, occasionally a call / nested loop / effect."""
+        rng = self.rng
+        scope = list(outer_scope) + [item]
+        body: list = []
+        # optional pre-query arithmetic (may be loop-carried via outer vars)
+        for _ in range(rng.randrange(0, 3)):
+            a = self.assign(scope)
+            body.append(a)
+            scope.append(a.target)
+        # optional loop-carried accumulator update placed BEFORE the query
+        # half the time (often fissionable, and makes loop-carried query
+        # parameters possible) and after it otherwise (a loop-carried flow
+        # crossing whenever something before the query reads it — refusal
+        # coverage)
+        acc_stmt = None
+        accs = [v for v in outer_scope if v.startswith("v")]
+        if accs:
+            acc = rng.choice(accs)
+            src = rng.choice([v for v in scope
+                              if not v.startswith("q_")] or [item])
+            acc_stmt = Assign(target=acc, fn=rng.choice((_add, _mix)),
+                              args=(acc, src))
+            if rng.random() < 0.5:
+                body.append(acc_stmt)
+                acc_stmt = None
+        style = rng.random()
+        if style < 0.10 and self.allow_effects:
+            # effect + query in one loop -> transformer must refuse
+            body.append(self.effect(scope))
+            body.append(self.query(scope))
+        elif style < 0.22 and self.procs and self.allow_procs:
+            proc = rng.choice(self.procs)
+            if proc.formals == ("ks",):
+                args: tuple = (rng.choice(lists),)
+            else:
+                args = (rng.choice(scope), rng.choice(scope))
+            target = self.fresh_int()
+            body.append(Call(target=target, proc=proc, args=args))
+            scope.append(target)
+        elif style < 0.34 and depth < 1 and lists:
+            inner_item = self.fresh_int()
+            inner = Loop(item_var=inner_item, iter_var=rng.choice(lists),
+                         body=self.loop_body(inner_item, scope, depth + 1,
+                                             lists))
+            body.append(inner)
+        elif style < 0.46:
+            # If around the query: Rule B must flatten it into guards; both
+            # branches write the target so it is always defined
+            g = self.pred_assign([item], parity_only=True)
+            body.append(g)
+            scope.append(g.target)
+            q = self.query(scope)
+            body.append(If(pred=g.target, then_body=[q],
+                           else_body=[Assign(target=q.target, fn=_inc,
+                                             args=(item,))]))
+            scope.append(q.target)
+        else:
+            guard = None
+            if rng.random() < 0.4:
+                g = self.pred_assign([item], parity_only=True)
+                body.append(g)
+                scope.append(g.target)
+                guard = g.target
+            q = self.query(scope, guard=guard)
+            body.append(q)
+            if guard is None:
+                scope.append(q.target)
+            else:
+                # guarded query target may be unset this iteration: only
+                # use it behind the same guard
+                body.append(Assign(target=self.fresh_int(), fn=_inc,
+                                   args=(q.target,), guard=guard))
+            if rng.random() < 0.35 and guard is None:
+                # second query in the same loop (stays blocking after
+                # fission — consumer-side execute path)
+                body.append(self.query(scope))
+        if acc_stmt is not None:
+            body.append(acc_stmt)
+        return body
+
+    def gen(self) -> GeneratedProgram:
+        rng = self.rng
+        # ---- inputs: ints + int lists (stacked so parity guards pass on
+        # at least six elements -> fissioned loops execute >= 4 queries)
+        inputs: dict[str, Any] = {}
+        int_inputs = [f"x{i}" for i in range(rng.randrange(2, 4))]
+        for name in int_inputs:
+            inputs[name] = rng.randrange(0, 50)
+        lists = [f"L{i}" for i in range(rng.randrange(1, 3))]
+        for name in lists:
+            n = rng.randrange(8, 13)
+            vals = [rng.randrange(0, 30) * 2 for _ in range(max(6, n - 2))]
+            vals += [rng.randrange(0, 30) for _ in range(n - len(vals))]
+            rng.shuffle(vals)
+            inputs[name] = vals
+
+        if self.allow_procs and rng.random() < 0.7:
+            self.procs.append(self.make_scalar_proc(len(self.procs)))
+        if self.allow_procs and rng.random() < 0.35:
+            self.procs.append(self.make_loop_proc(len(self.procs)))
+
+        scope = list(int_inputs)
+        body: list = []
+        # a couple of accumulators usable as loop-carried state
+        for _ in range(2):
+            a = self.assign(scope)
+            body.append(a)
+            scope.append(a.target)
+
+        n_top = rng.randrange(3, 7)
+        n_loops = 0
+        for _ in range(n_top):
+            roll = rng.random()
+            if roll < 0.45 and n_loops < 2:
+                n_loops += 1
+                item = self.fresh_int()
+                body.append(Loop(item_var=item, iter_var=rng.choice(lists),
+                                 body=self.loop_body(item, scope, 0, lists)))
+            elif roll < 0.6:
+                g = self.pred_assign(scope)
+                body.append(g)
+                then_a = self.assign(scope, target=self.fresh_int())
+                else_a = Assign(target=then_a.target, fn=_inc,
+                                args=(rng.choice(scope),))
+                body.append(If(pred=g.target, then_body=[then_a],
+                               else_body=[else_a]))
+                scope.append(then_a.target)
+            elif roll < 0.72 and self.procs:
+                proc = rng.choice(self.procs)
+                if proc.formals == ("ks",):
+                    args: tuple = (rng.choice(lists),)
+                else:
+                    args = (rng.choice(scope), rng.choice(scope))
+                target = self.fresh_int()
+                body.append(Call(target=target, proc=proc, args=args))
+                scope.append(target)
+            elif roll < 0.82:
+                q = self.query(scope)
+                body.append(q)
+                scope.append(q.target)
+            elif roll < 0.9 and self.allow_effects:
+                body.append(self.effect(scope))
+            else:
+                a = self.assign(scope)
+                body.append(a)
+                scope.append(a.target)
+        if n_loops == 0:
+            # every program gets at least one query loop — the whole point
+            item = self.fresh_int()
+            body.append(Loop(item_var=item, iter_var=rng.choice(lists),
+                             body=self.loop_body(item, scope, 0, lists)))
+
+        prog = Program(body=body, inputs=tuple(int_inputs + lists))
+        observe = tuple(sorted(collect_names(prog.body) | set(prog.inputs)))
+        return GeneratedProgram(program=prog, inputs=inputs, observe=observe)
+
+
+def gen_program(rng: random.Random, *, allow_procs: bool = True,
+                allow_effects: bool = True) -> GeneratedProgram:
+    """Generate one random HIR program with concrete inputs (deterministic
+    in the ``rng`` state)."""
+    return _Gen(rng, allow_procs=allow_procs,
+                allow_effects=allow_effects).gen()
+
+
+# ---------------------------------------------------------------------------
+# Optional hypothesis layer
+# ---------------------------------------------------------------------------
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+
+    @st.composite
+    def hir_programs(draw) -> GeneratedProgram:
+        """Hypothesis strategy wrapping :func:`gen_program`: hypothesis
+        drives (and shrinks) the seed, the plain-random core does the
+        structured generation."""
+        seed = draw(st.integers(min_value=0, max_value=2**32 - 1))
+        return gen_program(random.Random(seed))
+
+except ImportError:  # degrade gracefully: plain-random core still works
+    HAVE_HYPOTHESIS = False
+
+    def hir_programs():  # type: ignore[misc]
+        """Placeholder that fails loudly if used without hypothesis."""
+        raise RuntimeError(
+            "hypothesis is not installed; use gen_program(random.Random(s))")

@@ -405,3 +405,269 @@ else:
     def test_property_suite_requires_hypothesis():
         """Placeholder so the dropped property tests surface as a SKIP
         instead of silently disappearing from collection."""
+
+
+# ---------------------------------------------------------------------------
+# negative paths: the transformer must REFUSE, not miscompile
+# ---------------------------------------------------------------------------
+
+
+def _unchanged_and_equivalent(prog, inputs):
+    """The whole negative-path contract in one helper: zero fissioned
+    statements in the output, applicability agrees, and the (untouched)
+    transformed program still runs to the same result."""
+    from repro.core.equivalence import check_program, count_fissioned
+
+    t = transform_program(prog)
+    assert count_fissioned(t.body) == 0
+    rep = analyze_applicability(prog)
+    assert rep["transformed"] == 0
+    res = check_program(prog, inputs)
+    assert res.equivalent, res.mismatches
+    return rep
+
+
+def test_refuses_loop_carried_dependence_on_query_output():
+    """key_{i+1} = f(result_i): the submit of iteration i+1 needs the fetch
+    of iteration i — fission would read a stale key."""
+    prog = Program(
+        inputs=("items", "key"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Query(target="r", query_name="part.lookup", params=("key",)),
+                Assign(target="key", fn=lambda r: r % 100, args=("r",)),
+            ]),
+        ],
+    )
+    rep = _unchanged_and_equivalent(prog, {"items": list(range(8)), "key": 5})
+    assert rep["opportunities"] == 1
+
+
+def test_refuses_query_under_guard_that_writes_its_own_parameter():
+    """The guarded block writes the query's parameter from the query's own
+    output: Rule B flattens the If, but the loop-carried flow edge from the
+    consumer-side write of ``p`` to the producer-side reads (guard + param)
+    survives reordering — refuse."""
+    prog = Program(
+        inputs=("items", "p", "acc"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Assign(target="g", fn=lambda p: p % 2 == 0, args=("p",)),
+                If(pred="g", then_body=[
+                    Query(target="r", query_name="part.lookup",
+                          params=("p",)),
+                    Assign(target="p", fn=lambda r: (r + 3) % 50,
+                           args=("r",)),
+                ]),
+                Assign(target="acc", fn=add, args=("acc", "p")),
+            ]),
+        ],
+    )
+    _unchanged_and_equivalent(
+        prog, {"items": list(range(10)), "p": 4, "acc": 0})
+
+
+def test_refuses_nested_query_feeding_outer_cursor():
+    """The inner loop's query result advances the cursor the next inner
+    iteration reads: neither the inner loop (loop-carried flow through
+    ``cur``) nor the outer loop (no direct query; the inner loop is one
+    opaque statement) may be fissioned."""
+    prog = Program(
+        inputs=("outer", "inner", "cur", "acc"),
+        body=[
+            Loop(item_var="i", iter_var="outer", body=[
+                Loop(item_var="j", iter_var="inner", body=[
+                    Query(target="row", query_name="part.lookup",
+                          params=("cur",)),
+                    Assign(target="cur", fn=lambda row: (row + 7) % 900,
+                           args=("row",)),
+                ]),
+                Assign(target="acc", fn=add, args=("acc", "cur")),
+            ]),
+        ],
+    )
+    _unchanged_and_equivalent(
+        prog,
+        {"outer": list(range(4)), "inner": list(range(5)),
+         "cur": 3, "acc": 0})
+
+
+# ---------------------------------------------------------------------------
+# fuzz-found regressions, minimized
+# ---------------------------------------------------------------------------
+
+
+def test_regression_guarded_query_target_not_clobbered_by_restore():
+    """Fuzz-found miscompile: a guarded query whose target is read after
+    the query (under the same guard) put the target into the split-variable
+    set — the context table captured a stale pre-loop value and the
+    consumer's unconditional restore clobbered the loop-carried
+    previous-iteration value whenever the guard was false.  The last item
+    below is odd, so pre-fix the final ``q``/``u`` came from the stale
+    snapshot instead of the last even iteration's fetch."""
+    from repro.core.equivalence import check_program
+
+    prog = Program(
+        inputs=("items", "q", "u"),
+        body=[
+            Loop(item_var="it", iter_var="items", body=[
+                Assign(target="g", fn=lambda it: it % 2 == 0, args=("it",)),
+                Query(target="q", query_name="part.lookup", params=("it",),
+                      guard="g"),
+                Assign(target="u", fn=lambda q: q + 1, args=("q",),
+                       guard="g"),
+            ]),
+        ],
+    )
+    inputs = {"items": [2, 4, 6, 8, 5], "q": -1, "u": -1}
+    res = check_program(prog, inputs, ("q", "u"))
+    assert res.equivalent, res.mismatches
+    assert res.fissioned == 1
+    # and the sync semantics really are the last-even-iteration values
+    base = Interpreter(TableService(TABLES)).run(prog, dict(inputs))
+    assert base["q"] == TABLES["part"][8] and base["u"] == base["q"] + 1
+
+
+def test_regression_fresh_names_avoid_program_variables():
+    """Programs that already use the transformer's own name shapes
+    (``q_``-prefixed targets, ``handle_2``, ``cv_0``, ``t_0`` used OUTSIDE
+    the loop) must survive: whole-program transformation reserves every
+    program name, so generated fresh names never collide."""
+    from repro.core.equivalence import check_program
+    from repro.core.hir import collect_names
+
+    prog = Program(
+        inputs=("items", "handle_2", "cv_0", "t_0"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Query(target="q_0", query_name="part.lookup",
+                      params=("i",)),
+                Assign(target="acc", fn=add, args=("q_0", "q_0")),
+            ]),
+            # reads AFTER the loop: a colliding fresh name (the shared
+            # counter makes the handle pick exactly ``handle_2``) would
+            # clobber these between the loop and this statement
+            Assign(target="out", fn=lambda a, b, c: a * 10000 + b * 100 + c,
+                   args=("handle_2", "cv_0", "t_0")),
+        ],
+    )
+    inputs = {"items": list(range(6)), "handle_2": 11, "cv_0": 22, "t_0": 33}
+    res = check_program(prog, inputs, ("out", "acc", "q_0"))
+    assert res.equivalent, res.mismatches
+    assert res.fissioned == 1
+    # every NEW name the transformer minted is disjoint from program names
+    t = transform_program(prog)
+    minted = collect_names(t.body) - collect_names(prog.body)
+    assert minted and not (minted & set(inputs))
+
+
+def test_regression_precondition_c_conditional_producer_write():
+    """Precondition (c): a split variable rewritten by the consumer whose
+    only producer-side write is conditional would be restored from a
+    guard-dependent snapshot.  Direct Rule A (no reordering) must refuse;
+    ``transform_program`` may instead rescue it by reordering (the query
+    moves first, the conditional write becomes consumer-side) — and that
+    rescue must be equivalent."""
+    from repro.core.equivalence import check_program
+
+    def body():
+        return [
+            Assign(target="g", fn=lambda it: it % 2 == 0, args=("it",)),
+            Assign(target="acc", fn=lambda it: it, args=("it",), guard="g"),
+            Query(target="q", query_name="part.lookup", params=("it",)),
+            Assign(target="acc", fn=add, args=("acc", "q")),
+        ]
+
+    with pytest.raises(FissionError, match=r"precondition \(c\)"):
+        apply_rule_a(Loop(item_var="it", iter_var="items", body=body()),
+                     reorder=False)
+
+    prog = Program(
+        inputs=("items", "acc"),
+        body=[Loop(item_var="it", iter_var="items", body=body())],
+    )
+    res = check_program(prog, {"items": [2, 1, 4, 7, 8], "acc": 0})
+    assert res.equivalent, res.mismatches
+    assert res.fissioned == 1  # reorder_for_fission rescued it
+
+
+# ---------------------------------------------------------------------------
+# Proc/Call: inline-then-fission applicability
+# ---------------------------------------------------------------------------
+
+
+def test_can_inline_refuses_recursion_free_vars_unbound_result():
+    from repro.core.hir import Call, Proc, can_inline
+
+    rec = Proc(name="rec", formals=("n",), body=[], result=None)
+    rec.body.append(Call(target=None, proc=rec, args=("n",)))
+    ok, why = can_inline(rec)
+    assert not ok and "recursive" in why
+
+    free = Proc(name="leaky", formals=("a",),
+                body=[Assign(target="x", fn=add, args=("a", "outside"))],
+                result="x")
+    ok, why = can_inline(free)
+    assert not ok and "free" in why and "outside" in why
+
+    unbound = Proc(name="nores", formals=("a",),
+                   body=[Assign(target="x", fn=lambda a: a, args=("a",))],
+                   result="y")
+    ok, why = can_inline(unbound)
+    assert not ok and "never bound" in why
+
+
+def test_uninlinable_call_leaves_loop_unfissioned():
+    """A recursive query-bearing proc inside a loop: the transformer must
+    keep the Call (and the loop) untouched instead of miscompiling."""
+    from repro.core.hir import Call, Proc
+    from repro.core.equivalence import count_fissioned
+
+    rec = Proc(name="rec", formals=("n",), body=[
+        Query(target="r", query_name="part.lookup", params=("n",)),
+    ], result="r")
+    rec.body.append(
+        Call(target=None, proc=rec, args=("n",), guard=None))
+    # interpreting recursion would not terminate — only static checks here
+    prog = Program(
+        inputs=("items",),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Call(target="v", proc=rec, args=("i",)),
+            ]),
+        ],
+    )
+    t = transform_program(prog)
+    assert count_fissioned(t.body) == 0
+    assert isinstance(t.body[0].body[0], Call)
+    rep = analyze_applicability(prog)
+    assert rep["transformed"] == 0
+    assert any("inline refused" in f for f in rep["failures"])
+
+
+def test_guarded_call_inlines_under_if_and_fissions():
+    """A guarded Call wraps its expansion in an If on the (negated) guard;
+    Rule B then flattens it and Rule A fissions the query inside."""
+    from repro.core.hir import Call, Proc
+    from repro.core.equivalence import check_program
+
+    proc = Proc(name="look", formals=("k",), body=[
+        Query(target="r", query_name="part.lookup", params=("k",)),
+        Assign(target="o", fn=lambda r: r * 2, args=("r",)),
+    ], result="o")
+    prog = Program(
+        inputs=("items", "acc"),
+        body=[
+            Loop(item_var="i", iter_var="items", body=[
+                Assign(target="g", fn=lambda i: i % 2 == 0, args=("i",)),
+                Assign(target="v", fn=lambda i: -i, args=("i",)),
+                Call(target="v", proc=proc, args=("i",), guard="g",
+                     guard_negated=True),
+                Assign(target="acc", fn=add, args=("acc", "v")),
+            ]),
+        ],
+    )
+    res = check_program(prog, {"items": list(range(12)), "acc": 0})
+    assert res.equivalent, res.mismatches
+    assert res.fissioned == 1
+    assert res.round_trip_win

@@ -66,6 +66,13 @@ GATED_METRICS = {
     # lower-is-better.
     "app_traces.tokens_per_s_ratio": {"allowance": 0.3},
     "app_traces.round_trip_ratio": {"allowance": 0.05, "direction": "lower"},
+    # Part 11 cross-request sharing: the FLOPs ratio is analytic (params
+    # x rows), so any drop means the admit path stopped aliasing pages;
+    # the megabatch ratio is wall-clock on the real engine — loosen both
+    # to 30%; the hard floors (>= 2x, >= 1.0x, 1 dispatch/tick,
+    # bit-identity) live in check_floors.py.
+    "shared_prefix.flops_saved_ratio": {"allowance": 0.3},
+    "megabatch.tokens_per_s_ratio": {"allowance": 0.3},
 }
 
 

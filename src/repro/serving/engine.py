@@ -122,20 +122,38 @@ class HostSpillPool:
 
     Thread-safe (a lock per op): the scheduler spills/restores from its
     tick loop, but introspection (stats, ``in``) may come from anywhere.
+
+    ``on_drop`` is invoked (under the pool lock) for every entry the pool
+    discards without a restore — stale duplicates, per-template budget
+    evictions and global LRU evictions — with ``(key, template, entry)``.
+    Entries may own resources beyond host bytes: a partial eviction's
+    entry holds refcounts on the shared prefix pages it left resident in
+    the device pool, and dropping the entry must release them or the
+    pages leak.  ``take`` never triggers it (the restoring caller owns
+    the entry's resources from then on).
     """
 
     def __init__(self, max_entries: int = 32,
                  budget_for: Optional[Callable[[Optional[str]],
-                                               Optional[int]]] = None):
+                                               Optional[int]]] = None,
+                 on_drop: Optional[Callable[[object, Optional[str], dict],
+                                            None]] = None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
         self.budget_for = budget_for
+        self.on_drop = on_drop
         self._lock = threading.Lock()
         self._lru: "OrderedDict[object, tuple[Optional[str], dict]]" = OrderedDict()
         self.spilled = 0    # entries accepted
         self.restored = 0   # entries taken back by a re-admission
         self.dropped = 0    # entries evicted (LRU / budget) before restore
+
+    def _drop(self, key, template: Optional[str], entry: dict) -> None:
+        """Account one discarded entry and release its resources."""
+        self.dropped += 1
+        if self.on_drop is not None:
+            self.on_drop(key, template, entry)
 
     def accepts(self, template: Optional[str]) -> bool:
         """Whether a new entry for ``template`` would be stored at all —
@@ -152,20 +170,21 @@ class HostSpillPool:
         stored (``False`` for a zero-budget fenced template)."""
         with self._lock:
             if key in self._lru:
-                del self._lru[key]  # stale duplicate: the new KV wins
-                self.dropped += 1
+                stale_t, stale_e = self._lru.pop(key)
+                self._drop(key, stale_t, stale_e)  # the new KV wins
             budget = self.budget_for(template) if self.budget_for else None
             if budget is not None and budget <= 0:
-                self.dropped += 1  # template fenced out of the pool
+                self._drop(key, template, entry)  # template fenced out
                 return False
             if budget is not None:
                 mine = [k for k, (t, _) in self._lru.items() if t == template]
                 while len(mine) >= budget:
-                    del self._lru[mine.pop(0)]  # oldest of THIS template
-                    self.dropped += 1
+                    victim = mine.pop(0)  # oldest of THIS template
+                    v_t, v_e = self._lru.pop(victim)
+                    self._drop(victim, v_t, v_e)
             while len(self._lru) >= self.max_entries:
-                self._lru.popitem(last=False)
-                self.dropped += 1
+                v_key, (v_t, v_e) = self._lru.popitem(last=False)
+                self._drop(v_key, v_t, v_e)
             self._lru[key] = (template, entry)
             self.spilled += 1
             return True

@@ -66,8 +66,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lane_policy import PrefixIndex
 from repro.kernels import registry
-from repro.models.paged_decode import paged_decode_step, supports_paged_decode
+from repro.models.paged_decode import (
+    paged_decode_step,
+    sample_tokens,
+    supports_paged_decode,
+)
 from repro.serving.engine import InferenceEngine, KVPartition, StagedPrefill
 
 __all__ = ["PagedInferenceEngine", "PagedKVPool", "PagedKVView"]
@@ -165,16 +170,96 @@ class PagedKVPool:
         for p in self._tables.pop(key):
             self._decref(p)
 
-    def share(self, src, dst) -> list[int]:
-        """Alias ``src``'s pages under a new table ``dst`` (prefix
-        sharing): every page's refcount rises, nothing is copied."""
+    def adopt_table(self, key, pages: list[int]) -> None:
+        """Create ``key``'s table from pages the caller already holds a
+        reference on (a spill entry's prefix hold): ownership of exactly
+        one reference per page TRANSFERS into the table — no incref, no
+        claim.  The refcount-transfer twin of :meth:`alloc_table`."""
+        if key in self._tables:
+            raise ValueError(f"table {key!r} already allocated")
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise RuntimeError(
+                    f"page {p} is free; cannot adopt an unreferenced page")
+        self._tables[key] = list(pages)
+
+    def share(self, src, dst, n_pages: Optional[int] = None) -> list[int]:
+        """Alias ``src``'s first ``n_pages`` pages (default: all) under a
+        new table ``dst`` — prefix-granular sharing: every aliased page's
+        refcount rises, nothing is copied.  The caller typically extends
+        ``dst`` with private tail pages afterwards
+        (:meth:`extend_table`); a write into an aliased page must fork it
+        first (:meth:`fork_page` — copy-on-write)."""
         if dst in self._tables:
             raise ValueError(f"table {dst!r} already allocated")
         pages = list(self._tables[src])
+        if n_pages is not None:
+            if not 0 <= n_pages <= len(pages):
+                raise ValueError(
+                    f"share of {n_pages} pages but {src!r} has {len(pages)}")
+            pages = pages[:n_pages]
         for p in pages:
             self._ref[p] += 1
         self._tables[dst] = pages
         return list(pages)
+
+    def page_ref(self, p: int) -> int:
+        """Physical page ``p``'s current refcount (0 = on the free list)."""
+        return self._ref[p]
+
+    def shared_prefix_pages(self, key) -> int:
+        """How many LEADING pages of ``key``'s table are aliased by
+        another live owner (refcount above 1).  Aliased pages always form
+        a prefix — :meth:`share` copies a table head and a fork replaces
+        the writer's page, never a reader's — so this is the page count
+        partial eviction keeps resident."""
+        n = 0
+        for p in self._tables[key]:
+            if self._ref[p] > 1:
+                n += 1
+            else:
+                break
+        return n
+
+    def fork_page(self, key, slot: int) -> Optional[tuple[int, int]]:
+        """Copy-on-write fork: give ``key`` a private page at logical
+        ``slot`` before a write would be visible to the other readers of
+        a shared page.  Returns ``(old_page, new_page)`` — the caller
+        copies the page CONTENTS old → new (the pool tracks placement
+        only) — or ``None`` when the page is already private.  Needs a
+        free page (the caller makes room first); the shared page keeps
+        its remaining readers untouched."""
+        pages = self._tables[key]
+        old = pages[slot]
+        if self._ref[old] <= 1:
+            return None
+        if not self._free:
+            raise RuntimeError(
+                "KV pool out of pages: no free page for a copy-on-write fork")
+        new = self._free.pop(0)
+        self._ref[new] = 1
+        self._ref[old] -= 1  # stays >= 1: the other readers still hold it
+        pages[slot] = new
+        self._tables.move_to_end(key)
+        return old, new
+
+    def incref_pages(self, pages: list[int]) -> None:
+        """Take one extra reference on each (live) page — how a host
+        spill entry keeps a shared prefix resident while its reader is
+        evicted (partial eviction)."""
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise RuntimeError(
+                    f"page {p} is free; cannot reference a free page")
+        for p in pages:
+            self._ref[p] += 1
+
+    def decref_pages(self, pages: list[int]) -> None:
+        """Release references taken by :meth:`incref_pages` (a dropped
+        spill entry's prefix hold); pages reaching zero return to the
+        free list.  Double-frees raise instead of corrupting the pool."""
+        for p in pages:
+            self._decref(p)
 
     def pin(self, key) -> None:
         """Exempt ``key`` from OOM eviction (an active decode lane)."""
@@ -209,19 +294,31 @@ class PagedKVPool:
 
     def _evict_one(self) -> None:
         for key in self._tables:  # OrderedDict order == LRU
-            if key not in self._pinned:
-                pages = self._tables.pop(key)
-                self.evicted += 1
-                if self.on_evict is not None:
-                    self.on_evict(key, list(pages))
-                else:
-                    self.host_tables[key] = list(pages)
-                for p in pages:
-                    self._decref(p)
-                return
-        raise RuntimeError("KV pool out of pages: every table is pinned")
+            if key in self._pinned:
+                continue
+            pages = self._tables[key]
+            if any(self._ref[p] > 1 for p in pages):
+                # A live alias group references this table's pages: a
+                # whole-table spill would snapshot rows another reader is
+                # still extending from.  Skip it — partial eviction at the
+                # engine layer spills only the unshared tail.
+                continue
+            self._tables.pop(key)
+            self.evicted += 1
+            if self.on_evict is not None:
+                self.on_evict(key, list(pages))
+            else:
+                self.host_tables[key] = list(pages)
+            for p in pages:
+                self._decref(p)
+            return
+        raise RuntimeError(
+            "KV pool out of pages: every table is pinned or aliased by a "
+            "live table")
 
     def _decref(self, p: int) -> None:
+        if self._ref[p] <= 0:
+            raise RuntimeError(f"page {p} is already free (double free)")
         self._ref[p] -= 1
         if self._ref[p] == 0:
             self._free.append(p)
@@ -326,7 +423,12 @@ class PagedInferenceEngine(InferenceEngine):
     only) and lean on mid-decode eviction.  ``use_kernel``/``interpret``
     feed the registry dispatch policy for the paged attention op;
     ``interpret=None`` reads ``REPRO_KERNEL_INTERPRET`` (the CI kernels
-    job's switch).
+    job's switch).  ``prefix_share`` (paged-compute only) turns on
+    prefix-granular cross-request KV sharing: synchronous admission
+    consults a :class:`~repro.core.lane_policy.PrefixIndex`, aliases the
+    page-aligned prompt prefix a resident lane already computed
+    (copy-on-write, zero bytes moved) and prefills only the novel tail —
+    ``prefix_hits`` / ``prefill_flops_saved`` count the wins.
     """
 
     page_size: int = 16
@@ -334,6 +436,7 @@ class PagedInferenceEngine(InferenceEngine):
     n_pages: Optional[int] = None
     use_kernel: bool = True
     interpret: Optional[bool] = None
+    prefix_share: bool = False
 
     def __post_init__(self):
         super().__post_init__()
@@ -374,8 +477,35 @@ class PagedInferenceEngine(InferenceEngine):
         self.page_evictions = 0   # lanes evicted by page pressure
         self.fused_folds = 0      # prefill chunks folded into decode ticks
         self._fused_chunk: Optional[StagedPrefill] = None
+        # Per-lane sampling params for the cross-template decode
+        # megabatch: one dispatch covers every active lane, so the
+        # sampling knobs ride along per lane (temperature 0 = greedy
+        # argmax, the bit-identity default).
+        self.lane_temps = np.zeros((self.n_lanes,), np.float32)
+        self.lane_seeds = np.zeros((self.n_lanes,), np.int32)
+        # Prefix sharing: index + counters.  The analytic per-token FLOPs
+        # (2 * params, the standard dense-forward estimate) turns pages
+        # aliased instead of prefilled into prefill_flops_saved.
+        if self.prefix_share and not self.paged_compute:
+            raise ValueError(
+                "prefix_share needs a paged-decode-capable arch "
+                "(dense/MoE, full context)")
+        self.prefix_index: Optional[PrefixIndex] = (
+            PrefixIndex(self.page_size) if self.prefix_share else None)
+        self.prefix_hits = 0
+        self.prefill_flops_saved = 0
+        self.prefill_flops_total = 0
+        self._flops_per_token = 2 * sum(
+            int(np.prod(a.shape))
+            for a in jax.tree_util.tree_leaves(self.params))
         if not self.paged_compute:
             return
+        # Partial eviction leaves refcounted prefix pages resident while
+        # their spill entry lives on host; if the spill pool silently
+        # drops the entry, those holds must be released or the pages leak.
+        spill = self.partition.spill
+        if spill is not None and getattr(spill, "on_drop", None) is None:
+            spill.on_drop = self._release_entry_holds
         # Drop the dense per-lane backing store: KV lives in shared page
         # arrays (L, n_pages + 1, page_size, Hkv, hd).  Slot n_pages is
         # the trash page inactive lanes scatter into; block tables never
@@ -391,18 +521,19 @@ class PagedInferenceEngine(InferenceEngine):
         cfg, uk, itp = self.arch.cfg, self.use_kernel, self._interpret
 
         @jax.jit
-        def _paged(params, token, cache, lengths, tables, active):
+        def _paged(params, token, cache, lengths, tables, active,
+                   temps, seeds):
             logits, new_cache = paged_decode_step(
                 cfg, params, token, cache, tables, lengths, active,
                 use_kernel=uk, interpret=itp)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = sample_tokens(logits, temps, seeds, lengths)
             return nxt, new_cache
 
         self._paged_decode = _paged
 
         @jax.jit
         def _fused(params, token, cache, lengths, tables, active,
-                   ctoks, ccache, clens):
+                   temps, seeds, ctoks, ccache, clens):
             # Chunk side: the same lax.scan of decode_step the standalone
             # _extend performs, over the staged (dense, batch-1) cache —
             # fused into ONE device program with the paged decode batch.
@@ -417,10 +548,40 @@ class PagedInferenceEngine(InferenceEngine):
             logits, new_cache = paged_decode_step(
                 cfg, params, token, cache, tables, lengths, active,
                 use_kernel=uk, interpret=itp)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = sample_tokens(logits, temps, seeds, lengths)
             return nxt, new_cache, cfirst, ccache, clens
 
         self._fused = _fused
+
+        max_len = self.max_len
+
+        @jax.jit
+        def _shared_tail(params, cache, prefix_idx, tail_toks, start):
+            # Prefix-hit tail prefill: gather the owner's aliased pages
+            # into a dense batch-1 cache, then scan the NOVEL tail through
+            # the ordinary decode step — one device program computing
+            # exactly the positions the alias did not cover
+            # (chunked-prefill reuse).  Compiles per (k_pages, tail_len).
+            def seed_leaf(a):
+                pre = a[:, prefix_idx].reshape(
+                    a.shape[0], 1, -1, *a.shape[3:])
+                dense = jnp.zeros((a.shape[0], 1, max_len) + a.shape[3:],
+                                  a.dtype)
+                return dense.at[:, :, : pre.shape[2]].set(pre)
+
+            dcache = jax.tree_util.tree_map(seed_leaf, cache)
+
+            def step(carry, tok):
+                c, ln = carry
+                logits, c = self.arch.decode_step(params, tok, c, ln)
+                return (c, ln + 1), logits
+
+            (dcache, _), logits = jax.lax.scan(
+                step, (dcache, start), jnp.swapaxes(tail_toks, 0, 1))
+            first = jnp.argmax(logits[-1], axis=-1).astype(jnp.int32)
+            return first, dcache
+
+        self._shared_tail_fn = _shared_tail
 
     @property
     def kv(self) -> PagedKVView:
@@ -507,6 +668,149 @@ class PagedInferenceEngine(InferenceEngine):
         return out
 
     # ------------------------------------------------------------ admission
+    def admit(self, requests, template: Optional[str] = None
+              ) -> tuple[int, int]:
+        """Admission with prefix-granular sharing (when enabled).
+
+        Runs ONLY on the synchronous admission path — the speculative
+        prefill thread keeps the plain batched prefill, so the prefix
+        index and page pool are never touched concurrently.  Two phases:
+        requests whose prompts match no resident prefix are prefilled as
+        one ordinary batch first (registering their prompts), then each
+        remaining request re-checks the index — so a batch containing an
+        owner plus its sharers still shares within the batch — and either
+        takes the alias path (:meth:`_admit_prefix_hit`) or joins a final
+        miss batch.
+        """
+        if self.prefix_index is None or not requests:
+            return super().admit(requests, template)
+        assert len(requests) <= self.n_free_for(template), \
+            "admit() caller must respect n_free_for(template)"
+        # Phase 1: classify.  A probe index over this batch's own prompts
+        # catches sharers whose owner arrives in the SAME batch (the
+        # owner is not resident yet, but will be once the miss batch
+        # commits below).
+        probe = PrefixIndex(self.page_size)
+        misses, deferred = [], []
+        for r in requests:
+            toks = tuple(
+                int(t) for t in np.asarray(r.prompt)[-self.max_prompt_len:])
+            if (self._prefix_match(r) is not None
+                    or probe.lookup(toks) is not None):
+                deferred.append(r)
+            else:
+                probe.insert(id(r), toks)
+                misses.append(r)
+        shape = (len(requests), 0)
+        if misses:
+            shape = super().admit(misses, template)
+        late = []
+        for r in deferred:
+            hit = self._prefix_match(r)
+            if hit is None:  # owner left between the two phases
+                late.append(r)
+            else:
+                self._admit_prefix_hit(r, template, *hit)
+        if late:
+            shape = super().admit(late, template)
+        return shape
+
+    def _prefix_match(self, r) -> Optional[tuple[int, int]]:
+        """``(owner_lane, k_pages)`` for the longest resident page-aligned
+        prefix of ``r``'s (truncated) prompt, or ``None``.  Stale index
+        owners (no live table) are pruned on sight."""
+        toks = tuple(
+            int(t) for t in np.asarray(r.prompt)[-self.max_prompt_len:])
+        while True:
+            hit = self.prefix_index.lookup(toks)
+            if hit is None:
+                return None
+            owner, k = hit
+            if (self.pool.has_table(owner)
+                    and len(self.pool.pages(owner)) >= k):
+                return owner, k
+            self.prefix_index.remove(owner)
+
+    def _admit_prefix_hit(self, r, template: Optional[str],
+                          owner: int, k: int) -> None:
+        """Admit one request by aliasing ``k`` prefix pages from ``owner``
+        and prefilling only the novel tail.
+
+        The aliased pages are full prompt pages on both sides (the index
+        only matches ``k * page_size < plen``), their contents a pure
+        function of the shared tokens and absolute positions — so the
+        alias is exact, zero bytes move (``kv_bytes_moved`` unchanged for
+        them) and ``k * page_size`` token positions of prefill FLOPs are
+        saved.  Decode writes land at positions ``>= plen``, i.e. in the
+        request's private tail pages, never in a shared page — the COW
+        guard in :meth:`decode_tick` enforces this defensively.
+        """
+        prompt = np.asarray(r.prompt)[-self.max_prompt_len:]
+        plen = len(prompt)
+        ps = self.page_size
+        shared_rows = k * ps
+        lane = self.partition.alloc(template)
+        total = min(self.pages_per_lane, plen // ps + 1)
+        need = total - k
+        if need > 0:
+            self._make_room(need, avoid={lane, owner})
+        self.pool.share(owner, lane, n_pages=k)
+        if need > 0:
+            self.pool.extend_table(lane, n=need)
+        self.pool.pin(lane)
+        self._lane_meta[lane] = (getattr(r, "rid", lane), template)
+        # One device program: gather the aliased prefix, scan the tail.
+        prefix_idx = jnp.asarray(np.asarray(self.pool.pages(lane)[:k],
+                                            np.int32))
+        tail = jnp.asarray(prompt[None, shared_rows:], jnp.int32)
+        first, dcache = self._shared_tail_fn(
+            self.params, self.cache, prefix_idx, tail,
+            jnp.asarray([shared_rows], jnp.int32))
+        self._count_dispatch()
+        # Scatter ONLY the tail pages into physical frames; the k aliased
+        # pages cost zero bytes by construction.
+        npg = max(1, self.pool.pages_for(plen))
+        if npg > k:
+            idx = jnp.asarray(np.asarray(self.pool.pages(lane)[k:npg],
+                                         np.int32))
+
+            def one(dst, src, idx=idx, k=k, npg=npg):
+                s = src[:, 0, k * ps: npg * ps]
+                return dst.at[:, idx].set(
+                    s.reshape(s.shape[0], npg - k, ps, *s.shape[2:])
+                    .astype(dst.dtype))
+
+            self.cache = jax.tree_util.tree_map(one, self.cache, dcache)
+            for a in jax.tree_util.tree_leaves(dcache):
+                self.kv_bytes_moved += (a.dtype.itemsize * a.shape[0]
+                                        * (npg - k) * ps
+                                        * int(np.prod(a.shape[3:])))
+        self.prefix_index.insert(lane, prompt)
+        first_tok = int(np.asarray(first)[0])
+        r.lane = lane
+        r.generated.append(first_tok)
+        ln = np.array(self.lengths)
+        lt = np.array(self.last_token)
+        ln[lane] = plen
+        lt[lane] = first_tok
+        self.lengths = jnp.asarray(ln)
+        self.last_token = jnp.asarray(lt)
+        self.active[lane] = True
+        self.lane_temps[lane] = getattr(r, "temperature", 0.0)
+        self.lane_seeds[lane] = getattr(r, "sample_seed", 0)
+        self.prefill_calls += 1
+        self.prefix_hits += 1
+        self.prefill_flops_saved += shared_rows * self._flops_per_token
+        self.prefill_flops_total += plen * self._flops_per_token
+
+    def _release_entry_holds(self, key, template: Optional[str],
+                             entry: dict) -> None:
+        """Spill-pool ``on_drop`` hook: a dropped entry's prefix-page
+        holds (partial eviction) return to the pool."""
+        pages = entry.get("prefix_pages")
+        if pages:
+            self.pool.decref_pages(pages)
+
     def commit_prefill(self, staged: StagedPrefill,
                        n: Optional[int] = None) -> tuple[int, int]:
         """Commit + a pinned block table per lane (identity frames in
@@ -554,6 +858,15 @@ class PagedInferenceEngine(InferenceEngine):
             plen = int(staged.plens[i])
             self._open_table(lane, plen, avoid=avoid)
             self._lane_meta[lane] = (getattr(r, "rid", lane), staged.template)
+            self.lane_temps[lane] = getattr(r, "temperature", 0.0)
+            self.lane_seeds[lane] = getattr(r, "sample_seed", 0)
+            self.prefill_flops_total += plen * self._flops_per_token
+            if self.prefix_index is not None:
+                # This lane now owns resident KV for exactly the last
+                # `plen` prompt tokens (cache-relative positions 0..plen):
+                # register them so later prompts can alias the prefix.
+                self.prefix_index.insert(
+                    lane, np.asarray(r.prompt)[-plen:])
             npg = max(1, self.pool.pages_for(plen))
             n_rows = npg * ps
             idx = jnp.asarray(self.pool.pages(lane)[:npg])
@@ -619,21 +932,25 @@ class PagedInferenceEngine(InferenceEngine):
                 continue  # evicted by an earlier lane's growth this tick
             length = int(np.asarray(self.lengths)[lane])
             self._ensure_pages(lane, length // self.page_size + 1)
+            if self.active[lane]:
+                self._cow_guard(lane, length)
         if not self.active.any():  # growth pressure evicted every lane
             if part is not None:
                 self.prefill_resume(part)
             return {}
         tables = self._device_tables()
         active_dev = jnp.asarray(self.active)
+        temps = jnp.asarray(self.lane_temps)
+        seeds = jnp.asarray(self.lane_seeds)
         if part is None:
             nxt, self.cache = self._paged_decode(
                 self.params, self.last_token, self.cache, self.lengths,
-                tables, active_dev)
+                tables, active_dev, temps, seeds)
         else:
             toks = part.pending.pop(0)
             nxt, self.cache, cfirst, part.cache, part.lengths_dev = \
                 self._fused(self.params, self.last_token, self.cache,
-                            self.lengths, tables, active_dev,
+                            self.lengths, tables, active_dev, temps, seeds,
                             jnp.asarray(toks), part.cache, part.lengths_dev)
             if not part.pending:
                 part.first = cfirst
@@ -657,12 +974,39 @@ class PagedInferenceEngine(InferenceEngine):
                 tabs[lane, : len(pages)] = pages
         return jnp.asarray(tabs)
 
+    def _cow_guard(self, lane: int, length: int) -> None:
+        """Copy-on-write fence for this tick's KV write.
+
+        Decode scatters the new token's KV into the page backing position
+        ``min(length, max_len - 1)``; if that page is aliased (refcount
+        above 1), fork a private copy first — pool placement via
+        :meth:`PagedKVPool.fork_page`, contents via one device copy — so
+        the write can never be observed by the other readers.  With
+        prefix sharing only FULL prompt pages are aliased and decode
+        writes land past the prompt, so this fires only for exotic
+        sharing set up directly against the pool — but the invariant is
+        enforced here, not assumed.
+        """
+        slot = min(length, self.max_len - 1) // self.page_size
+        pages = self.pool.pages(lane)
+        if slot >= len(pages) or self.pool.page_ref(pages[slot]) <= 1:
+            return
+        if self.pool.n_free_pages < 1:
+            self._make_room(1, avoid={lane})
+        old, new = self.pool.fork_page(lane, slot)
+        self.cache = jax.tree_util.tree_map(
+            lambda a: a.at[:, new].set(a[:, old]), self.cache)
+
     def retire(self, lane: int) -> None:
         """Free the lane's block table along with the lane."""
         self._pending_restore.pop(lane, None)
         self._lane_meta.pop(lane, None)
+        if self.prefix_index is not None:
+            self.prefix_index.remove(lane)
         if self.pool.has_table(lane):
             self.pool.free_table(lane)
+        self.lane_temps[lane] = 0.0
+        self.lane_seeds[lane] = 0
         super().retire(lane)
 
     # ---------------------------------------------------------------- spill
@@ -670,7 +1014,15 @@ class PagedInferenceEngine(InferenceEngine):
         """Stage only the lane's VALID pages to host (vs the dense
         engine's full ``max_len`` rows) — the page-granularity bytes win.
         Paged-compute gathers the pages from their physical frames; the
-        host entry layout (contiguous rows) is shared with dense mode."""
+        host entry layout (contiguous rows) is shared with dense mode.
+
+        **Partial eviction**: leading pages still aliased by another live
+        table (a shared prefix) are NOT copied — they stay resident, kept
+        alive by an extra refcount the spill entry holds
+        (``prefix_pages``), and cost zero spill bytes.  Only the lane's
+        private tail rows (from ``tail_start``) move to host; restore
+        re-adopts the resident prefix and splices just the tail back.
+        """
         pool = self.partition.spill
         if pool is None or not pool.accepts(template):
             self.retire(lane)
@@ -680,12 +1032,19 @@ class PagedInferenceEngine(InferenceEngine):
         ps = self.page_size
         npg = max(1, self.pool.pages_for(length))
         n_rows = min(self.max_len, npg * ps)
+        prefix_pages: list[int] = []
+        tail_start = 0
         if self.paged_compute:
-            idx = jnp.asarray(self.pool.pages(lane)[:npg])
+            pages = self.pool.pages(lane)[:npg]
+            keep = min(self.pool.shared_prefix_pages(lane), npg)
+            tail_start = keep * ps
+            prefix_pages = list(pages[:keep])
+            idx = jnp.asarray(np.asarray(pages[keep:npg], np.int32))
             rows = jax.tree_util.tree_map(
                 lambda a: np.asarray(
-                    a[:, idx].reshape(a.shape[0], npg * ps, *a.shape[3:])
-                    [:, :n_rows]),
+                    a[:, idx].reshape(a.shape[0], (npg - keep) * ps,
+                                      *a.shape[3:])
+                    [:, : n_rows - tail_start]),
                 self.cache)
         else:
             rows = jax.tree_util.tree_map(
@@ -696,9 +1055,18 @@ class PagedInferenceEngine(InferenceEngine):
             "n_rows": n_rows,
             "length": length,
             "last": int(np.asarray(self.last_token)[lane]),
+            "tail_start": tail_start,
+            "prefix_pages": prefix_pages,
+            "temp": float(self.lane_temps[lane]),
+            "seed": int(self.lane_seeds[lane]),
         }
         self.kv_bytes_moved += sum(
             a.nbytes for a in jax.tree_util.tree_leaves(entry["rows"]))
+        if prefix_pages:
+            # The entry's hold: the prefix pages survive retire() below
+            # (which drops the lane's own references) and any sibling
+            # retirements, until the entry restores or is dropped.
+            self.pool.incref_pages(prefix_pages)
         staged = pool.put(key, template, entry)
         self.retire(lane)
         return staged
@@ -717,17 +1085,35 @@ class PagedInferenceEngine(InferenceEngine):
             return None
         rows = entry["rows"]
         n_rows = entry["n_rows"]
+        tail_start = entry.get("tail_start", 0)
+        prefix_pages = entry.get("prefix_pages") or []
         head = min(n_rows, self.prefetch_pages * self.page_size)
         if self.paged_compute:
-            need = min(self.pages_per_lane,
-                       entry["length"] // self.page_size + 1)
+            k = len(prefix_pages)
+            total = min(self.pages_per_lane,
+                        entry["length"] // self.page_size + 1)
+            need = max(0, total - k)
             if self.pool.n_free_pages < need:
                 pool.put(key, template, entry)  # not enough pages yet
                 return None
             lane = self.partition.alloc(template)
-            self._open_table(lane, entry["length"])
+            if k:
+                # Re-adopt the still-resident shared prefix: the entry's
+                # refcount hold TRANSFERS into the new table (no copy, no
+                # incref), and only the private tail needs page claims +
+                # a host→device splice.
+                self.pool.adopt_table(lane, prefix_pages)
+                if need > 0:
+                    self.pool.extend_table(lane, n=need)
+                self.pool.pin(lane)
+            else:
+                self._open_table(lane, entry["length"])
             self._lane_meta[lane] = (key, template)
-            self._write_rows(lane, rows, 0, head)
+            self.lane_temps[lane] = entry.get("temp", 0.0)
+            self.lane_seeds[lane] = entry.get("seed", 0)
+            head = min(n_rows, tail_start + self.prefetch_pages
+                       * self.page_size)
+            self._write_rows(lane, rows, tail_start, head, base=tail_start)
         else:
             lane = self.partition.alloc(template)
 
@@ -746,7 +1132,7 @@ class PagedInferenceEngine(InferenceEngine):
             self.kv_bytes_moved += moved
             self._open_table(lane, entry["length"])
         if head < n_rows:
-            self._pending_restore[lane] = (rows, head, n_rows)
+            self._pending_restore[lane] = (rows, head, n_rows, tail_start)
         ln = np.array(self.lengths)
         lt = np.array(self.last_token)
         ln[lane] = entry["length"]
@@ -756,9 +1142,13 @@ class PagedInferenceEngine(InferenceEngine):
         self.active[lane] = True
         return lane
 
-    def _write_rows(self, lane: int, rows, start: int, stop: int) -> None:
-        """Scatter host ``rows[start:stop]`` (page-aligned bounds) into
-        ``lane``'s physical frames, with byte accounting (paged-compute)."""
+    def _write_rows(self, lane: int, rows, start: int, stop: int,
+                    base: int = 0) -> None:
+        """Scatter host rows covering logical positions [start, stop)
+        (page-aligned bounds) into ``lane``'s physical frames, with byte
+        accounting (paged-compute).  ``base`` is the logical position of
+        ``rows``' first row — a partial eviction's host copy starts at
+        ``tail_start``, not 0."""
         if stop <= start:
             return
         ps = self.page_size
@@ -766,7 +1156,7 @@ class PagedInferenceEngine(InferenceEngine):
         idx = jnp.asarray(self.pool.pages(lane)[p0:p1])
 
         def one(dst, src, idx=idx, p0=p0, p1=p1):
-            s = jnp.asarray(src)[:, start:stop]
+            s = jnp.asarray(src)[:, start - base: stop - base]
             return dst.at[:, idx].set(
                 s.reshape(s.shape[0], p1 - p0, ps, *s.shape[2:])
                 .astype(dst.dtype))
@@ -786,9 +1176,9 @@ class PagedInferenceEngine(InferenceEngine):
         else:
             items = list(self._pending_restore.items())
             self._pending_restore.clear()
-        for ln_, (rows, start, stop) in items:
+        for ln_, (rows, start, stop, base) in items:
             if self.paged_compute:
-                self._write_rows(ln_, rows, start, stop)
+                self._write_rows(ln_, rows, start, stop, base=base)
                 continue
 
             def one(dst, src, ln_=ln_, start=start, stop=stop):

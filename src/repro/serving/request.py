@@ -53,6 +53,13 @@ class Request:
     # admitted/prefilled together, so heterogeneous traffic (chat vs embed vs
     # summarize) batches per class instead of head-of-line blocking.
     template: str = "default"
+    # Per-request sampling params, carried per LANE through the decode
+    # megabatch (one dispatch covers all templates).  temperature 0 is
+    # greedy argmax — the bit-identity default; > 0 samples under a
+    # counter-based key derived from (sample_seed, position), so draws
+    # reproduce across spill/restore and batch composition changes.
+    temperature: float = 0.0
+    sample_seed: int = 0
 
     def __post_init__(self):
         if self.metrics.arrival == 0.0:

@@ -147,6 +147,10 @@ class SchedulerStats:
     # host KV spill (engine kv_spill=HostSpillPool)
     kv_spilled: int = 0       # evicted lanes whose KV was staged to host
     kv_restored: int = 0      # re-admissions served by a restore (no prefill)
+    # prefix-granular KV sharing (engine prefix_share=True): admissions
+    # that aliased a resident page-aligned prompt prefix instead of
+    # recomputing it (mirrored from the engine's own counter each tick)
+    prefix_hits: int = 0
     # failure domain (resilience=Resilience(...))
     quarantined: int = 0      # lanes held out after a device-step crash
     decode_retries: int = 0   # decode ticks re-run after a transient fault
@@ -1068,6 +1072,9 @@ class ContinuousBatchingScheduler:
                              time.perf_counter() - t0)
         for tmpl in repush:
             self._ready.push(tmpl)
+        hits = getattr(self.engine, "prefix_hits", None)
+        if hits is not None:
+            self.stats.prefix_hits = hits
 
         # 1.5) speculation: while decode runs below, the next ready lanes'
         # prefills are already in flight on spec threads (up to
